@@ -1,0 +1,24 @@
+//! Shared measurement scaffolding for the bench binaries (criterion is not
+//! vendored in this offline environment, so each bench is a plain
+//! `harness = false` binary with a median-of-reps wallclock loop).
+
+use std::time::Instant;
+
+/// Median-of-`reps` wallclock of `f`, in milliseconds, after one warmup.
+pub fn time_ms<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let _ = f(); // warmup (the paper discards the first run too)
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            let _ = f();
+            t.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// Environment knob with default (e.g. `RMPS_BENCH_P=4096`).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Figure 1 — running times of GatherM, AllGatherM,
+//! RFIS, RQuick, Bitonic, RAMS, HykSort, SSort over the n/p sweep on the
+//! four headline instances. Prints the paper-style table (simulated model
+//! time) plus host wallclock per sweep.
+//!
+//! Knobs: RMPS_BENCH_P (default 1024), RMPS_BENCH_MAXLOG (default 12),
+//!        RMPS_BENCH_REPS (default 1).
+
+mod common;
+
+use rmps::config::RunConfig;
+use rmps::experiments::fig1;
+
+fn main() {
+    let p = common::env_usize("RMPS_BENCH_P", 1 << 9);
+    let max_log = common::env_usize("RMPS_BENCH_MAXLOG", 10) as u32;
+    let reps = common::env_usize("RMPS_BENCH_REPS", 1);
+    let base = RunConfig::default().with_p(p);
+
+    let t = std::time::Instant::now();
+    let fig = fig1::run(&base, max_log, reps);
+    let wall = t.elapsed().as_secs_f64();
+    fig.print();
+    println!(
+        "\n[fig1] p={p} max_log={max_log} reps={reps}: {} cells in {wall:.1}s host wallclock",
+        fig.cells.len()
+    );
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figure 4 / Appendix H — max rank error and variance
+//! of the binary k-window median tree vs Dean et al.'s ternary tree, with
+//! the c·n^−γ power-law fits.
+//!
+//! Knobs: RMPS_BENCH_MAXPOW2 (default 18), RMPS_BENCH_REPS (default 400).
+
+mod common;
+
+use rmps::experiments::fig4;
+
+fn main() {
+    let max_pow2 = common::env_usize("RMPS_BENCH_MAXPOW2", 18) as u32;
+    let reps = common::env_usize("RMPS_BENCH_REPS", 400);
+    let t = std::time::Instant::now();
+    let fig = fig4::run(max_pow2, reps, 42);
+    fig.print();
+    println!(
+        "\n[fig4] max n = 2^{max_pow2}, {reps} reps: {:.1}s host wallclock",
+        t.elapsed().as_secs_f64()
+    );
+}

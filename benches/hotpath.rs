@@ -1,0 +1,81 @@
+//! Bench: host-wallclock hot paths of the simulator — the §Perf targets.
+//!
+//! Measures (median of reps) the end-to-end simulation wallclock for the
+//! flagship algorithms at reference sizes, plus the isolated hot kernels
+//! (merge, partition, shuffle). EXPERIMENTS.md §Perf records before/after.
+//!
+//! Knobs: RMPS_BENCH_REPS (default 3).
+
+mod common;
+
+use rmps::algorithms::{run, Algorithm};
+use rmps::config::RunConfig;
+use rmps::elements::{merge_into, multiway_merge, Elem};
+use rmps::input::{generate, Distribution};
+use rmps::partition::{partition, pick_splitters, SplitterTree};
+use rmps::rng::Rng;
+
+fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize) {
+    let cfg = RunConfig::default().with_p(p).with_n_per_pe(m);
+    let input = generate(&cfg, Distribution::Uniform);
+    let ms = common::time_ms(reps, || {
+        let r = run(alg, &cfg, input.clone());
+        assert!(r.crashed.is_none());
+        r.time
+    });
+    let n = (p * m) as f64;
+    println!(
+        "{:>10} p={p:<5} n/p={m:<6} {ms:>9.1} ms host   {:>7.2} Melem/s",
+        alg.name(),
+        n / ms / 1e3
+    );
+}
+
+fn main() {
+    let reps = common::env_usize("RMPS_BENCH_REPS", 3);
+    println!("== end-to-end simulation wallclock (median of {reps}) ==");
+    bench_algo(Algorithm::RQuick, 1 << 10, 1 << 10, reps);
+    bench_algo(Algorithm::Rams, 1 << 9, 1 << 12, reps);
+    bench_algo(Algorithm::Rfis, 1 << 10, 4, reps);
+    bench_algo(Algorithm::Bitonic, 1 << 8, 1 << 10, reps);
+    bench_algo(Algorithm::HykSort, 1 << 9, 1 << 12, reps);
+    bench_algo(Algorithm::Robust, 1 << 10, 1 << 10, reps);
+
+    println!("\n== isolated hot kernels ==");
+    let mut rng = Rng::seeded(1, 1);
+    // two-way merge of 1M elements
+    let mut a: Vec<Elem> = (0..1 << 19).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
+    let mut b: Vec<Elem> = (0..1 << 19).map(|i| Elem::new(rng.next_u64(), 1, i)).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    let mut out = Vec::new();
+    let ms = common::time_ms(reps, || {
+        merge_into(&a, &b, &mut out);
+        out.len()
+    });
+    println!("merge_into 2×512k      {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+
+    // 64-way merge of 1M total
+    let runs: Vec<Vec<Elem>> = (0..64)
+        .map(|r| {
+            let mut v: Vec<Elem> =
+                (0..1 << 14).map(|i| Elem::new(rng.next_u64(), r, i)).collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+    let ms = common::time_ms(reps, || multiway_merge(&refs).len());
+    println!("multiway_merge 64×16k  {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+
+    // SSSS partition of 1M elements over 127 splitters
+    let data: Vec<Elem> = (0..1 << 20).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
+    let mut sample: Vec<Elem> = data.iter().step_by(101).copied().collect();
+    sample.sort_unstable();
+    let spl = pick_splitters(&sample, 127);
+    let tree = SplitterTree::new(&spl);
+    let ms = common::time_ms(reps, || partition(&data, &tree, true).len());
+    println!("partition 1M s=127 TB  {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+    let ms = common::time_ms(reps, || partition(&data, &tree, false).len());
+    println!("partition 1M s=127     {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+}

@@ -1,0 +1,29 @@
+//! Bench: validate Table I empirically — measure per-PE startup counts and
+//! word volumes at p and 4p and compare the growth factors against the
+//! predicted asymptotic rows.
+//!
+//! Knobs: RMPS_BENCH_PSMALL (default 128), RMPS_BENCH_NPP (default 64).
+
+mod common;
+
+use rmps::experiments::table1;
+
+fn main() {
+    let p_small = common::env_usize("RMPS_BENCH_PSMALL", 1 << 7);
+    let npp = common::env_usize("RMPS_BENCH_NPP", 64);
+    let t = std::time::Instant::now();
+    let rows = table1::run_table(npp, p_small, 7);
+    table1::print_rows(&rows);
+
+    println!("\npredicted growth when p ×4 (n/p fixed):");
+    println!("  GatherM/AllGatherM/RFIS msgs : ~×1.2 (log p)");
+    println!("  RQuick/Bitonic msgs          : ~×1.4 (log² p)");
+    println!("  SSort msgs                   : ~×4   (p)");
+    println!("  AllGatherM words             : ~×4   (n)");
+    println!("  RFIS words                   : ~×2   (n/√p)");
+    println!(
+        "\n[table1] p={p_small}→{}: {:.1}s host wallclock",
+        4 * p_small,
+        t.elapsed().as_secs_f64()
+    );
+}

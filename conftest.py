@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `python/` importable so
+`pytest python/tests/` works from the repository root (the Makefile runs
+pytest from inside `python/`; CI-style invocations run it from here)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,39 @@
+//! Input-size sweep (Fig. 1 in miniature): which algorithm wins at each
+//! n/p, demonstrating the paper's headline — four algorithms cover the
+//! entire input-size spectrum.
+//!
+//! ```sh
+//! cargo run --release --example input_size_sweep [p] [max_log]
+//! ```
+
+use rmps::algorithms::selector;
+use rmps::config::RunConfig;
+use rmps::experiments::{fig1, NpPoint};
+use rmps::input::Distribution;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let p: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1 << 8);
+    let max_log: u32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let base = RunConfig::default().with_p(p);
+    let fig = fig1::run(&base, max_log, 1);
+
+    println!("winners per n/p on p = {p} (Uniform):");
+    println!("{:>8} {:>12} {:>14} {:>12}", "n/p", "winner", "time", "selector");
+    for &pt in &fig.points {
+        let w = fig.winner(Distribution::Uniform, pt);
+        let t = fig.cell(Distribution::Uniform, pt, w).time;
+        let choice = selector::choose(pt.n_over_p());
+        let mark = if w.name() == choice
+            || matches!(pt, NpPoint::Sparse(_)) && choice == "GatherM"
+        {
+            "✓"
+        } else {
+            " "
+        };
+        println!("{:>8} {:>12} {:>14.3e} {:>10}{mark}", pt.label(), w.name(), t, choice);
+    }
+    println!("\nselector column = what rmps::algorithms::selector would pick;");
+    println!("✓ = matches the measured winner.");
+}

@@ -1,0 +1,68 @@
+//! Robustness demo (§VII-B in miniature): run every algorithm against the
+//! adversarial instances and print a survival/slowdown matrix — the
+//! qualitative content of Fig. 2 at a glance.
+//!
+//! ```sh
+//! cargo run --release --example robustness
+//! ```
+
+use rmps::algorithms::{run, Algorithm};
+use rmps::config::RunConfig;
+use rmps::input::{generate, Distribution};
+
+fn main() {
+    let mut cfg = RunConfig::default().with_p(1 << 6).with_n_per_pe(1 << 9);
+    cfg.mem_cap_factor = Some(16.0); // tight memory: nonrobust algos crash
+
+    let algos = [
+        Algorithm::RQuick,
+        Algorithm::NtbQuick,
+        Algorithm::Rams,
+        Algorithm::NtbAms,
+        Algorithm::HykSort,
+        Algorithm::SSort,
+        Algorithm::Rfis,
+        Algorithm::Bitonic,
+    ];
+    let instances = [
+        Distribution::Uniform,
+        Distribution::Staggered,
+        Distribution::Mirrored,
+        Distribution::BucketSorted,
+        Distribution::DeterDupl,
+        Distribution::Zero,
+        Distribution::AllToOne,
+    ];
+
+    // baseline: RQuick on Uniform
+    let base = run(Algorithm::RQuick, &cfg, generate(&cfg, Distribution::Uniform)).time;
+
+    println!(
+        "slowdown vs RQuick/Uniform on p={} n/p={} (✗ = crash/OOM, ! = unbalanced)",
+        cfg.p, cfg.n_per_pe
+    );
+    print!("{:>12}", "");
+    for d in &instances {
+        print!("{:>14}", d.name());
+    }
+    println!();
+    for alg in algos {
+        print!("{:>12}", alg.name());
+        for &d in &instances {
+            let r = run(alg, &cfg, generate(&cfg, d));
+            let cell = if r.crashed.is_some() {
+                "✗".to_string()
+            } else if !r.validation.ok() {
+                "✗✗".to_string()
+            } else if !r.validation.balanced {
+                format!("{:.1}!", r.time / base)
+            } else {
+                format!("{:.1}", r.time / base)
+            };
+            print!("{cell:>14}");
+        }
+        println!();
+    }
+    println!("\nreading: the R-prefixed (robust) rows survive every column;");
+    println!("the nonrobust rows crash (✗) or unbalance (!) on the right half.");
+}

@@ -1,0 +1,175 @@
+//! End-to-end driver: space-filling-curve load rebalancing — the paper's
+//! §I motivating application ("many applications perform load (re)balancing
+//! by mapping objects to space filling curves and sorting them").
+//!
+//! A particle simulation runs on the virtual machine: each PE owns a set of
+//! 2-D particles, every step the particles drift, get re-encoded as Morton
+//! (Z-order) keys, and the *whole machine sorts the keys* so every PE ends
+//! up with a contiguous, balanced chunk of the curve. The sort is executed
+//! by the robust selector and, optionally, the PJRT/XLA local-sort backend
+//! (`--xla`), putting the AOT Pallas artifact on the hot path.
+//!
+//! Reports per-step simulated sort time, throughput, and balance — the
+//! headline metric EXPERIMENTS.md records for the end-to-end validation.
+//!
+//! ```sh
+//! cargo run --release --example sfc_rebalance [steps] [--xla]
+//! ```
+
+use rmps::algorithms::{run_with_backend, Algorithm};
+use rmps::config::RunConfig;
+use rmps::elements::Elem;
+use rmps::localsort::{RustSort, SortBackend};
+use rmps::rng::Rng;
+
+/// Interleave the low 16 bits of x and y: the Morton / Z-order key.
+fn morton(x: u16, y: u16) -> u64 {
+    fn spread(v: u16) -> u64 {
+        let mut v = v as u64;
+        v = (v | (v << 16)) & 0x0000_FFFF_0000_FFFF;
+        v = (v | (v << 8)) & 0x00FF_00FF_00FF_00FF;
+        v = (v | (v << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+        v = (v | (v << 2)) & 0x3333_3333_3333_3333;
+        v = (v | (v << 1)) & 0x5555_5555_5555_5555;
+        v
+    }
+    (spread(x) << 1) | spread(y)
+}
+
+#[derive(Clone, Copy)]
+struct Particle {
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.iter().skip(1).find_map(|s| s.parse().ok()).unwrap_or(10);
+    let use_xla = args.iter().any(|a| a == "--xla");
+
+    let p = 1 << 8;
+    let per_pe = 1 << 9;
+    let cfg = RunConfig::default().with_p(p).with_n_per_pe(per_pe);
+    let mut backend: Box<dyn SortBackend> = if use_xla {
+        match rmps::runtime::XlaSort::from_env() {
+            Ok(b) => {
+                println!("local sort backend: PJRT/XLA Pallas bitonic (AOT artifacts)");
+                Box::new(b)
+            }
+            Err(e) => {
+                println!("XLA backend unavailable ({e}); falling back to pdqsort");
+                Box::new(RustSort)
+            }
+        }
+    } else {
+        println!("local sort backend: rust pdqsort (use --xla for the PJRT path)");
+        Box::new(RustSort)
+    };
+
+    // initial particles: a hot cluster near the origin → heavy skew, the
+    // case SFC rebalancing exists for
+    let mut rng = Rng::seeded(7, 0);
+    let mut particles: Vec<Vec<Particle>> = (0..p)
+        .map(|pe| {
+            (0..per_pe)
+                .map(|_| {
+                    let cluster = pe % 7 == 0;
+                    let scale = if cluster { 0.05 } else { 1.0 };
+                    Particle {
+                        x: rng.unit_f64() * scale,
+                        y: rng.unit_f64() * scale,
+                        vx: (rng.unit_f64() - 0.5) * 0.02,
+                        vy: (rng.unit_f64() - 0.5) * 0.02,
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    println!(
+        "SFC rebalancing: {p} PEs × {per_pe} particles, {steps} steps\n{:>5} {:>14} {:>12} {:>10} {:>10}",
+        "step", "sort time", "Melem/unit", "ε before", "ε after"
+    );
+
+    let mut total_time = 0.0;
+    let n_total = (p * per_pe) as f64;
+    for step in 0..steps {
+        // drift
+        for local in particles.iter_mut() {
+            for q in local.iter_mut() {
+                q.x = (q.x + q.vx).rem_euclid(1.0);
+                q.y = (q.y + q.vy).rem_euclid(1.0);
+            }
+        }
+        // encode Morton keys; the element id carries (pe, idx) so we can
+        // permute the actual particles after the key sort
+        // the element id is the index into `flat` (PE loads drift slightly
+        // after each rebalancing, so a running counter, not pe·per_pe+i)
+        let mut flat: Vec<Particle> = Vec::with_capacity(p * per_pe);
+        let input: Vec<Vec<Elem>> = particles
+            .iter()
+            .map(|local| {
+                local
+                    .iter()
+                    .map(|q| {
+                        let id = flat.len() as u64;
+                        flat.push(*q);
+                        let key = morton((q.x * 65535.0) as u16, (q.y * 65535.0) as u16);
+                        Elem::with_id(key, id)
+                    })
+                    .collect()
+            })
+            .collect();
+        let eps_before = imbalance_by_curve(&input, p);
+
+        let report = run_with_backend(Algorithm::Robust, &cfg, input, backend.as_mut());
+        assert!(report.succeeded(), "sort failed at step {step}: {:?}", report.crashed);
+        total_time += report.time;
+
+        // redistribute the particles to match the sorted key order
+        let mut new_particles: Vec<Vec<Particle>> = Vec::with_capacity(p);
+        for pe_out in 0..p {
+            new_particles.push(
+                report.output[pe_out]
+                    .iter()
+                    .map(|e| flat[e.id as usize])
+                    .collect(),
+            );
+        }
+        particles = new_particles;
+        let eps_after = report.validation.imbalance.epsilon;
+        println!(
+            "{step:>5} {:>14.3e} {:>12.2} {:>10.3} {:>10.3}",
+            report.time,
+            n_total / report.time,
+            eps_before,
+            eps_after
+        );
+    }
+    println!(
+        "\ntotal simulated sort time over {steps} steps: {total_time:.3e} model units"
+    );
+    println!("throughput: {:.2} sorted elements per model unit", n_total * steps as f64 / total_time);
+}
+
+/// how unevenly the curve-contiguous chunks would land without sorting:
+/// measure per-PE load if keys were range-partitioned naively
+fn imbalance_by_curve(input: &[Vec<Elem>], p: usize) -> f64 {
+    let mut loads = vec![0usize; p];
+    for local in input {
+        for e in local {
+            let bucket = ((e.key as u128 * p as u128) >> 32) as usize;
+            loads[bucket.min(p - 1)] += 1;
+        }
+    }
+    let avg = loads.iter().sum::<usize>() as f64 / p as f64;
+    let max = *loads.iter().max().unwrap() as f64;
+    if avg > 0.0 {
+        max / avg - 1.0
+    } else {
+        0.0
+    }
+}
+

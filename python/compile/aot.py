@@ -1,0 +1,144 @@
+"""AOT driver: lower the L2 graphs to HLO *text* artifacts for the Rust
+runtime.
+
+HLO text (NOT ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Each artifact is one statically-shaped entry point; the Rust ArtifactStore
+picks the artifact whose padded shape fits the request. ``make artifacts``
+runs this once; Python never runs at sort time.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# (batch, row) sizes for the batched local-sort artifacts. One executable
+# per size; the Rust side pads fragments to the next size up.
+SORT_SIZES = [(64, 64), (64, 256), (32, 1024), (16, 4096)]
+PAIR_SIZES = [(64, 256), (32, 1024)]
+# (batch, row, splitters) for the classifier artifacts; S = 2^h - 1.
+CLASSIFY_SIZES = [(64, 256, 63), (32, 1024, 127)]
+QUICK_SORT_SIZES = [(64, 256)]
+QUICK_PAIR_SIZES = [(64, 256)]
+QUICK_CLASSIFY_SIZES = [(64, 256, 63)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias")
+    ap.add_argument(
+        "--quick", action="store_true", help="emit only the smallest sizes"
+    )
+    ns = ap.parse_args()
+    out_dir = ns.out_dir
+    if ns.out is not None:
+        out_dir = os.path.dirname(ns.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    sort_sizes = QUICK_SORT_SIZES if ns.quick else SORT_SIZES
+    pair_sizes = QUICK_PAIR_SIZES if ns.quick else PAIR_SIZES
+    classify_sizes = QUICK_CLASSIFY_SIZES if ns.quick else CLASSIFY_SIZES
+
+    manifest: dict[str, dict] = {}
+
+    for b, n in sort_sizes:
+        spec = jax.ShapeDtypeStruct((b, n), model.KEY_DTYPE)
+        name = f"sort_i64_{b}x{n}"
+        emit(model.local_sort, (spec,), os.path.join(out_dir, f"{name}.hlo.txt"))
+        manifest[name] = {"kind": "sort", "batch": b, "n": n}
+
+    for b, n in pair_sizes:
+        kspec = jax.ShapeDtypeStruct((b, n), model.KEY_DTYPE)
+        ispec = jax.ShapeDtypeStruct((b, n), model.ID_DTYPE)
+        name = f"sort_pairs_i64_{b}x{n}"
+        emit(
+            model.local_sort_pairs,
+            (kspec, ispec),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        manifest[name] = {"kind": "sort_pairs", "batch": b, "n": n}
+
+    for b, n, s in classify_sizes:
+        xspec = jax.ShapeDtypeStruct((b, n), model.KEY_DTYPE)
+        tspec = jax.ShapeDtypeStruct((s + 1,), model.KEY_DTYPE)
+        name = f"classify_i64_{b}x{n}_s{s}"
+        emit(
+            model.classify_elements,
+            (xspec, tspec),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        manifest[name] = {"kind": "classify", "batch": b, "n": n, "splitters": s}
+
+        ispec = jax.ShapeDtypeStruct((b, n), model.ID_DTYPE)
+        itspec = jax.ShapeDtypeStruct((s + 1,), model.ID_DTYPE)
+        name = f"classify_tb_i64_{b}x{n}_s{s}"
+        emit(
+            model.classify_elements_tb,
+            (xspec, ispec, tspec, itspec),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        manifest[name] = {
+            "kind": "classify_tb",
+            "batch": b,
+            "n": n,
+            "splitters": s,
+        }
+
+    # Canonical single artifact (Makefile dependency + quickstart).
+    b, n = sort_sizes[0]
+    spec = jax.ShapeDtypeStruct((b, n), model.KEY_DTYPE)
+    emit(model.local_sort, (spec,), os.path.join(out_dir, "model.hlo.txt"))
+    manifest["model"] = {"kind": "sort", "batch": b, "n": n}
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # plain-text manifest for the (dependency-light) Rust loader:
+    #   name kind batch n [splitters]
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name kind batch n splitters\n")
+        for name in sorted(manifest):
+            m = manifest[name]
+            f.write(
+                f"{name} {m['kind']} {m['batch']} {m['n']} "
+                f"{m.get('splitters', 0)}\n"
+            )
+    print(f"  wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: batched bitonic sorting network.
+
+The node-local sort hot-spot of every algorithm in the paper (each PE sorts
+its O(n/p) fragment before any communication). Expressed as a data-parallel
+compare-exchange network over a (B, N) tile so the whole batch of PE
+fragments sorts in one fused kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): BlockSpec tiles the batch
+dimension; each (TB, N) tile lives in VMEM and the O(log^2 N) network stages
+are pure element-wise min/max + lane shuffles on the VPU — no MXU needed, no
+HBM traffic between stages. ``interpret=True`` everywhere: the CPU PJRT
+client cannot run Mosaic custom-calls, and correctness is what we validate
+here (real-TPU perf is estimated analytically in DESIGN.md).
+
+N and B are static (one AOT artifact per padded size). Rows are padded with
++inf-equivalent (i64::MAX) by the Rust caller; padding sorts to the tail and
+is dropped after the call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange_rows(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Run the full bitonic network over the last axis of ``x`` (rows).
+
+    Static Python loops — N is a compile-time constant, so the whole network
+    unrolls into O(log^2 N) vectorized min/max stages.
+    """
+    b = x.shape[0]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            nb = n // (2 * j)
+            y = x.reshape(b, nb, 2, j)
+            # direction bit: ascending iff bit `k` of the element index is 0;
+            # constant within a j-block because j <= k/2.
+            asc = ((jnp.arange(nb) * 2 * j) & k) == 0
+            lo = jnp.minimum(y[:, :, 0, :], y[:, :, 1, :])
+            hi = jnp.maximum(y[:, :, 0, :], y[:, :, 1, :])
+            first = jnp.where(asc[None, :, None], lo, hi)
+            second = jnp.where(asc[None, :, None], hi, lo)
+            x = jnp.stack([first, second], axis=2).reshape(b, n)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _compare_exchange_pairs(
+    keys: jnp.ndarray, vals: jnp.ndarray, n: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bitonic network on (key, val) lexicographic order (tie-break by val)."""
+    b = keys.shape[0]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            nb = n // (2 * j)
+            yk = keys.reshape(b, nb, 2, j)
+            yv = vals.reshape(b, nb, 2, j)
+            asc = (((jnp.arange(nb) * 2 * j) & k) == 0)[None, :, None]
+            ak, bk = yk[:, :, 0, :], yk[:, :, 1, :]
+            av, bv = yv[:, :, 0, :], yv[:, :, 1, :]
+            # swap needed (for ascending) iff (ak, av) > (bk, bv)
+            gt = (ak > bk) | ((ak == bk) & (av > bv))
+            swap = jnp.where(asc, gt, ~gt)
+            k0 = jnp.where(swap, bk, ak)
+            k1 = jnp.where(swap, ak, bk)
+            v0 = jnp.where(swap, bv, av)
+            v1 = jnp.where(swap, av, bv)
+            keys = jnp.stack([k0, k1], axis=2).reshape(b, n)
+            vals = jnp.stack([v0, v1], axis=2).reshape(b, n)
+            j //= 2
+        k *= 2
+    return keys, vals
+
+
+def _sort_kernel(x_ref, o_ref, *, n: int):
+    o_ref[...] = _compare_exchange_rows(x_ref[...], n)
+
+
+def _sort_pairs_kernel(k_ref, v_ref, ok_ref, ov_ref, *, n: int):
+    ks, vs = _compare_exchange_pairs(k_ref[...], v_ref[...], n)
+    ok_ref[...] = ks
+    ov_ref[...] = vs
+
+
+def bitonic_sort_batched(
+    x: jnp.ndarray, *, tile_b: int | None = None
+) -> jnp.ndarray:
+    """Sort each row of ``x`` (B, N) ascending via the Pallas network.
+
+    N must be a power of two. The batch is tiled with BlockSpec so each
+    (tile_b, N) block is one grid step (one VMEM tile on real hardware).
+    """
+    b, n = x.shape
+    assert n & (n - 1) == 0, "row length must be a power of two"
+    tb = tile_b or min(b, max(1, 2**18 // max(n, 1)))
+    while b % tb != 0:
+        tb -= 1
+    return pl.pallas_call(
+        functools.partial(_sort_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        grid=(b // tb,),
+        in_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def bitonic_sort_pairs_batched(
+    keys: jnp.ndarray, vals: jnp.ndarray, *, tile_b: int | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort rows of (keys, vals) by (key, val) lexicographic order.
+
+    The val channel carries the paper's tie-breaking origin id, so equal
+    keys still acquire a strict total order (robustness against duplicates).
+    """
+    b, n = keys.shape
+    assert keys.shape == vals.shape
+    assert n & (n - 1) == 0, "row length must be a power of two"
+    tb = tile_b or min(b, max(1, 2**17 // max(n, 1)))
+    while b % tb != 0:
+        tb -= 1
+    return pl.pallas_call(
+        functools.partial(_sort_pairs_kernel, n=n),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, n), keys.dtype),
+            jax.ShapeDtypeStruct((b, n), vals.dtype),
+        ),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(keys, vals)

@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: Super Scalar Sample Sort element classifier.
+
+The partitioning hot-spot of RAMS (and SSort): assign every local element to
+one of S+1 buckets delimited by S sorted splitters, using the branchless
+perfect-binary-tree descent of Sanders & Winkel's Super Scalar Sample Sort
+[26] — log2(S+1) fused select steps over the whole tile, no data-dependent
+branches.
+
+Two variants:
+  * ``classify_batched``       — plain keys (nonrobust / unique-key path).
+  * ``classify_tb_batched``    — tie-breaking descent on (key, id)
+    lexicographic order (App. G): equal keys are split by origin id, which
+    is exactly how RAMS simulates unique keys with no extra communication.
+
+S must be 2^h - 1 (perfect tree). The splitter tree is laid out in
+breadth-first order tree[1..S]; see ``build_tree`` .
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def build_tree(sorted_splitters: jnp.ndarray) -> jnp.ndarray:
+    """Breadth-first perfect-tree layout, 1-based: tree[0] unused.
+
+    Equivalent to the eytzinger layout of the sorted splitter array.
+    """
+    s = sorted_splitters.shape[-1]
+    assert (s + 1) & s == 0, "need 2^h - 1 splitters"
+    tree = [None] * (s + 1)
+
+    def fill(t: int, lo: int, hi: int):
+        if t > s:
+            return
+        mid = (lo + hi) // 2
+        tree[t] = sorted_splitters[mid]
+        fill(2 * t, lo, mid - 1)
+        fill(2 * t + 1, mid + 1, hi)
+
+    fill(1, 0, s - 1)
+    tree[0] = tree[1]
+    return jnp.stack(tree)
+
+
+def _descend(x, tree, s):
+    """Branchless descent: after log2(s+1) steps t-(s+1) = #splitters < x."""
+    h = (s + 1).bit_length() - 1
+    t = jnp.ones(x.shape, dtype=jnp.int32)
+    for _ in range(h):
+        node = jnp.take(tree, t, axis=0)
+        t = 2 * t + (node < x).astype(jnp.int32)
+    return t - (s + 1)
+
+
+def _descend_tb(k, i, ktree, itree, s):
+    """Tie-breaking descent on strict lexicographic (key, id) order."""
+    h = (s + 1).bit_length() - 1
+    t = jnp.ones(k.shape, dtype=jnp.int32)
+    for _ in range(h):
+        nk = jnp.take(ktree, t, axis=0)
+        ni = jnp.take(itree, t, axis=0)
+        less = (nk < k) | ((nk == k) & (ni < i))
+        t = 2 * t + less.astype(jnp.int32)
+    return t - (s + 1)
+
+
+def _classify_kernel(x_ref, tree_ref, o_ref, *, s: int):
+    o_ref[...] = _descend(x_ref[...], tree_ref[...], s)
+
+
+def _classify_tb_kernel(k_ref, i_ref, kt_ref, it_ref, o_ref, *, s: int):
+    o_ref[...] = _descend_tb(
+        k_ref[...], i_ref[...], kt_ref[...], it_ref[...], s
+    )
+
+
+def classify_batched(
+    x: jnp.ndarray, tree: jnp.ndarray, *, tile_b: int | None = None
+) -> jnp.ndarray:
+    """Bucket index (0..S) for each element of ``x`` (B, N).
+
+    ``tree`` is the (S+1,) breadth-first splitter tree from ``build_tree``.
+    Bucket = number of splitters strictly less than the key, matching
+    ``ref.classify_ref`` (searchsorted side='left').
+    """
+    b, n = x.shape
+    s = tree.shape[0] - 1
+    tb = tile_b or min(b, max(1, 2**16 // max(n, 1)))
+    while b % tb != 0:
+        tb -= 1
+    return pl.pallas_call(
+        functools.partial(_classify_kernel, s=s),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((s + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x, tree)
+
+
+def classify_tb_batched(
+    keys: jnp.ndarray,
+    ids: jnp.ndarray,
+    ktree: jnp.ndarray,
+    itree: jnp.ndarray,
+    *,
+    tile_b: int | None = None,
+) -> jnp.ndarray:
+    """Tie-breaking bucket index on (key, id) lexicographic order."""
+    b, n = keys.shape
+    s = ktree.shape[0] - 1
+    tb = tile_b or min(b, max(1, 2**15 // max(n, 1)))
+    while b % tb != 0:
+        tb -= 1
+    return pl.pallas_call(
+        functools.partial(_classify_tb_kernel, s=s),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((s + 1,), lambda i: (0,)),
+            pl.BlockSpec((s + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        interpret=True,
+    )(keys, ids, ktree, itree)

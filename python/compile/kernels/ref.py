@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle exactly (integer keys) under pytest + hypothesis.
+
+Key encoding
+------------
+Sort keys travel through XLA as ``int32``/``int64``. The Rust side holds
+``u64`` keys; order-preserving conversion u64 <-> i64 is ``key ^ (1 << 63)``
+(same trick as u32 <-> i32). The kernels themselves are ordering-agnostic:
+they sort signed integers ascending.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sort_batched_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort each row of a (B, N) array ascending. Oracle for bitonic kernel."""
+    return jnp.sort(x, axis=-1)
+
+
+def sort_pairs_batched_ref(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Sort rows by (key, val) lexicographically, permuting vals alongside.
+
+    This mirrors the paper's tie-breaking quadruple ordering: compare
+    (key, id) lexicographically, where id is a unique origin identifier.
+    """
+    def row(k, v):
+        order = jnp.lexsort((v, k))
+        return k[order], v[order]
+
+    ks, vs = [], []
+    for b in range(keys.shape[0]):
+        k, v = row(keys[b], vals[b])
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+def classify_ref(x: jnp.ndarray, splitters: jnp.ndarray) -> jnp.ndarray:
+    """SSSS classifier oracle.
+
+    For each element of ``x`` (shape (B, N)) return the bucket index in
+    ``0..S`` given ``S`` sorted splitters (shape (S,)): the number of
+    splitters <= would put equal keys right of the splitter; we use
+    ``side='left'`` so bucket b holds elements in [splitters[b-1],
+    splitters[b]) — equal keys go to the splitter's own bucket.
+    """
+    flat = jnp.searchsorted(splitters, x.reshape(-1), side="left")
+    return flat.reshape(x.shape).astype(jnp.int32)
+
+
+def classify_tb_ref(
+    keys: jnp.ndarray,
+    ids: jnp.ndarray,
+    skeys: jnp.ndarray,
+    sids: jnp.ndarray,
+) -> jnp.ndarray:
+    """Tie-breaking classifier oracle: compare (key, id) lexicographically.
+
+    Elements are (keys, ids) of shape (B, N); splitters are (skeys, sids) of
+    shape (S,), sorted lexicographically. Returns the bucket index = number
+    of splitters strictly less than the element in (key, id) order. On
+    unique keys this equals ``classify_ref`` with side='left' splitting.
+    """
+    k = keys[..., None]
+    i = ids[..., None]
+    less = (skeys[None, None, :] < k) | (
+        (skeys[None, None, :] == k) & (sids[None, None, :] < i)
+    )
+    return less.sum(axis=-1).astype(jnp.int32)
+
+
+def median_window_merge_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for one internal node of the binary median-reduction tree.
+
+    ``a`` and ``b`` are sorted windows of length k (k even). Merge the 2k
+    elements and return the centre k-window merged[k/2 : 3k/2] — per §III-B
+    the node keeps the k elements closest to the merged median.
+    """
+    k = a.shape[-1]
+    merged = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+    return merged[..., k // 2 : k // 2 + k]

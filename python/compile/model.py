@@ -1,0 +1,77 @@
+"""L2: the node-local compute graph of the sorting stack, in JAX.
+
+The paper's algorithms all share the same node-local phases: sort the local
+fragment, (for RAMS/SSort) classify elements against a splitter tree, and
+(for RQuick) extract the k-window around the local median that feeds the
+single-reduction median approximation of §III-B. This module composes the
+L1 Pallas kernels into the exported entry points that `aot.py` lowers to
+HLO text and the Rust runtime executes via PJRT.
+
+Everything here is build-time only — Python never runs on the sort path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic, classify
+
+# i64 keys: the Rust side holds u64; u64 <-> i64 order-preserving mapping is
+# key ^ (1 << 63), applied on the Rust side. Kernels sort i64 ascending.
+KEY_DTYPE = jnp.int64
+ID_DTYPE = jnp.int64
+
+
+def local_sort(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Batched local sort: each row is one PE's (padded) fragment."""
+    return (bitonic.bitonic_sort_batched(x),)
+
+
+def local_sort_pairs(
+    keys: jnp.ndarray, ids: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched local sort on (key, origin-id) lexicographic order.
+
+    The id channel is the paper's implicit tie-breaker: equal keys acquire a
+    strict total order without communicating any extra information.
+    """
+    ks, vs = bitonic.bitonic_sort_pairs_batched(keys, ids)
+    return (ks, vs)
+
+
+def classify_elements(
+    x: jnp.ndarray, tree: jnp.ndarray
+) -> tuple[jnp.ndarray]:
+    """SSSS bucket index for every element; tree is the eytzinger layout."""
+    return (classify.classify_batched(x, tree),)
+
+
+def classify_elements_tb(
+    keys: jnp.ndarray,
+    ids: jnp.ndarray,
+    ktree: jnp.ndarray,
+    itree: jnp.ndarray,
+) -> tuple[jnp.ndarray]:
+    """Tie-breaking SSSS bucket index on (key, id) lexicographic order."""
+    return (classify.classify_tb_batched(keys, ids, ktree, itree),)
+
+
+def sort_and_median_window(x: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused RQuick local phase: sort rows, then extract the k-window around
+    each row's median (§III-B leaf contribution).
+
+    Padding (i64::MAX) sorts to the tail; callers with short rows pass the
+    true length via the `valid` trick on the Rust side (window re-centred
+    there). Here rows are assumed fully valid — the fused artifact is used
+    for the common dense case.
+    """
+    s = bitonic.bitonic_sort_batched(x)
+    n = s.shape[-1]
+    lo = n // 2 - k // 2
+    return (s, jax.lax.dynamic_slice_in_dim(s, lo, k, axis=-1))
+
+
+def build_splitter_tree(sorted_splitters: jnp.ndarray) -> jnp.ndarray:
+    """Host-side helper re-exported for tests and the AOT driver."""
+    return classify.build_tree(sorted_splitters)

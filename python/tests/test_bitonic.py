@@ -1,0 +1,124 @@
+"""Pallas bitonic kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitonic, ref
+
+I64_MIN = -(2**63)
+I64_MAX = 2**63 - 1
+
+
+def rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+@pytest.mark.parametrize("b,n", [(1, 2), (1, 64), (4, 16), (8, 128), (3, 256), (16, 512)])
+def test_sort_matches_ref_uniform(b, n):
+    x = jnp.asarray(
+        rng(b * 1000 + n).integers(I64_MIN, I64_MAX, size=(b, n), dtype=np.int64)
+    )
+    got = bitonic.bitonic_sort_batched(x)
+    np.testing.assert_array_equal(got, ref.sort_batched_ref(x))
+
+
+@pytest.mark.parametrize("n", [4, 32, 128])
+def test_sort_all_equal(n):
+    x = jnp.full((3, n), 42, dtype=jnp.int64)
+    got = bitonic.bitonic_sort_batched(x)
+    np.testing.assert_array_equal(got, x)
+
+
+@pytest.mark.parametrize("n", [8, 64])
+def test_sort_reverse_and_presorted(n):
+    fwd = jnp.arange(n, dtype=jnp.int64)[None, :]
+    rev = fwd[:, ::-1]
+    np.testing.assert_array_equal(bitonic.bitonic_sort_batched(rev), fwd)
+    np.testing.assert_array_equal(bitonic.bitonic_sort_batched(fwd), fwd)
+
+
+def test_sort_with_padding_sentinel():
+    # rows padded with i64::MAX: padding must sort to the tail untouched.
+    x = jnp.asarray(
+        [[5, I64_MAX, 1, I64_MAX], [I64_MAX, I64_MAX, I64_MAX, I64_MAX]],
+        dtype=jnp.int64,
+    )
+    got = bitonic.bitonic_sort_batched(x)
+    np.testing.assert_array_equal(
+        got,
+        jnp.asarray(
+            [[1, 5, I64_MAX, I64_MAX], [I64_MAX] * 4],
+            dtype=jnp.int64,
+        ),
+    )
+
+
+def test_sort_negative_keys():
+    x = jnp.asarray([[0, -1, I64_MIN, I64_MAX, 7, -7, 3, 3]], dtype=jnp.int64)
+    np.testing.assert_array_equal(
+        bitonic.bitonic_sort_batched(x), ref.sort_batched_ref(x)
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    logn=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+    dup=st.sampled_from([None, 1, 4]),
+)
+def test_sort_hypothesis_shapes_and_duplicates(b, logn, seed, dup):
+    n = 2**logn
+    g = rng(seed)
+    if dup is None:
+        x = g.integers(I64_MIN, I64_MAX, size=(b, n), dtype=np.int64)
+    else:
+        x = g.integers(0, dup + 1, size=(b, n)).astype(np.int64)
+    x = jnp.asarray(x)
+    got = bitonic.bitonic_sort_batched(x)
+    np.testing.assert_array_equal(got, ref.sort_batched_ref(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    logn=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+    nkeys=st.sampled_from([1, 2, 8]),
+)
+def test_sort_pairs_hypothesis_lexicographic(b, logn, seed, nkeys):
+    """Heavy duplicates: (key, id) order must be strict and match lexsort."""
+    n = 2**logn
+    g = rng(seed)
+    keys = jnp.asarray(g.integers(0, nkeys, size=(b, n)).astype(np.int64))
+    ids = jnp.asarray(g.permutation(b * n).reshape(b, n).astype(np.int64))
+    gk, gv = bitonic.bitonic_sort_pairs_batched(keys, ids)
+    ek, ev = ref.sort_pairs_batched_ref(keys, ids)
+    np.testing.assert_array_equal(gk, ek)
+    np.testing.assert_array_equal(gv, ev)
+
+
+def test_sort_pairs_unique_ids_total_order():
+    keys = jnp.zeros((2, 16), dtype=jnp.int64)
+    ids = jnp.asarray(
+        np.stack([np.arange(16)[::-1], np.arange(16)]), dtype=jnp.int64
+    )
+    _, gv = bitonic.bitonic_sort_pairs_batched(keys, ids)
+    np.testing.assert_array_equal(gv, jnp.stack([jnp.arange(16)] * 2))
+
+
+@pytest.mark.parametrize("tile_b", [1, 2, 4])
+def test_sort_tile_b_invariance(tile_b):
+    x = jnp.asarray(
+        rng(7).integers(I64_MIN, I64_MAX, size=(4, 64), dtype=np.int64)
+    )
+    got = bitonic.bitonic_sort_batched(x, tile_b=tile_b)
+    np.testing.assert_array_equal(got, ref.sort_batched_ref(x))

@@ -1,0 +1,143 @@
+"""SSSS classifier kernel vs oracle, incl. the tie-breaking descent."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import classify, ref
+
+I64_MAX = 2**63 - 1
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_splitters(g, s, lo=-1000, hi=1000):
+    vals = np.unique(g.integers(lo, hi, size=4 * s + 16, dtype=np.int64))
+    while len(vals) < s:  # pathological collision case: widen draw
+        vals = np.unique(
+            np.concatenate([vals, g.integers(lo, hi, size=4 * s + 16, dtype=np.int64)])
+        )
+    idx = g.choice(len(vals), size=s, replace=False)
+    return jnp.asarray(np.sort(vals[idx]))
+
+
+def test_build_tree_is_eytzinger():
+    s = jnp.asarray([10, 20, 30, 40, 50, 60, 70], dtype=jnp.int64)
+    tree = classify.build_tree(s)
+    # BFS of the balanced BST over [10..70]
+    np.testing.assert_array_equal(
+        np.asarray(tree)[1:], np.asarray([40, 20, 60, 10, 30, 50, 70])
+    )
+
+
+@pytest.mark.parametrize("b,n,s", [(1, 8, 1), (2, 64, 7), (4, 128, 31), (2, 256, 63)])
+def test_classify_matches_ref(b, n, s):
+    g = rng(b * n + s)
+    spl = make_splitters(g, s)
+    x = jnp.asarray(g.integers(-1200, 1200, size=(b, n), dtype=np.int64))
+    tree = classify.build_tree(spl)
+    got = classify.classify_batched(x, tree)
+    np.testing.assert_array_equal(got, ref.classify_ref(x, spl))
+
+
+def test_classify_exact_splitter_keys_go_left():
+    # side='left' semantics: an element equal to splitter b lands in bucket b.
+    spl = jnp.asarray([10, 20, 30], dtype=jnp.int64)
+    tree = classify.build_tree(spl)
+    x = jnp.asarray([[5, 10, 15, 20, 25, 30, 35, 10]], dtype=jnp.int64)
+    got = classify.classify_batched(x, tree)
+    np.testing.assert_array_equal(got, [[0, 0, 1, 1, 2, 2, 3, 0]])
+
+
+def test_classify_extremes():
+    spl = jnp.asarray([0], dtype=jnp.int64)
+    tree = classify.build_tree(spl)
+    x = jnp.asarray([[-(2**62), 2**62, 0, -1, 1]], dtype=jnp.int64)
+    np.testing.assert_array_equal(
+        classify.classify_batched(x, tree), [[0, 1, 0, 0, 1]]
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    logn=st.integers(0, 7),
+    h=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_classify_hypothesis(b, logn, h, seed):
+    n, s = 2**logn, 2**h - 1
+    g = rng(seed)
+    spl = make_splitters(g, s, -(2**40), 2**40)
+    x = jnp.asarray(
+        g.integers(-(2**41), 2**41, size=(b, n), dtype=np.int64)
+    )
+    tree = classify.build_tree(spl)
+    got = classify.classify_batched(x, tree)
+    np.testing.assert_array_equal(got, ref.classify_ref(x, spl))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    logn=st.integers(1, 6),
+    h=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+    nkeys=st.sampled_from([1, 2, 5]),
+)
+def test_classify_tb_hypothesis_heavy_duplicates(b, logn, h, seed, nkeys):
+    """The RAMS robustness core: equal keys split by origin id."""
+    n, s = 2**logn, 2**h - 1
+    g = rng(seed)
+    keys = jnp.asarray(g.integers(0, nkeys, size=(b, n)).astype(np.int64))
+    ids = jnp.asarray(g.permutation(b * n).reshape(b, n).astype(np.int64))
+    # splitters: (key, id) pairs sorted lexicographically, unique ids
+    skeys = np.sort(g.integers(0, nkeys, size=s)).astype(np.int64)
+    sids = np.sort(g.choice(100_000, size=s, replace=False)).astype(np.int64)
+    order = np.lexsort((sids, skeys))
+    skeys, sids = jnp.asarray(skeys[order]), jnp.asarray(sids[order])
+    ktree = classify.build_tree(skeys)
+    itree = classify.build_tree(sids)
+    got = classify.classify_tb_batched(keys, ids, ktree, itree)
+    np.testing.assert_array_equal(got, ref.classify_tb_ref(keys, ids, skeys, sids))
+
+
+def test_classify_tb_all_equal_keys_balances():
+    """All keys identical: buckets determined purely by id — a perfect split.
+
+    This is exactly why RAMS survives the Zero/DeterDupl instances.
+    """
+    b, n, s = 1, 64, 3
+    keys = jnp.zeros((b, n), dtype=jnp.int64)
+    ids = jnp.asarray(np.arange(n)[None, :], dtype=jnp.int64)
+    skeys = jnp.zeros(s, dtype=jnp.int64)
+    sids = jnp.asarray([15, 31, 47], dtype=jnp.int64)
+    got = classify.classify_tb_batched(
+        keys, ids, classify.build_tree(skeys), classify.build_tree(sids)
+    )
+    counts = np.bincount(np.asarray(got).ravel(), minlength=4)
+    assert counts.tolist() == [16, 16, 16, 16]
+
+
+def test_classify_tb_matches_plain_on_unique_keys():
+    g = rng(3)
+    keys = jnp.asarray(
+        g.permutation(256)[:128].reshape(2, 64).astype(np.int64)
+    )
+    ids = jnp.asarray(np.arange(128).reshape(2, 64) + 1000, dtype=jnp.int64)
+    spl = jnp.asarray([300, 400, 500], dtype=jnp.int64)  # disjoint from keys
+    sids = jnp.asarray([0, 1, 2], dtype=jnp.int64)
+    plain = classify.classify_batched(keys, classify.build_tree(spl))
+    tb = classify.classify_tb_batched(
+        keys, ids, classify.build_tree(spl), classify.build_tree(sids)
+    )
+    np.testing.assert_array_equal(plain, tb)

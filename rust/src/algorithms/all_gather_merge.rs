@@ -1,0 +1,53 @@
+//! AllGatherM: hypercube all-gather-merge (§II) — every PE ends up with
+//! the complete sorted input. O(β·n + α·log p): the β·n term (every PE
+//! receives *everything*) is why the paper finds it "not competitive for
+//! any input size" — it exists as a baseline and as RFIS' row/column
+//! primitive.
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::{sort_all, SortBackend};
+use crate::sim::{all_gather_merge, Cube, Machine};
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) {
+    sort_all(mach, data, backend);
+    let pes = Cube::whole(cfg.p).pe_vec();
+    let runs = all_gather_merge(mach, &pes, data);
+    for (pe, r) in runs.into_iter().enumerate() {
+        data[pe] = r.merged();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn replicates_sorted_input_everywhere() {
+        let cfg = RunConfig::default().with_p(8).with_n_per_pe(4);
+        let input = generate(&cfg, Distribution::Uniform);
+        let report = run(Algorithm::AllGatherM, &cfg, input);
+        assert!(report.validation.ok(), "{:?}", report.validation);
+    }
+
+    #[test]
+    fn slower_than_gatherm_on_sparse_inputs() {
+        // the paper: AllGatherM sorts even the sparsest input twice as slow
+        // as RFIS, and GatherM beats it there too
+        let cfg = RunConfig::default().with_p(64).with_sparsity(3);
+        let g = run(Algorithm::GatherM, &cfg, generate(&cfg, Distribution::Uniform));
+        let ag = run(Algorithm::AllGatherM, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(ag.validation.ok());
+        // AllGatherM replicates everything everywhere: strictly more data
+        // on the wire and never faster than a plain gather
+        assert!(ag.stats.words > 2 * g.stats.words, "AllGatherM {} vs GatherM {} words", ag.stats.words, g.stats.words);
+        assert!(ag.time >= g.time, "AllGatherM {} vs GatherM {}", ag.time, g.time);
+    }
+}

@@ -1,0 +1,136 @@
+//! Bitonic sort on a hypercube (Batcher [11], Johnsson [12]): local sort,
+//! then log p merge phases of up to log p compare-split rounds — every
+//! element crosses the network O(log²p) times, which is exactly the
+//! `β·(n/p)·log²p` Table I row that makes it uncompetitive for large
+//! inputs. Deterministic (the paper notes its negligible run-to-run
+//! fluctuation) and oblivious to duplicates, but it *requires dense,
+//! perfectly balanced input* — like the paper's implementation it fails on
+//! sparse instances.
+
+use crate::config::RunConfig;
+use crate::elements::{Elem};
+use crate::localsort::{sort_all, SortBackend};
+use crate::sim::Machine;
+
+/// Compare-split: keep the lower/upper `keep` elements of two sorted runs.
+fn compare_split(mine: &[Elem], theirs: &[Elem], keep_low: bool) -> Vec<Elem> {
+    let keep = mine.len();
+    let mut out = Vec::with_capacity(keep);
+    if keep_low {
+        let (mut i, mut j) = (0, 0);
+        while out.len() < keep {
+            if j >= theirs.len() || (i < mine.len() && mine[i] <= theirs[j]) {
+                out.push(mine[i]);
+                i += 1;
+            } else {
+                out.push(theirs[j]);
+                j += 1;
+            }
+        }
+    } else {
+        let (mut i, mut j) = (mine.len() as i64 - 1, theirs.len() as i64 - 1);
+        while out.len() < keep {
+            if j < 0 || (i >= 0 && mine[i as usize] >= theirs[j as usize]) {
+                out.push(mine[i as usize]);
+                i -= 1;
+            } else {
+                out.push(theirs[j as usize]);
+                j -= 1;
+            }
+        }
+        out.reverse();
+    }
+    out
+}
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) {
+    let p = cfg.p;
+    assert!(p.is_power_of_two());
+    let d = p.trailing_zeros();
+    let m = data[0].len();
+    if data.iter().any(|v| v.len() != m) || (m == 0 && cfg.n_total() > 0) {
+        // the paper: "Bitonic … fails to sort sparse inputs"
+        mach.fail(0, "bitonic requires dense balanced input");
+        return;
+    }
+    sort_all(mach, data, backend);
+
+    for i in 0..d {
+        for j in (0..=i).rev() {
+            let bit = 1usize << j;
+            // exchange whole fragments, keep the proper half
+            for pe in 0..p {
+                let partner = pe ^ bit;
+                if pe < partner {
+                    mach.xchg(pe, partner, data[pe].len(), data[partner].len());
+                }
+            }
+            let snapshot: Vec<Vec<Elem>> = data.clone();
+            for pe in 0..p {
+                let partner = pe ^ bit;
+                let ascending = pe & (1 << (i + 1)) == 0;
+                let keep_low = (pe & bit == 0) == ascending;
+                data[pe] = compare_split(&snapshot[pe], &snapshot[partner], keep_low);
+                mach.work_linear(pe, 2 * m);
+                mach.note_mem(pe, 2 * m, "bitonic compare-split");
+            }
+        }
+    }
+    // final intra-PE order is ascending per PE already; ensure ascending
+    // globally: with the (i+1)-bit direction rule the top phase (i = d-1)
+    // uses bit d → all ascending. Runs stay sorted by construction.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn compare_split_low_high() {
+        let a: Vec<Elem> = [1u64, 4, 7].iter().enumerate().map(|(i, &k)| Elem::with_id(k, i as u64)).collect();
+        let b: Vec<Elem> = [2u64, 3, 9].iter().enumerate().map(|(i, &k)| Elem::with_id(k, 10 + i as u64)).collect();
+        let lo = compare_split(&a, &b, true);
+        let keys: Vec<u64> = lo.iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![1, 2, 3]);
+        let hi = compare_split(&a, &b, false);
+        let keys: Vec<u64> = hi.iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn bitonic_sorts_all_dense_distributions() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(16);
+        for d in Distribution::ALL {
+            let report = run(Algorithm::Bitonic, &cfg, generate(&cfg, d));
+            assert!(report.succeeded(), "{d:?}: {:?}", report.validation);
+            assert_eq!(report.validation.imbalance.epsilon, 0.0, "{d:?} perfectly balanced");
+        }
+    }
+
+    #[test]
+    fn bitonic_fails_on_sparse() {
+        let cfg = RunConfig::default().with_p(16).with_sparsity(3);
+        let report = run(Algorithm::Bitonic, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.crashed.is_some(), "bitonic must refuse sparse input");
+    }
+
+    #[test]
+    fn bitonic_volume_scales_with_log2p_squared() {
+        // words moved ≈ p·m·(log²p+log p)/2 — check the growth trend
+        let mut words = Vec::new();
+        for logp in [3u32, 4, 5] {
+            let cfg = RunConfig::default().with_p(1 << logp).with_n_per_pe(16);
+            let report = run(Algorithm::Bitonic, &cfg, generate(&cfg, Distribution::Uniform));
+            assert!(report.succeeded());
+            words.push(report.stats.words as f64 / cfg.n_total() as f64);
+        }
+        assert!(words[1] > words[0] && words[2] > words[1], "{words:?}");
+    }
+}

@@ -1,0 +1,61 @@
+//! GatherM: sort-while-gathering onto a single PE via a binomial merge
+//! tree. The paper's winner for very sparse inputs (n/p ≤ 3⁻³): only the
+//! PEs that actually hold data pay startups, and the root receives log p
+//! pre-merged runs instead of n messages. Does *not* satisfy the balance
+//! contract — the output lives entirely on PE 0 (§VII (1)).
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::{sort_all, SortBackend};
+use crate::sim::{gather_merge, Cube, Machine};
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) {
+    sort_all(mach, data, backend);
+    let pes = Cube::whole(cfg.p).pe_vec();
+    let merged = gather_merge(mach, &pes, data);
+    for v in data.iter_mut() {
+        v.clear();
+    }
+    data[0] = merged;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn gathers_everything_sorted_on_root() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(8);
+        let input = generate(&cfg, Distribution::Uniform);
+        let report = run(Algorithm::GatherM, &cfg, input);
+        assert!(report.validation.ok(), "{:?}", report.validation);
+        assert!(report.crashed.is_none());
+    }
+
+    #[test]
+    fn sparse_input_is_cheap() {
+        // one element every 9 PEs: only the holders + merge tree pay
+        let cfg = RunConfig::default().with_p(64).with_sparsity(9);
+        let input = generate(&cfg, Distribution::Uniform);
+        let report = run(Algorithm::GatherM, &cfg, input);
+        assert!(report.validation.ok());
+        // log p rounds of the binomial tree bound the makespan
+        let alpha = cfg.cost.alpha;
+        assert!(report.time < 10.0 * alpha, "time {}", report.time);
+    }
+
+    #[test]
+    fn handles_duplicates() {
+        let cfg = RunConfig::default().with_p(8).with_n_per_pe(16);
+        let input = generate(&cfg, Distribution::Zero);
+        let report = run(Algorithm::GatherM, &cfg, input);
+        assert!(report.validation.ok());
+    }
+}

@@ -1,0 +1,151 @@
+//! Single-level multiway mergesort with *exact* splitters ([4], [8], [10]
+//! — the Table I "Multiway merges." row: latency ≥ p, volume ≥ n/p, and
+//! perfect partitioning).
+//!
+//! Exact global rank-r splitters are found by distributed binary search on
+//! the key domain: every boundary keeps a [lo, hi) key interval, and each
+//! round a vector all-reduce of p−1 local counts halves all intervals at
+//! once. This pays Θ(β·p·log K) on the wire — the reason the paper needs
+//! `n = Ω(p² log p)` before this family is competitive — but delivers a
+//! *perfectly* balanced output (ε = 0 up to rounding).
+//!
+//! Ties are broken on the full `(key, id)` order, so the exact selection
+//! is robust against duplicates by construction.
+
+use crate::config::RunConfig;
+use crate::elements::{multiway_merge, Elem};
+use crate::input::KEY_RANGE;
+use crate::localsort::{sort_all, SortBackend};
+use crate::sim::{allreduce_vec_u64, alltoallv, Cube, Machine};
+
+/// 128-bit (key, id) point for the binary search domain: key·2^64 + id.
+#[inline]
+fn point(e: &Elem) -> u128 {
+    ((e.key as u128) << 64) | e.id as u128
+}
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) {
+    let p = cfg.p;
+    assert!(p.is_power_of_two());
+    let pes = Cube::whole(p).pe_vec();
+    let n: usize = data.iter().map(Vec::len).sum();
+    if n == 0 {
+        return;
+    }
+
+    sort_all(mach, data, backend);
+
+    // --- exact splitter selection: p−1 simultaneous binary searches ----
+    // boundary b must receive global rank r_b = ⌈(b+1)·n/p⌉ as its
+    // exclusive upper rank; search over the (key, id) domain
+    let nb = p - 1;
+    let target: Vec<usize> = (0..nb).map(|b| ((b + 1) * n) / p).collect();
+    let mut lo = vec![0u128; nb];
+    let mut hi = vec![(KEY_RANGE as u128) << 64; nb];
+    // log2 of the search domain: 32-bit keys ⊕ 64-bit ids
+    let rounds = 96;
+    let mut counts: Vec<Vec<u64>> = vec![vec![0; nb]; p];
+    for _ in 0..rounds {
+        if lo.iter().zip(&hi).all(|(l, h)| l + 1 >= *h) {
+            break;
+        }
+        let mid: Vec<u128> = lo.iter().zip(&hi).map(|(l, h)| (l + h) / 2).collect();
+        // local counts below each mid (binary searches on sorted runs)
+        for (pe, local) in data.iter().enumerate() {
+            for (b, &m) in mid.iter().enumerate() {
+                counts[pe][b] = local.partition_point(|e| point(e) < m) as u64;
+            }
+            mach.work(pe, cfg.cost.cmp * nb as f64 * (local.len().max(2) as f64).log2());
+        }
+        allreduce_vec_u64(mach, &pes, &mut counts, |a, b| a + b);
+        let total = &counts[0];
+        for b in 0..nb {
+            if (total[b] as usize) < target[b] {
+                lo[b] = mid[b];
+            } else {
+                hi[b] = mid[b];
+            }
+        }
+        // reset counts for the next round
+        for c in counts.iter_mut() {
+            for v in c.iter_mut() {
+                *v = 0;
+            }
+        }
+    }
+    let splitters: Vec<u128> = hi;
+
+    // --- perfect partition + direct delivery ---------------------------
+    let mut send: Vec<Vec<Vec<Elem>>> = Vec::with_capacity(p);
+    for pe in 0..p {
+        let local = std::mem::take(&mut data[pe]);
+        mach.work_classify(pe, local.len(), p);
+        let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); p];
+        for e in local {
+            let b = splitters.partition_point(|&s| s <= point(&e));
+            buckets[b].push(e);
+        }
+        send.push(buckets);
+    }
+    let recv = alltoallv(mach, &pes, send);
+    for (r, runs) in recv.into_iter().enumerate() {
+        let pe = pes[r];
+        let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+        let merged = multiway_merge(&refs);
+        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
+        mach.note_mem(pe, merged.len(), "multiway mergesort receive");
+        data[pe] = merged;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn mways_sorts_with_perfect_balance() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(256);
+        for d in [Distribution::Uniform, Distribution::Staggered] {
+            let report = run(Algorithm::Mways, &cfg, generate(&cfg, d));
+            assert!(report.succeeded(), "{d:?}: {:?}", report.validation);
+            // exact splitters: at most ⌈n/p⌉ per PE
+            assert!(
+                report.validation.imbalance.max_load <= 256,
+                "{d:?}: {:?}",
+                report.validation.imbalance
+            );
+        }
+    }
+
+    #[test]
+    fn mways_perfectly_balances_duplicates() {
+        // exact selection on (key, id): even all-equal keys split perfectly
+        let cfg = RunConfig::default().with_p(8).with_n_per_pe(64);
+        let report = run(Algorithm::Mways, &cfg, generate(&cfg, Distribution::Zero));
+        assert!(report.succeeded(), "{:?}", report.validation);
+        assert_eq!(report.validation.imbalance.max_load, 64);
+        assert_eq!(report.validation.imbalance.min_load, 64);
+    }
+
+    #[test]
+    fn mways_pays_beta_p_for_selection() {
+        // the Table I ≥p row: words moved for splitter selection grow ~p·log K
+        let words_at = |p: usize| {
+            let cfg = RunConfig::default().with_p(p).with_n_per_pe(32);
+            let r = run(Algorithm::Mways, &cfg, generate(&cfg, Distribution::Uniform));
+            assert!(r.succeeded());
+            r.stats.words as f64 / (p as f64)
+        };
+        let small = words_at(16);
+        let large = words_at(64);
+        // per-PE words grow ~linearly in p (vector allreduce of p−1 counts)
+        assert!(large > 2.5 * small, "per-PE words: {small} → {large}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Minisort (Siebert & Wolf [2]): sorting with minimal data — exactly one
+//! element per PE (`n = p`), the MPI_Comm_Split use case of §I. Table I
+//! row: O(log²p) latency, O(log²p) volume.
+//!
+//! Our implementation is hypercube quicksort specialised to m = 1 with the
+//! §III-B median reduction (the paper's own fix of Siebert & Wolf's
+//! unbalanced-ternary-tree heuristic) and *with* tie-breaking, so it also
+//! handles the duplicate-heavy instances the original cannot.
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::SortBackend;
+use crate::sim::Machine;
+
+use super::quick::{self, Pivot, QuickConfig};
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) {
+    if data.iter().any(|v| v.len() != 1) {
+        mach.fail(0, "Minisort requires exactly one element per PE (n = p)");
+        return;
+    }
+    // n = p: shuffling a single element per PE is one permutation round;
+    // the §III-B median over singleton leaves replaces the ternary tree.
+    let qc = QuickConfig {
+        shuffle: true,
+        tie_break: true,
+        pivot: Pivot::Window,
+        window_k: 2,
+    };
+    quick::sort(mach, data, cfg, backend, &qc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn minisort_sorts_one_element_per_pe() {
+        let cfg = RunConfig::default().with_p(128).with_n_per_pe(1);
+        for d in [Distribution::Uniform, Distribution::Zero, Distribution::Mirrored] {
+            let report = run(Algorithm::Minisort, &cfg, generate(&cfg, d));
+            assert!(report.succeeded(), "{d:?}: {:?}", report.validation);
+        }
+    }
+
+    #[test]
+    fn minisort_rejects_dense_input() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(4);
+        let report = run(Algorithm::Minisort, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.crashed.is_some());
+    }
+
+    #[test]
+    fn minisort_latency_is_polylog() {
+        let cfg = RunConfig::default().with_p(1 << 10).with_n_per_pe(1);
+        let report = run(Algorithm::Minisort, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.succeeded());
+        // log²p ≈ 100 α-rounds at p=1024; far below the α·p of any
+        // gather-to-root scheme at this scale... keep a generous bound
+        let alpha = cfg.cost.alpha;
+        assert!(report.time < 350.0 * alpha, "time {} vs α {}", report.time, alpha);
+    }
+}

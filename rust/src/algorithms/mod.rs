@@ -1,0 +1,288 @@
+//! The sorting algorithms: the paper's four robust algorithms spanning the
+//! input-size spectrum, every baseline of the evaluation, and the
+//! nonrobust ablation variants of §VII-B.
+
+pub mod all_gather_merge;
+pub mod bitonic;
+pub mod gather_merge;
+pub mod hyksort;
+pub mod mergesort;
+pub mod minisort;
+pub mod quick;
+pub mod rams;
+pub mod rfis;
+pub mod selector;
+pub mod ssort;
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::{RustSort, SortBackend};
+use crate::metrics::Stats;
+use crate::sim::Machine;
+use crate::verify::{validate, Validation};
+
+/// Every algorithm of the evaluation (§VII).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Binomial-tree gather-merge to PE 0 — fastest for very sparse inputs.
+    GatherM,
+    /// Hypercube all-gather-merge — every PE ends with everything.
+    AllGatherM,
+    /// Robust fast work-inefficient sort (§V): √p×√p grid ranking with
+    /// provenance tie-breaking + in-column delivery.
+    Rfis,
+    /// Robust hypercube quicksort (§VI, Algorithm 2).
+    RQuick,
+    /// RQuick without shuffle and without tie-breaking (Fig. 2a/2b).
+    NtbQuick,
+    /// Bitonic sort (Batcher/Johnsson) — the deterministic baseline.
+    Bitonic,
+    /// Robust multi-level AMS-sort (App. G).
+    Rams,
+    /// RAMS without splitter tie-breaking (Fig. 2b).
+    NtbAms,
+    /// RAMS without deterministic message assignment (Fig. 2c).
+    NdmaAms,
+    /// HykSort (Sundar et al. [6]) — k-way, sample splitters, nonrobust.
+    HykSort,
+    /// Single-level p-way sample sort with direct delivery.
+    SSort,
+    /// SSort with the splitter-selection phase not charged (Fig. 2d's
+    /// lower bound for single-delivery algorithms).
+    NsSSort,
+    /// Minisort (Siebert & Wolf [2]): one element per PE (n = p).
+    Minisort,
+    /// Single-level multiway mergesort with exact splitters (Table I).
+    Mways,
+    /// The paper's headline: pick GatherM/RFIS/RQuick/RAMS by n/p.
+    Robust,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 15] = [
+        Algorithm::GatherM,
+        Algorithm::AllGatherM,
+        Algorithm::Rfis,
+        Algorithm::RQuick,
+        Algorithm::NtbQuick,
+        Algorithm::Bitonic,
+        Algorithm::Rams,
+        Algorithm::NtbAms,
+        Algorithm::NdmaAms,
+        Algorithm::HykSort,
+        Algorithm::SSort,
+        Algorithm::NsSSort,
+        Algorithm::Minisort,
+        Algorithm::Mways,
+        Algorithm::Robust,
+    ];
+
+    /// The seven algorithms Figure 1 compares.
+    pub const FIG1: [Algorithm; 8] = [
+        Algorithm::GatherM,
+        Algorithm::AllGatherM,
+        Algorithm::Rfis,
+        Algorithm::RQuick,
+        Algorithm::Bitonic,
+        Algorithm::Rams,
+        Algorithm::HykSort,
+        Algorithm::SSort,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::GatherM => "GatherM",
+            Algorithm::AllGatherM => "AllGatherM",
+            Algorithm::Rfis => "RFIS",
+            Algorithm::RQuick => "RQuick",
+            Algorithm::NtbQuick => "NTB-Quick",
+            Algorithm::Bitonic => "Bitonic",
+            Algorithm::Rams => "RAMS",
+            Algorithm::NtbAms => "NTB-AMS",
+            Algorithm::NdmaAms => "NDMA-AMS",
+            Algorithm::HykSort => "HykSort",
+            Algorithm::SSort => "SSort",
+            Algorithm::NsSSort => "NS-SSort",
+            Algorithm::Minisort => "Minisort",
+            Algorithm::Mways => "Mways",
+            Algorithm::Robust => "Robust",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Self::ALL.iter().copied().find(|a| {
+            a.name().eq_ignore_ascii_case(s)
+                || a.name().replace('-', "").eq_ignore_ascii_case(&s.replace(['-', '_'], ""))
+        })
+    }
+}
+
+/// How an algorithm leaves its output (drives validation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputShape {
+    /// (1+ε)·n/p per PE, globally sorted — the §II contract.
+    Balanced,
+    /// Everything on PE 0 (GatherM). Sorted but not balanced.
+    RootOnly,
+    /// Every PE holds the full sorted input (AllGatherM).
+    Replicated,
+}
+
+/// Everything a single run reports (one point of a paper figure).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub algorithm: Algorithm,
+    /// Simulated makespan in model units (the paper's time axis).
+    pub time: f64,
+    pub stats: Stats,
+    pub validation: Validation,
+    pub output_shape: OutputShape,
+    /// Crash description for nonrobust algorithms on hard instances.
+    pub crashed: Option<String>,
+    /// Host wallclock of the simulation (perf pass metric, ms).
+    pub wall_ms: f64,
+    pub is_globally_sorted: bool,
+    /// The sorted output (per PE) — callers that permute satellite data
+    /// (e.g. the SFC rebalancing example) consume this.
+    pub output: Vec<Vec<Elem>>,
+}
+
+impl RunReport {
+    /// A run "succeeded" in the paper's sense: no crash, correct output.
+    pub fn succeeded(&self) -> bool {
+        self.crashed.is_none() && self.validation.ok()
+    }
+}
+
+/// Run `alg` on `input` under `cfg` with the pure-Rust local sorter.
+pub fn run(alg: Algorithm, cfg: &RunConfig, input: Vec<Vec<Elem>>) -> RunReport {
+    run_with_backend(alg, cfg, input, &mut RustSort)
+}
+
+/// Run `alg` with an explicit local-sort backend (e.g. the PJRT
+/// [`crate::runtime::XlaSort`]).
+pub fn run_with_backend(
+    alg: Algorithm,
+    cfg: &RunConfig,
+    input: Vec<Vec<Elem>>,
+    backend: &mut dyn SortBackend,
+) -> RunReport {
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    mach.mem_cap_elems = cfg.mem_cap_elems();
+    let reference = input.clone();
+    let mut data = input;
+    let start = std::time::Instant::now();
+
+    let shape = match alg {
+        Algorithm::GatherM => {
+            gather_merge::sort(&mut mach, &mut data, cfg, backend);
+            OutputShape::RootOnly
+        }
+        Algorithm::AllGatherM => {
+            all_gather_merge::sort(&mut mach, &mut data, cfg, backend);
+            OutputShape::Replicated
+        }
+        Algorithm::Rfis => {
+            rfis::sort(&mut mach, &mut data, cfg, backend);
+            OutputShape::Balanced
+        }
+        Algorithm::RQuick => {
+            quick::sort(&mut mach, &mut data, cfg, backend, &quick::QuickConfig::robust());
+            OutputShape::Balanced
+        }
+        Algorithm::NtbQuick => {
+            quick::sort(&mut mach, &mut data, cfg, backend, &quick::QuickConfig::nonrobust());
+            OutputShape::Balanced
+        }
+        Algorithm::Bitonic => {
+            bitonic::sort(&mut mach, &mut data, cfg, backend);
+            OutputShape::Balanced
+        }
+        Algorithm::Rams => {
+            rams::sort(&mut mach, &mut data, cfg, backend, &rams::AmsConfig::robust(cfg));
+            OutputShape::Balanced
+        }
+        Algorithm::NtbAms => {
+            let c = rams::AmsConfig { tie_break: false, ..rams::AmsConfig::robust(cfg) };
+            rams::sort(&mut mach, &mut data, cfg, backend, &c);
+            OutputShape::Balanced
+        }
+        Algorithm::NdmaAms => {
+            let c = rams::AmsConfig { dma: rams::Dma::Never, ..rams::AmsConfig::robust(cfg) };
+            rams::sort(&mut mach, &mut data, cfg, backend, &c);
+            OutputShape::Balanced
+        }
+        Algorithm::HykSort => {
+            hyksort::sort(&mut mach, &mut data, cfg, backend, &hyksort::HykConfig::default());
+            OutputShape::Balanced
+        }
+        Algorithm::SSort => {
+            ssort::sort(&mut mach, &mut data, cfg, backend, true);
+            OutputShape::Balanced
+        }
+        Algorithm::NsSSort => {
+            ssort::sort(&mut mach, &mut data, cfg, backend, false);
+            OutputShape::Balanced
+        }
+        Algorithm::Minisort => {
+            minisort::sort(&mut mach, &mut data, cfg, backend);
+            OutputShape::Balanced
+        }
+        Algorithm::Mways => {
+            mergesort::sort(&mut mach, &mut data, cfg, backend);
+            OutputShape::Balanced
+        }
+        Algorithm::Robust => selector::sort(&mut mach, &mut data, cfg, backend),
+    };
+
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let crashed = mach.crash().map(|c| c.to_string());
+
+    // validate according to the output shape
+    let validation = match shape {
+        OutputShape::Balanced => validate(&reference, &data, cfg.epsilon),
+        OutputShape::RootOnly => {
+            let mut proj = vec![Vec::new(); cfg.p];
+            proj[0] = data[0].clone();
+            let mut v = validate(&reference, &proj, f64::INFINITY);
+            v.balanced = false; // by construction
+            v
+        }
+        OutputShape::Replicated => {
+            // every PE must hold the identical full sorted input
+            let mut proj = vec![Vec::new(); cfg.p];
+            proj[0] = data[0].clone();
+            let mut v = validate(&reference, &proj, f64::INFINITY);
+            v.balanced = false;
+            let all_equal = data.iter().all(|d| d == &data[0]);
+            v.globally_sorted &= all_equal;
+            v
+        }
+    };
+
+    RunReport {
+        algorithm: alg,
+        time: mach.time(),
+        stats: mach.stats,
+        is_globally_sorted: validation.globally_sorted && crashed.is_none(),
+        validation,
+        output_shape: shape,
+        crashed,
+        wall_ms,
+        output: data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_algorithm_names() {
+        assert_eq!(Algorithm::parse("rquick"), Some(Algorithm::RQuick));
+        assert_eq!(Algorithm::parse("NTB-Quick"), Some(Algorithm::NtbQuick));
+        assert_eq!(Algorithm::parse("ntbquick"), Some(Algorithm::NtbQuick));
+        assert_eq!(Algorithm::parse("ns_ssort"), Some(Algorithm::NsSSort));
+        assert_eq!(Algorithm::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,352 @@
+//! Hypercube quicksort, parametrized to cover the whole family:
+//!
+//! * **RQuick** (§VI, Algorithm 2): initial hypercube random shuffle,
+//!   k-window single-reduction median (§III-B), and the local duplicate
+//!   split `a = aℓ·s^m·a_r → L = aℓ·s^x`, `R = s^(m−x)·a_r` with `x`
+//!   chosen to bring `|L|` closest to `|a|/2` — tie-breaking with zero
+//!   communicated bytes.
+//! * **NTB-Quick** (Fig. 2a/2b): no shuffle, no tie-breaking — duplicates
+//!   and skew pile up until the memory cap trips (the paper's OOM).
+//! * Wagar's original pivot (PE 0's local median) and Lan & Mohamed's
+//!   median-of-medians (the `β·p` Table I row) as pivot strategies.
+
+use crate::config::RunConfig;
+use crate::elements::{merge_into, Elem, Key};
+use crate::localsort::{sort_all, SortBackend};
+use crate::median::median_binary;
+use crate::rng::Rng;
+use crate::shuffle::hypercube_shuffle;
+use crate::sim::{bcast_cost, Cube, Machine};
+
+/// Pivot selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pivot {
+    /// §III-B k-window single-reduction median — fast *and* accurate.
+    Window,
+    /// Wagar's hyperquicksort: cube rank 0 broadcasts its local median.
+    Pe0LocalMedian,
+    /// Lan & Mohamed: global median of all local medians (adds β·q).
+    MedianOfMedians,
+}
+
+/// Knobs distinguishing RQuick from its ablations.
+#[derive(Clone, Copy, Debug)]
+pub struct QuickConfig {
+    pub shuffle: bool,
+    pub tie_break: bool,
+    pub pivot: Pivot,
+    /// k-window width for [`Pivot::Window`].
+    pub window_k: usize,
+}
+
+impl QuickConfig {
+    /// The paper's RQuick.
+    pub fn robust() -> Self {
+        Self { shuffle: true, tie_break: true, pivot: Pivot::Window, window_k: 16 }
+    }
+
+    /// NTB-Quick: same median selection, no shuffle, no tie-breaking —
+    /// isolating exactly the two robustness measures of Fig. 2a/2b.
+    pub fn nonrobust() -> Self {
+        Self { shuffle: false, tie_break: false, pivot: Pivot::Window, window_k: 16 }
+    }
+}
+
+/// Split a sorted run at the splitter. Tie-breaking picks `x` dup copies
+/// for the left side so `|L|` lands closest to `|a|/2`; the nonrobust
+/// split sends *all* duplicates right (Wagar's convention).
+fn split_run(a: &[Elem], s: Key, tie_break: bool) -> (usize, usize) {
+    // lo = #keys < s, hi = #keys ≤ s  (binary searches on the sorted run)
+    let lo = a.partition_point(|e| e.key < s);
+    let hi = a.partition_point(|e| e.key <= s);
+    if !tie_break {
+        return (lo, lo); // cut before the duplicates: all `s` go right
+    }
+    let m = hi - lo;
+    let desired = a.len() / 2;
+    let x = desired.saturating_sub(lo).min(m);
+    (lo, lo + x)
+}
+
+/// Select the pivot for one subcube, pricing the selection.
+fn select_pivot(
+    mach: &mut Machine,
+    pes: &[usize],
+    data: &[Vec<Elem>],
+    qc: &QuickConfig,
+    rng: &mut Rng,
+) -> Option<Key> {
+    match qc.pivot {
+        Pivot::Window => median_binary(mach, pes, data, qc.window_k, rng),
+        Pivot::Pe0LocalMedian => {
+            // Wagar: rank 0 broadcasts its local median (skew-fragile)
+            let local = &data[pes[0]];
+            let s = local.get(local.len() / 2).map(|e| e.key);
+            bcast_cost(mach, pes, 0, 1);
+            // if rank 0 is empty the subcube's split degenerates; fall back
+            // to any member's median like practical implementations do
+            s.or_else(|| {
+                pes.iter()
+                    .find_map(|&pe| data[pe].get(data[pe].len() / 2).map(|e| e.key))
+            })
+        }
+        Pivot::MedianOfMedians => {
+            // binomial gather of local medians (message sizes double → β·q)
+            let q = pes.len();
+            let dim = q.trailing_zeros();
+            let mut have: Vec<usize> = vec![1; q];
+            for j in 0..dim {
+                let bit = 1usize << j;
+                for r in 0..q {
+                    if r & bit != 0 && r & (bit - 1) == 0 {
+                        let dst = r & !bit;
+                        mach.send(pes[r], pes[dst], have[r]);
+                        have[dst] += have[r];
+                    }
+                }
+            }
+            let mut meds: Vec<Key> = pes
+                .iter()
+                .filter_map(|&pe| data[pe].get(data[pe].len() / 2).map(|e| e.key))
+                .collect();
+            if meds.is_empty() {
+                return None;
+            }
+            meds.sort_unstable();
+            mach.work_sort(pes[0], q);
+            bcast_cost(mach, pes, 0, 1);
+            Some(meds[meds.len() / 2])
+        }
+    }
+}
+
+/// Hypercube quicksort main loop (Algorithm 2). `data` is indexed by
+/// global PE; local runs must end sorted (they do: merge maintains order).
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+    qc: &QuickConfig,
+) {
+    let p = cfg.p;
+    assert!(p.is_power_of_two());
+    let mut rng = Rng::seeded(cfg.seed ^ 0x5157_4943, 1);
+
+    if qc.shuffle {
+        hypercube_shuffle(mach, Cube::whole(p), data, &mut rng);
+    }
+    sort_all(mach, data, backend);
+
+    let mut cubes = vec![Cube::whole(p)];
+    let mut merge_buf: Vec<Elem> = Vec::new();
+    while cubes[0].dim > 0 {
+        let mut next = Vec::with_capacity(cubes.len() * 2);
+        for cube in &cubes {
+            let pes = cube.pe_vec();
+            if let Some(s) = select_pivot(mach, &pes, data, qc, &mut rng) {
+                exchange_level(mach, cube, data, s, qc.tie_break, &mut merge_buf);
+            }
+            // ISEMPTY(s): nothing to split — members keep (empty) data
+            let (lo, hi) = cube.split();
+            next.push(lo);
+            next.push(hi);
+            if mach.crashed() {
+                return;
+            }
+        }
+        cubes = next;
+    }
+}
+
+/// One quicksort exchange along the cube's highest dimension.
+fn exchange_level(
+    mach: &mut Machine,
+    cube: &Cube,
+    data: &mut [Vec<Elem>],
+    s: Key,
+    tie_break: bool,
+    merge_buf: &mut Vec<Elem>,
+) {
+    let j = cube.dim - 1;
+    let bit = 1usize << j;
+    let size = cube.size();
+    let base = cube.base();
+    // split all members
+    let mut cuts: Vec<usize> = Vec::with_capacity(size);
+    for r in 0..size {
+        let a = &data[base + r];
+        let (_, cut) = split_run(a, s, tie_break);
+        mach.work(base + r, 2.0 * (a.len().max(2) as f64).log2()); // two binary searches
+        cuts.push(cut);
+    }
+    // pairwise exchange: low partner collects Ls, high partner collects Rs
+    for r in 0..size {
+        let pr = r ^ bit;
+        if r < pr {
+            let send_r = data[base + r].len() - cuts[r]; // r sends its R
+            let send_pr = cuts[pr]; // partner sends its L
+            mach.xchg(base + r, base + pr, send_r, send_pr);
+        }
+    }
+    // perform the data movement + merges
+    let mut outgoing: Vec<Vec<Elem>> = Vec::with_capacity(size);
+    for r in 0..size {
+        let pe = base + r;
+        let keep_low = r & bit == 0;
+        let run = &mut data[pe];
+        if keep_low {
+            outgoing.push(run.split_off(cuts[r])); // ship R
+        } else {
+            let mut rest = run.split_off(cuts[r]);
+            std::mem::swap(run, &mut rest);
+            outgoing.push(rest); // ship L, keep R
+        }
+    }
+    for r in 0..size {
+        let pr = r ^ bit;
+        let pe = base + r;
+        let incoming = std::mem::take(&mut outgoing[pr]);
+        merge_into(&data[pe], &incoming, merge_buf);
+        std::mem::swap(&mut data[pe], merge_buf);
+        mach.work_linear(pe, data[pe].len());
+        mach.note_mem(pe, data[pe].len(), "quicksort exchange");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn split_run_tiebreak_balances_duplicates() {
+        let a: Vec<Elem> = (0..8).map(|i| Elem::with_id(5, i)).collect();
+        // all keys equal the splitter: tie-break puts half left
+        assert_eq!(split_run(&a, 5, true), (0, 4));
+        // nonrobust: everything right
+        assert_eq!(split_run(&a, 5, false), (0, 0));
+    }
+
+    #[test]
+    fn split_run_mixed() {
+        let keys = [1u64, 2, 5, 5, 5, 7, 9, 9];
+        let a: Vec<Elem> = keys.iter().enumerate().map(|(i, &k)| Elem::with_id(k, i as u64)).collect();
+        // lo=2, m=3, desired=4 → x=2 → cut=4
+        assert_eq!(split_run(&a, 5, true), (2, 4));
+        assert_eq!(split_run(&a, 5, false), (2, 2));
+        assert_eq!(split_run(&a, 0, true), (0, 0));
+        assert_eq!(split_run(&a, 100, true), (8, 8));
+    }
+
+    #[test]
+    fn rquick_sorts_uniform() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(64);
+        let input = generate(&cfg, Distribution::Uniform);
+        let report = run(Algorithm::RQuick, &cfg, input);
+        assert!(report.succeeded(), "{:?} {:?}", report.crashed, report.validation);
+        assert!(report.validation.balanced, "imbalance {:?}", report.validation.imbalance);
+    }
+
+    #[test]
+    fn rquick_sorts_every_distribution() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(32);
+        for d in Distribution::ALL {
+            let report = run(Algorithm::RQuick, &cfg, generate(&cfg, d));
+            assert!(report.succeeded(), "{d:?}: {:?} {:?}", report.crashed, report.validation);
+        }
+    }
+
+    #[test]
+    fn rquick_handles_sparse_inputs() {
+        let cfg = RunConfig::default().with_p(32).with_sparsity(3);
+        let report = run(Algorithm::RQuick, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.succeeded(), "{:?}", report.validation);
+    }
+
+    #[test]
+    fn ntb_quick_fine_on_uniform_unique() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(64);
+        let report = run(Algorithm::NtbQuick, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.validation.ok(), "{:?}", report.validation);
+    }
+
+    #[test]
+    fn ntb_quick_collapses_on_duplicates() {
+        // Zero: every key identical → without tie-breaking one side of every
+        // split gets everything
+        let mut cfg = RunConfig::default().with_p(16).with_n_per_pe(256);
+        cfg.mem_cap_factor = Some(4.0);
+        let report = run(Algorithm::NtbQuick, &cfg, generate(&cfg, Distribution::Zero));
+        let blew_up = report.crashed.is_some()
+            || report.validation.imbalance.epsilon > 3.0
+            || !report.validation.balanced;
+        assert!(blew_up, "NTB-Quick should collapse: {:?}", report.validation.imbalance);
+    }
+
+    #[test]
+    fn rquick_beats_ntb_on_mirrored_skew() {
+        let cfg = RunConfig::default().with_p(64).with_n_per_pe(128);
+        let r = run(Algorithm::RQuick, &cfg, generate(&cfg, Distribution::Mirrored));
+        let n = run(Algorithm::NtbQuick, &cfg, generate(&cfg, Distribution::Mirrored));
+        assert!(r.succeeded());
+        // NTB either crashes, is unbalanced, or is much slower
+        let ntb_bad = n.crashed.is_some()
+            || !n.validation.balanced
+            || n.time > 1.5 * r.time;
+        assert!(ntb_bad, "RQuick {} vs NTB {} (imb {:?})", r.time, n.time, n.validation.imbalance);
+    }
+
+    #[test]
+    fn wagar_pivot_works_on_uniform() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(128);
+        let mut mach = Machine::new(cfg.p, cfg.cost);
+        let mut data = generate(&cfg, Distribution::Uniform);
+        let reference = data.clone();
+        let qc = QuickConfig { pivot: Pivot::Pe0LocalMedian, ..QuickConfig::robust() };
+        sort(&mut mach, &mut data, &cfg, &mut crate::localsort::RustSort, &qc);
+        let v = crate::verify::validate(&reference, &data, 1.0);
+        assert!(v.ok(), "{v:?}");
+    }
+
+    #[test]
+    fn median_of_medians_pivot_sorts_correctly() {
+        let cfg = RunConfig::default().with_p(64).with_n_per_pe(16);
+        let mut mach = Machine::new(cfg.p, cfg.cost);
+        let mut data = generate(&cfg, Distribution::Uniform);
+        let reference = data.clone();
+        let qc = QuickConfig { pivot: Pivot::MedianOfMedians, ..QuickConfig::robust() };
+        sort(&mut mach, &mut data, &cfg, &mut crate::localsort::RustSort, &qc);
+        let v = crate::verify::validate(&reference, &data, 1.0);
+        assert!(v.ok(), "{v:?}");
+    }
+
+    #[test]
+    fn median_of_medians_pivot_latency_grows_linearly() {
+        // the Table I "+median of medians" β·p term: pivot selection cost
+        // on an otherwise idle machine grows ~linearly in p, while the
+        // §III-B window reduction grows only logarithmically
+        let pivot_cost = |p: usize, pivot: Pivot| {
+            let cfg = RunConfig::default().with_p(p).with_n_per_pe(4);
+            let mut mach = Machine::new(p, cfg.cost);
+            let mut data = generate(&cfg, Distribution::Uniform);
+            for run in data.iter_mut() {
+                run.sort_unstable(); // select_pivot expects sorted locals
+            }
+            let mut rng = crate::rng::Rng::seeded(1, 1);
+            let qc = QuickConfig { pivot, ..QuickConfig::robust() };
+            let pes: Vec<usize> = (0..p).collect();
+            select_pivot(&mut mach, &pes, &data, &qc, &mut rng);
+            mach.time()
+        };
+        let mom_small = pivot_cost(1 << 8, Pivot::MedianOfMedians);
+        let mom_large = pivot_cost(1 << 12, Pivot::MedianOfMedians);
+        let win_small = pivot_cost(1 << 8, Pivot::Window);
+        let win_large = pivot_cost(1 << 12, Pivot::Window);
+        let mom_growth = mom_large / mom_small;
+        let win_growth = win_large / win_small;
+        assert!(mom_growth > 2.0, "median-of-medians growth {mom_growth}");
+        assert!(win_growth < 2.0, "window growth {win_growth}");
+    }
+}

@@ -1,0 +1,280 @@
+//! RFIS — Robust Fast Work-Inefficient Sorting (§V, App. F).
+//!
+//! The PEs form an O(√p)×O(√p) grid. All-gather-merge along rows and
+//! columns gives each PE all elements of its row and column; each PE then
+//! ranks its row elements against its column elements and an all-reduce
+//! along the row sums the partial ranks into *global* ranks — O(α·log p)
+//! latency, O(β·n/√p) volume, massively work-inefficient and exactly right
+//! for sparse/tiny inputs.
+//!
+//! Robustness against duplicates comes from the provenance tie-break of
+//! App. F: elements are logically quadruples (x, row, col, i) compared
+//! lexicographically, implemented with zero extra communication by
+//! tracking which direction data arrived from ({←,H,→} × {↑,H,↓}) plus
+//! local positions — the 3×3 compare table below.
+//!
+//! Delivery: rank r → PE ⌊r·p/n⌋. Every column holds the complete ranked
+//! input, so each column keeps only its own targets and routes them to the
+//! right row with hypercube bit-fixing.
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::{sort_all, SortBackend};
+use crate::sim::{all_gather_merge, allreduce_vec_u64, Machine};
+
+/// Provenance of a row-gathered element relative to this PE's column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RowClass {
+    /// arrived from a lower column (←)
+    Left,
+    /// this PE's own element (H); payload = index in the local sorted run
+    Own(usize),
+    /// arrived from a higher column (→)
+    Right,
+}
+
+/// Grid geometry: `rows × cols = p`, rows = 2^⌈d/2⌉.
+pub fn grid(p: usize) -> (usize, usize) {
+    let d = p.trailing_zeros();
+    let cols = 1usize << (d / 2);
+    (p / cols, cols)
+}
+
+/// count of keys ≤ `key` in a sorted run (upper bound).
+#[inline]
+fn ub(run: &[Elem], key: u64) -> u64 {
+    run.partition_point(|e| e.key <= key) as u64
+}
+
+/// count of keys < `key` in a sorted run (lower bound).
+#[inline]
+fn lb(run: &[Elem], key: u64) -> u64 {
+    run.partition_point(|e| e.key < key) as u64
+}
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) {
+    let p = cfg.p;
+    assert!(p.is_power_of_two());
+    let n: usize = data.iter().map(Vec::len).sum();
+    if n == 0 {
+        return;
+    }
+    let (rows, cols) = grid(p);
+
+    sort_all(mach, data, backend);
+
+    // --- row and column all-gather-merges (provenance-tracking) ------
+    let mut row_runs = vec![None; p];
+    for r in 0..rows {
+        let pes: Vec<usize> = (0..cols).map(|c| r * cols + c).collect();
+        let runs = all_gather_merge(mach, &pes, data);
+        for (c, g) in runs.into_iter().enumerate() {
+            row_runs[r * cols + c] = Some(g);
+        }
+    }
+    let mut col_runs = vec![None; p];
+    for c in 0..cols {
+        let pes: Vec<usize> = (0..rows).map(|r| r * cols + c).collect();
+        let runs = all_gather_merge(mach, &pes, data);
+        for (r, g) in runs.into_iter().enumerate() {
+            col_runs[r * cols + c] = Some(g);
+        }
+    }
+
+    // --- per-PE ranking of row elements against column elements ------
+    // The annotated row sequence (canonical (key,id) order — identical on
+    // every PE of the row) with provenance classes.
+    let mut ranks: Vec<Vec<u64>> = vec![Vec::new(); p];
+    let mut row_merged: Vec<Vec<Elem>> = vec![Vec::new(); p];
+    for pe in 0..p {
+        let row = row_runs[pe].take().expect("row gather ran");
+        let col = col_runs[pe].take().expect("col gather ran");
+        // merge the three tagged row runs in (key, id) order
+        let mut annotated: Vec<(Elem, RowClass)> =
+            Vec::with_capacity(row.total());
+        {
+            let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+            let (l, o, r) = (&row.left, &row.own, &row.right);
+            while i < l.len() || j < o.len() || k < r.len() {
+                let lv = l.get(i);
+                let ov = o.get(j);
+                let rv = r.get(k);
+                let pick_l = lv.is_some()
+                    && ov.map_or(true, |x| lv.unwrap() <= x)
+                    && rv.map_or(true, |x| lv.unwrap() <= x);
+                if pick_l {
+                    annotated.push((l[i], RowClass::Left));
+                    i += 1;
+                } else if ov.is_some() && rv.map_or(true, |x| ov.unwrap() <= x) {
+                    annotated.push((o[j], RowClass::Own(j)));
+                    j += 1;
+                } else {
+                    annotated.push((r[k], RowClass::Right));
+                    k += 1;
+                }
+            }
+        }
+        // rank each row element within the column data via the App. F table
+        let (up, own_col, down) = (&col.left, &col.own, &col.right);
+        let mut rk = Vec::with_capacity(annotated.len());
+        for (e, class) in &annotated {
+            let r = match class {
+                RowClass::Left => ub(up, e.key) + lb(own_col, e.key) + lb(down, e.key),
+                RowClass::Right => ub(up, e.key) + ub(own_col, e.key) + lb(down, e.key),
+                RowClass::Own(i) => ub(up, e.key) + *i as u64 + lb(down, e.key),
+            };
+            rk.push(r);
+        }
+        let total = annotated.len() + col.total();
+        mach.work(
+            pe,
+            cfg.cost.cmp * annotated.len() as f64
+                * ((col.total().max(2)) as f64).log2(),
+        );
+        mach.note_mem(pe, total, "RFIS gather footprint");
+        ranks[pe] = rk;
+        row_merged[pe] = annotated.into_iter().map(|(e, _)| e).collect();
+    }
+
+    // --- all-reduce partial ranks along each row ----------------------
+    for r in 0..rows {
+        let pes: Vec<usize> = (0..cols).map(|c| r * cols + c).collect();
+        if !ranks[pes[0]].is_empty() {
+            allreduce_vec_u64(mach, &pes, &mut ranks, |a, b| a + b);
+        }
+    }
+
+    // --- delivery: keep own column's targets, route within the column -
+    // element with global rank i goes to PE ⌊i·p/n⌋
+    let dest_pe = |rank: u64| -> usize { ((rank as u128 * p as u128) / n as u128) as usize };
+    let mut in_flight: Vec<Vec<(Elem, usize)>> = vec![Vec::new(); p]; // (elem, dest_row)
+    for pe in 0..p {
+        let c = pe % cols;
+        let merged = std::mem::take(&mut row_merged[pe]);
+        let rk = std::mem::take(&mut ranks[pe]);
+        mach.work_linear(pe, merged.len());
+        for (e, r) in merged.into_iter().zip(rk) {
+            let dest = dest_pe(r);
+            if dest % cols == c {
+                in_flight[pe].push((e, dest / cols));
+            }
+        }
+        data[pe].clear();
+    }
+    // hypercube bit-fixing over the rows of each column
+    let row_dims = rows.trailing_zeros();
+    for j in (0..row_dims).rev() {
+        let bit = 1usize << j;
+        for c in 0..cols {
+            // pairwise exchange of misrouted elements
+            let mut outgoing: Vec<Vec<(Elem, usize)>> = vec![Vec::new(); rows];
+            for r in 0..rows {
+                let pe = r * cols + c;
+                let (stay, go): (Vec<_>, Vec<_>) =
+                    std::mem::take(&mut in_flight[pe]).into_iter().partition(|(_, d)| d & bit == r & bit);
+                in_flight[pe] = stay;
+                outgoing[r] = go;
+            }
+            for r in 0..rows {
+                let pr = r ^ bit;
+                if r < pr {
+                    mach.xchg(r * cols + c, pr * cols + c, outgoing[r].len(), outgoing[pr].len());
+                }
+            }
+            for r in 0..rows {
+                let pr = r ^ bit;
+                let incoming = std::mem::take(&mut outgoing[pr]);
+                let pe = r * cols + c;
+                in_flight[pe].extend(incoming);
+                mach.note_mem(pe, in_flight[pe].len(), "RFIS delivery");
+            }
+        }
+    }
+    for pe in 0..p {
+        let mut v: Vec<Elem> = std::mem::take(&mut in_flight[pe]).into_iter().map(|(e, _)| e).collect();
+        mach.work_sort(pe, v.len());
+        v.sort_unstable();
+        data[pe] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn grid_shapes() {
+        assert_eq!(grid(16), (4, 4));
+        assert_eq!(grid(8), (4, 2));
+        assert_eq!(grid(2), (2, 1));
+        assert_eq!(grid(1), (1, 1));
+    }
+
+    #[test]
+    fn rfis_sorts_uniform_dense() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(4);
+        let report = run(Algorithm::Rfis, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.succeeded(), "{:?}", report.validation);
+        assert!(report.validation.balanced, "{:?}", report.validation.imbalance);
+    }
+
+    #[test]
+    fn rfis_sorts_every_distribution() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(4);
+        for d in Distribution::ALL {
+            let report = run(Algorithm::Rfis, &cfg, generate(&cfg, d));
+            assert!(report.succeeded(), "{d:?}: {:?}", report.validation);
+        }
+    }
+
+    #[test]
+    fn rfis_duplicates_get_unique_ranks_and_balanced_output() {
+        // the tie-breaking core: all-equal keys must still balance perfectly
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(8);
+        let report = run(Algorithm::Rfis, &cfg, generate(&cfg, Distribution::Zero));
+        assert!(report.succeeded(), "{:?}", report.validation);
+        assert_eq!(report.validation.imbalance.max_load, 8, "perfect balance on Zero");
+    }
+
+    #[test]
+    fn rfis_sparse_single_elements() {
+        let cfg = RunConfig::default().with_p(64).with_sparsity(3);
+        let report = run(Algorithm::Rfis, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.succeeded(), "{:?}", report.validation);
+    }
+
+    #[test]
+    fn rfis_one_element_per_pe() {
+        let cfg = RunConfig::default().with_p(64).with_n_per_pe(1);
+        for d in [Distribution::Uniform, Distribution::Zero, Distribution::Staggered] {
+            let report = run(Algorithm::Rfis, &cfg, generate(&cfg, d));
+            assert!(report.succeeded(), "{d:?}: {:?}", report.validation);
+        }
+    }
+
+    #[test]
+    fn rfis_latency_is_logarithmic() {
+        // tiny input on many PEs: time must stay O(α·log p), way below α·√p
+        let cfg = RunConfig::default().with_p(256).with_n_per_pe(1);
+        let report = run(Algorithm::Rfis, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.succeeded());
+        let alpha = cfg.cost.alpha;
+        assert!(report.time < 40.0 * alpha, "time {} vs α {}", report.time, alpha);
+    }
+
+    #[test]
+    fn rfis_small_p() {
+        for p in [1usize, 2, 4] {
+            let cfg = RunConfig::default().with_p(p).with_n_per_pe(8);
+            let report = run(Algorithm::Rfis, &cfg, generate(&cfg, Distribution::RandDupl));
+            assert!(report.succeeded(), "p={p}: {:?}", report.validation);
+        }
+    }
+}

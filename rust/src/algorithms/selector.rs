@@ -1,0 +1,104 @@
+//! The paper's headline result as a component: *four algorithms cover the
+//! entire range of possible input sizes* (§I, §VIII). The selector routes
+//! a sort request to GatherM / RFIS / RQuick / RAMS by n/p, with the
+//! thresholds the evaluation establishes (Fig. 1):
+//!
+//! * n/p ≤ 1/8      → GatherM  (very sparse: "sorts" while gathering)
+//! * n/p < 4        → RFIS     (sparse / tiny)
+//! * n/p ≤ 2^14     → RQuick   (small)
+//! * otherwise      → RAMS     (large; level count by n/p)
+//!
+//! Thresholds are machine-ratio-dependent; `-- tuning` regenerates them.
+
+use crate::algorithms::{gather_merge, quick, rams, rfis, OutputShape};
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::SortBackend;
+use crate::sim::Machine;
+
+/// Which algorithm the selector picks for a given n/p.
+pub fn choose(n_over_p: f64) -> &'static str {
+    if n_over_p <= 0.125 {
+        "GatherM"
+    } else if n_over_p < 4.0 {
+        "RFIS"
+    } else if n_over_p <= (1 << 14) as f64 {
+        "RQuick"
+    } else {
+        "RAMS"
+    }
+}
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+) -> OutputShape {
+    let n: usize = data.iter().map(Vec::len).sum();
+    let npp = n as f64 / cfg.p as f64;
+    match choose(npp) {
+        "GatherM" => {
+            gather_merge::sort(mach, data, cfg, backend);
+            OutputShape::RootOnly
+        }
+        "RFIS" => {
+            rfis::sort(mach, data, cfg, backend);
+            OutputShape::Balanced
+        }
+        "RQuick" => {
+            quick::sort(mach, data, cfg, backend, &quick::QuickConfig::robust());
+            OutputShape::Balanced
+        }
+        _ => {
+            rams::sort(mach, data, cfg, backend, &rams::AmsConfig::robust(cfg));
+            OutputShape::Balanced
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn choose_thresholds() {
+        assert_eq!(choose(0.01), "GatherM");
+        assert_eq!(choose(0.5), "RFIS");
+        assert_eq!(choose(100.0), "RQuick");
+        assert_eq!(choose(100_000.0), "RAMS");
+    }
+
+    #[test]
+    fn selector_sorts_across_the_size_spectrum() {
+        // sparse → GatherM
+        let cfg = RunConfig::default().with_p(64).with_sparsity(16);
+        let r = run(Algorithm::Robust, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(r.validation.ok(), "sparse: {:?}", r.validation);
+        assert_eq!(r.output_shape, OutputShape::RootOnly);
+        // tiny → RFIS
+        let cfg = RunConfig::default().with_p(64).with_n_per_pe(2);
+        let r = run(Algorithm::Robust, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(r.succeeded(), "tiny: {:?}", r.validation);
+        assert_eq!(r.output_shape, OutputShape::Balanced);
+        // small → RQuick
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(128);
+        let r = run(Algorithm::Robust, &cfg, generate(&cfg, Distribution::Staggered));
+        assert!(r.succeeded(), "small: {:?}", r.validation);
+        // large → RAMS
+        let cfg = RunConfig::default().with_p(8).with_n_per_pe(1 << 15);
+        let r = run(Algorithm::Robust, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(r.succeeded(), "large: {:?}", r.validation);
+    }
+
+    #[test]
+    fn selector_is_robust_on_hard_instances() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(64);
+        for d in [Distribution::Zero, Distribution::DeterDupl, Distribution::Mirrored] {
+            let r = run(Algorithm::Robust, &cfg, generate(&cfg, d));
+            assert!(r.succeeded(), "{d:?}: {:?}", r.validation);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Simple single-level p-way sample sort (Blelloch et al. [7], as
+//! implemented for the paper's Fig. 2d baseline): sample 16·log p keys per
+//! PE, sort the sample on PE 0, broadcast p−1 splitters, partition, and
+//! deliver everything directly with one all-to-all — the Ω(α·p) startup
+//! pattern that makes single-level algorithms "very slow even for rather
+//! large n/p".
+//!
+//! `charge_splitters = false` gives NS-SSort: the splitter phase runs free,
+//! making the curve "a rough lower bound for any algorithm that delivers
+//! the data directly".
+
+use crate::config::RunConfig;
+use crate::elements::{multiway_merge, Elem, Key};
+use crate::localsort::{sort_all, SortBackend};
+use crate::rng::Rng;
+use crate::sim::{alltoallv, bcast_cost, Cube, Machine};
+
+/// Gather `counts[r]` words from every rank to rank 0 along a binomial
+/// tree with doubling message sizes (the β·p gather term).
+fn gather_words_cost(mach: &mut Machine, pes: &[usize], counts: &mut [usize]) {
+    let dim = pes.len().trailing_zeros();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        for r in 0..pes.len() {
+            if r & bit != 0 && r & (bit - 1) == 0 {
+                let dst = r & !bit;
+                mach.send(pes[r], pes[dst], counts[r]);
+                counts[dst] += counts[r];
+            }
+        }
+    }
+}
+
+pub fn sort(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+    charge_splitters: bool,
+) {
+    let p = cfg.p;
+    assert!(p.is_power_of_two());
+    let logp = p.trailing_zeros().max(1) as usize;
+    let mut rng = Rng::seeded(cfg.seed ^ 0x5350_4C54, 2);
+    let pes = Cube::whole(p).pe_vec();
+
+    sort_all(mach, data, backend);
+
+    // --- splitter phase ---------------------------------------------
+    let per_pe_sample = 16 * logp;
+    let mut sample: Vec<Elem> = Vec::new();
+    let mut sample_counts = vec![0usize; p];
+    for (pe, local) in data.iter().enumerate() {
+        let take = per_pe_sample.min(local.len());
+        for _ in 0..take {
+            sample.push(local[rng.below(local.len() as u64) as usize]);
+        }
+        sample_counts[pe] = take;
+    }
+    sample.sort_unstable_by_key(|e| e.key);
+    let splitters: Vec<Key> = (1..p)
+        .map(|i| {
+            if sample.is_empty() {
+                Key::MAX
+            } else {
+                sample[(i * sample.len() / p).min(sample.len() - 1)].key
+            }
+        })
+        .collect();
+    if charge_splitters {
+        gather_words_cost(mach, &pes, &mut sample_counts);
+        mach.work_sort(0, sample.len());
+        bcast_cost(mach, &pes, 0, p - 1);
+    }
+
+    // --- partition + direct delivery ---------------------------------
+    let mut send: Vec<Vec<Vec<Elem>>> = Vec::with_capacity(p);
+    for pe in 0..p {
+        let local = std::mem::take(&mut data[pe]);
+        mach.work_classify(pe, local.len(), p);
+        let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); p];
+        for e in local {
+            // nonrobust: key-only binary search (duplicates pile up)
+            let b = splitters.partition_point(|&s| s < e.key);
+            buckets[b].push(e);
+        }
+        send.push(buckets);
+    }
+    let recv = alltoallv(mach, &pes, send);
+
+    // --- local merge of received runs --------------------------------
+    for (r, runs) in recv.into_iter().enumerate() {
+        let pe = pes[r];
+        let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+        let merged = multiway_merge(&refs);
+        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
+        mach.note_mem(pe, merged.len(), "sample sort receive");
+        data[pe] = merged;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, Algorithm};
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn ssort_sorts_uniform() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(256);
+        let report = run(Algorithm::SSort, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(report.validation.ok(), "{:?}", report.validation);
+        assert!(report.crashed.is_none());
+    }
+
+    #[test]
+    fn ssort_pays_p_startups() {
+        let cfg = RunConfig::default().with_p(64).with_n_per_pe(64);
+        let report = run(Algorithm::SSort, &cfg, generate(&cfg, Distribution::Uniform));
+        // the all-to-all alone is ~p² messages
+        assert!(report.stats.messages as usize > 64 * 32, "messages {}", report.stats.messages);
+    }
+
+    #[test]
+    fn ns_ssort_is_faster_than_ssort() {
+        let cfg = RunConfig::default().with_p(32).with_n_per_pe(64);
+        let s = run(Algorithm::SSort, &cfg, generate(&cfg, Distribution::Uniform));
+        let ns = run(Algorithm::NsSSort, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(ns.validation.ok());
+        assert!(ns.time < s.time, "NS {} vs SSort {}", ns.time, s.time);
+    }
+
+    #[test]
+    fn ssort_imbalances_on_heavy_duplicates() {
+        // Zero: all keys equal → one bucket gets everything
+        let mut cfg = RunConfig::default().with_p(16).with_n_per_pe(512);
+        cfg.mem_cap_factor = Some(8.0);
+        let report = run(Algorithm::SSort, &cfg, generate(&cfg, Distribution::Zero));
+        let bad = report.crashed.is_some() || !report.validation.balanced;
+        assert!(bad, "SSort should collapse on Zero: {:?}", report.validation.imbalance);
+    }
+}

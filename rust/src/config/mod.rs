@@ -1,0 +1,113 @@
+//! Run configuration: machine size, input size/sparsity, cost model,
+//! balance requirement, robustness knobs. Serializable so experiment
+//! sweeps and the CLI share one source of truth.
+
+use crate::model::CostModel;
+
+/// Configuration of a single sorting run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Number of PEs (power of two for the hypercube algorithms).
+    pub p: usize,
+    /// Elements per PE for dense inputs (`sparsity == 1`).
+    pub n_per_pe: usize,
+    /// Sparsity factor: if `> 1`, only every `sparsity`-th PE holds one
+    /// element and `n_per_pe` is ignored (the paper's `n/p = 3^-k` points).
+    pub sparsity: usize,
+    /// Master seed; every PE derives its own deterministic stream.
+    pub seed: u64,
+    /// α-β cost model.
+    pub cost: CostModel,
+    /// Output balance requirement: at most `(1+epsilon)·n/p` per PE.
+    pub epsilon: f64,
+    /// Per-PE memory budget as a multiple of `max(n/p, 1)`; exceeding it
+    /// is a crash (nonrobust algorithms on hard instances). `None` = ∞.
+    pub mem_cap_factor: Option<f64>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            p: 1 << 8,
+            n_per_pe: 1 << 10,
+            sparsity: 1,
+            seed: 0xC0FFEE,
+            cost: CostModel::default(),
+            epsilon: 0.2,
+            mem_cap_factor: Some(64.0),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Total input size n.
+    pub fn n_total(&self) -> usize {
+        if self.sparsity > 1 {
+            self.p.div_ceil(self.sparsity)
+        } else {
+            self.p * self.n_per_pe
+        }
+    }
+
+    /// n/p as a float (can be < 1 for sparse inputs).
+    pub fn n_over_p(&self) -> f64 {
+        self.n_total() as f64 / self.p as f64
+    }
+
+    /// The memory cap in elements, if enabled.
+    pub fn mem_cap_elems(&self) -> Option<usize> {
+        self.mem_cap_factor.map(|f| {
+            let per_pe = (self.n_total() as f64 / self.p as f64).max(1.0);
+            // at least a few thousand elements so tiny runs never trip it
+            ((f * per_pe) as usize).max(4096)
+        })
+    }
+
+    pub fn with_p(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+
+    pub fn with_n_per_pe(mut self, n: usize) -> Self {
+        self.n_per_pe = n;
+        self.sparsity = 1;
+        self
+    }
+
+    pub fn with_sparsity(mut self, s: usize) -> Self {
+        self.sparsity = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_dense_and_sparse() {
+        let c = RunConfig::default().with_p(64).with_n_per_pe(10);
+        assert_eq!(c.n_total(), 640);
+        assert!((c.n_over_p() - 10.0).abs() < 1e-12);
+        let s = RunConfig::default().with_p(64).with_sparsity(9);
+        assert_eq!(s.n_total(), 8);
+        assert!(s.n_over_p() < 1.0);
+    }
+
+    #[test]
+    fn mem_cap_floor() {
+        let c = RunConfig::default().with_p(4).with_n_per_pe(2);
+        assert!(c.mem_cap_elems().unwrap() >= 4096);
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let c = RunConfig::default().with_p(16).with_n_per_pe(8).with_seed(7);
+        assert_eq!((c.p, c.n_per_pe, c.seed), (16, 8, 7));
+    }
+}

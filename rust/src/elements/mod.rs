@@ -1,0 +1,193 @@
+//! Elements, keys, and the tie-breaking identity.
+//!
+//! The paper's elements are 64-bit values; robustness against duplicates is
+//! obtained *implicitly* — RQuick splits duplicate runs locally (§VI), RFIS
+//! tracks provenance buckets (App. F), RAMS tie-breaks with sample
+//! positions (App. G). To let the *robust* code paths simulate unique keys,
+//! every element carries an origin id `(pe, idx)` packed into a `u64`.
+//! **Nonrobust variants never look at it** — they compare keys only, which
+//! is exactly what makes them collapse on duplicate-heavy instances.
+
+/// Sort key. The paper generates 64-bit elements with 32-bit key ranges;
+/// we keep the full `u64` domain (generators mostly use `[0, 2^32)`).
+pub type Key = u64;
+
+/// One input element: key plus origin identity for explicit tie-breaking.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+pub struct Elem {
+    /// Primary sort key.
+    pub key: Key,
+    /// Unique origin id: `pe << 24-bit-index | idx` — see [`Elem::new`].
+    pub id: u64,
+}
+
+/// Number of low bits of `id` reserved for the local index.
+const IDX_BITS: u32 = 40;
+
+impl Elem {
+    /// Construct with the packed `(pe, idx)` origin id.
+    #[inline]
+    pub fn new(key: Key, pe: usize, idx: usize) -> Self {
+        debug_assert!((idx as u64) < (1 << IDX_BITS));
+        Self {
+            key,
+            id: ((pe as u64) << IDX_BITS) | idx as u64,
+        }
+    }
+
+    /// Construct with an explicit id (used by generators with global ids).
+    #[inline]
+    pub fn with_id(key: Key, id: u64) -> Self {
+        Self { key, id }
+    }
+
+    /// Origin PE encoded in the id.
+    #[inline]
+    pub fn origin_pe(&self) -> usize {
+        (self.id >> IDX_BITS) as usize
+    }
+
+    /// Compare by key only — the *nonrobust* ordering.
+    #[inline]
+    pub fn key_cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Order-preserving u64 → i64 mapping (for the XLA kernels, which sort
+/// signed 64-bit integers).
+#[inline]
+pub fn key_to_i64(k: Key) -> i64 {
+    (k ^ (1u64 << 63)) as i64
+}
+
+/// Inverse of [`key_to_i64`].
+#[inline]
+pub fn key_from_i64(v: i64) -> Key {
+    (v as u64) ^ (1u64 << 63)
+}
+
+/// Merge two sorted runs into a fresh sorted run (full `(key, id)` order).
+pub fn merge(a: &[Elem], b: &[Elem]) -> Vec<Elem> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    merge_into(a, b, &mut out);
+    out
+}
+
+/// Merge two sorted runs into `out` (cleared first). Branch-light two-finger
+/// merge — the hot path of every hypercube exchange step.
+pub fn merge_into(a: &[Elem], b: &[Elem], out: &mut Vec<Elem>) {
+    out.clear();
+    out.reserve(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        // `<=` keeps the merge stable in (key, id) order.
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+/// k-way merge of sorted runs (used by gather-merge trees and RAMS data
+/// receipt). Cascade of two-way merges: ⌈log k⌉ passes of the branch-light
+/// two-finger merge — ~2-3× faster than a binary-heap merge at the k ≤ 64
+/// of all call sites (§Perf, EXPERIMENTS.md).
+pub fn multiway_merge(runs: &[&[Elem]]) -> Vec<Elem> {
+    let mut level: Vec<Vec<Elem>> = runs
+        .iter()
+        .filter(|r| !r.is_empty())
+        .map(|r| r.to_vec())
+        .collect();
+    if level.is_empty() {
+        return Vec::new();
+    }
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(merge(&a, &b)),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// `true` iff `v` is sorted in full `(key, id)` order.
+pub fn is_sorted(v: &[Elem]) -> bool {
+    v.windows(2).all(|w| w[0] <= w[1])
+}
+
+/// `true` iff `v` is sorted by key (ties in any order).
+pub fn is_key_sorted(v: &[Elem]) -> bool {
+    v.windows(2).all(|w| w[0].key <= w[1].key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ord_is_key_then_id() {
+        let a = Elem::with_id(5, 1);
+        let b = Elem::with_id(5, 2);
+        let c = Elem::with_id(6, 0);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn origin_pe_roundtrip() {
+        let e = Elem::new(0, 12345, 678);
+        assert_eq!(e.origin_pe(), 12345);
+        assert_eq!(e.id & ((1 << 40) - 1), 678);
+    }
+
+    #[test]
+    fn key_i64_mapping_is_order_preserving() {
+        let keys = [0u64, 1, u64::MAX / 2, u64::MAX / 2 + 1, u64::MAX];
+        for w in keys.windows(2) {
+            assert!(key_to_i64(w[0]) < key_to_i64(w[1]));
+            assert_eq!(key_from_i64(key_to_i64(w[0])), w[0]);
+        }
+    }
+
+    #[test]
+    fn merge_preserves_order_and_content() {
+        let a: Vec<Elem> = [1u64, 3, 5, 5].iter().enumerate().map(|(i, &k)| Elem::new(k, 0, i)).collect();
+        let b: Vec<Elem> = [2u64, 5, 6].iter().enumerate().map(|(i, &k)| Elem::new(k, 1, i)).collect();
+        let m = merge(&a, &b);
+        assert_eq!(m.len(), 7);
+        assert!(is_sorted(&m));
+    }
+
+    #[test]
+    fn merge_empty_sides() {
+        let a: Vec<Elem> = vec![Elem::new(1, 0, 0)];
+        assert_eq!(merge(&a, &[]), a);
+        assert_eq!(merge(&[], &a), a);
+        assert!(merge(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn multiway_merge_matches_sort() {
+        let runs: Vec<Vec<Elem>> = vec![
+            vec![Elem::new(1, 0, 0), Elem::new(9, 0, 1)],
+            vec![Elem::new(2, 1, 0), Elem::new(2, 1, 1), Elem::new(8, 1, 2)],
+            vec![],
+            vec![Elem::new(0, 2, 0)],
+        ];
+        let refs: Vec<&[Elem]> = runs.iter().map(|r| r.as_slice()).collect();
+        let merged = multiway_merge(&refs);
+        let mut flat: Vec<Elem> = runs.iter().flatten().copied().collect();
+        flat.sort();
+        assert_eq!(merged, flat);
+    }
+}

@@ -1,0 +1,105 @@
+//! Figure 1: running times of each algorithm over the n/p sweep, per input
+//! instance (Uniform, Staggered, BucketSorted, DeterDupl) — the paper's
+//! central comparison on 262 144 cores, here on a configurable simulated
+//! machine.
+
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::experiments::{np_sweep, run_cell, CellResult, NpPoint};
+use crate::input::Distribution;
+
+/// The sweep result: `rows[dist][point][alg]`.
+pub struct Fig1 {
+    pub points: Vec<NpPoint>,
+    pub algorithms: Vec<Algorithm>,
+    pub distributions: Vec<Distribution>,
+    pub cells: Vec<CellResult>,
+}
+
+pub fn run(base: &RunConfig, max_log: u32, reps: usize) -> Fig1 {
+    let points = np_sweep(max_log);
+    let algorithms: Vec<Algorithm> = Algorithm::FIG1.to_vec();
+    let distributions: Vec<Distribution> = Distribution::FIG1.to_vec();
+    let mut cells = Vec::new();
+    for &dist in &distributions {
+        for &point in &points {
+            for &alg in &algorithms {
+                cells.push(run_cell(alg, dist, base, point, reps));
+            }
+        }
+    }
+    Fig1 { points, algorithms, distributions, cells }
+}
+
+impl Fig1 {
+    pub fn cell(&self, dist: Distribution, point: NpPoint, alg: Algorithm) -> &CellResult {
+        self.cells
+            .iter()
+            .find(|c| c.distribution == dist && c.point == point && c.algorithm == alg)
+            .expect("cell exists")
+    }
+
+    /// Fastest algorithm at a point (ignoring crashes).
+    pub fn winner(&self, dist: Distribution, point: NpPoint) -> Algorithm {
+        self.algorithms
+            .iter()
+            .copied()
+            .filter(|&a| !self.cell(dist, point, a).crashed)
+            .min_by(|&a, &b| {
+                self.cell(dist, point, a)
+                    .time
+                    .total_cmp(&self.cell(dist, point, b).time)
+            })
+            .expect("at least one algorithm survives")
+    }
+
+    /// Print the figure as a table (one block per distribution).
+    pub fn print(&self) {
+        for &dist in &self.distributions {
+            println!("\n== Fig.1 [{}] — simulated time per n/p ==", dist.name());
+            print!("{:>8}", "n/p");
+            for a in &self.algorithms {
+                print!("{:>12}", a.name());
+            }
+            println!("  winner");
+            for &pt in &self.points {
+                print!("{:>8}", pt.label());
+                for &a in &self.algorithms {
+                    print!("{:>12}", self.cell(dist, pt, a).display_time());
+                }
+                println!("  {}", self.winner(dist, pt).name());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's headline shape on a small machine: GatherM/RFIS win the
+    /// sparse end, hypercube algorithms the small-dense middle (Fig. 1
+    /// discussion §VII-A).
+    #[test]
+    fn fig1_shape_holds_on_small_machine() {
+        let base = RunConfig { p: 1 << 6, ..Default::default() };
+        let fig = run(&base, 4, 1);
+        // every cell either crashed (allowed for nonrobust algos on hard
+        // instances) or produced a correct result
+        for c in &fig.cells {
+            assert!(c.crashed || c.ok, "{:?} {:?} {:?}", c.algorithm, c.distribution, c.point);
+        }
+        // sparse end: gather-style algorithms win
+        let sparse_winner = fig.winner(Distribution::Uniform, NpPoint::Sparse(243));
+        assert!(
+            matches!(sparse_winner, Algorithm::GatherM | Algorithm::Rfis),
+            "sparse winner {sparse_winner:?}"
+        );
+        // the one-element-per-PE point goes to RFIS (paper: >2× faster)
+        let tiny_winner = fig.winner(Distribution::Uniform, NpPoint::Dense(1));
+        assert!(
+            matches!(tiny_winner, Algorithm::Rfis | Algorithm::GatherM),
+            "tiny winner {tiny_winner:?}"
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Figure 2: robust-vs-nonrobust running-time ratios.
+//!
+//! 2a) RQuick / NTB-Quick — the price (Uniform) and payoff (Staggered,
+//!     Mirrored, BucketSorted, DeterDupl) of shuffle + tie-breaking.
+//! 2b) same comparison on a smaller machine (tie-breaking focus).
+//! 2c) RAMS / NDMA-AMS — deterministic message assignment on AllToOne.
+//! 2d) RAMS / NS-SSort — multi-level vs the single-delivery lower bound.
+
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::experiments::{run_cell, NpPoint};
+use crate::input::Distribution;
+
+/// One ratio series: time(robust)/time(nonrobust) per n/p point.
+/// `f64::INFINITY` in the denominator run (nonrobust crash) maps to 0.0 —
+/// the paper plots these as "orders of magnitude" wins.
+pub struct RatioSeries {
+    pub distribution: Distribution,
+    pub points: Vec<NpPoint>,
+    /// (ratio, robust_crashed, nonrobust_crashed)
+    pub ratios: Vec<(f64, bool, bool)>,
+}
+
+pub fn ratio_series(
+    robust: Algorithm,
+    nonrobust: Algorithm,
+    dist: Distribution,
+    base: &RunConfig,
+    points: &[NpPoint],
+    reps: usize,
+) -> RatioSeries {
+    let mut ratios = Vec::with_capacity(points.len());
+    for &pt in points {
+        let r = run_cell(robust, dist, base, pt, reps);
+        let n = run_cell(nonrobust, dist, base, pt, reps);
+        let ratio = if n.crashed {
+            0.0 // nonrobust failed: robust wins "infinitely"
+        } else if r.crashed {
+            f64::INFINITY
+        } else {
+            r.time / n.time
+        };
+        ratios.push((ratio, r.crashed, n.crashed));
+    }
+    RatioSeries { distribution: dist, points: points.to_vec(), ratios }
+}
+
+/// The instances of Fig. 2a/2b.
+pub const QUICK_INSTANCES: [Distribution; 5] = [
+    Distribution::Uniform,
+    Distribution::Staggered,
+    Distribution::Mirrored,
+    Distribution::BucketSorted,
+    Distribution::DeterDupl,
+];
+
+/// The instances of Fig. 2c.
+pub const AMS_INSTANCES: [Distribution; 5] = [
+    Distribution::Uniform,
+    Distribution::AllToOne,
+    Distribution::Staggered,
+    Distribution::BucketSorted,
+    Distribution::DeterDupl,
+];
+
+pub fn fig2a(base: &RunConfig, points: &[NpPoint], reps: usize) -> Vec<RatioSeries> {
+    QUICK_INSTANCES
+        .iter()
+        .map(|&d| ratio_series(Algorithm::RQuick, Algorithm::NtbQuick, d, base, points, reps))
+        .collect()
+}
+
+pub fn fig2c(base: &RunConfig, points: &[NpPoint], reps: usize) -> Vec<RatioSeries> {
+    AMS_INSTANCES
+        .iter()
+        .map(|&d| ratio_series(Algorithm::Rams, Algorithm::NdmaAms, d, base, points, reps))
+        .collect()
+}
+
+pub fn fig2d(base: &RunConfig, points: &[NpPoint], reps: usize) -> Vec<RatioSeries> {
+    vec![ratio_series(Algorithm::Rams, Algorithm::NsSSort, Distribution::Uniform, base, points, reps)]
+}
+
+pub fn print_series(title: &str, series: &[RatioSeries]) {
+    println!("\n== {title} — ratio robust/nonrobust (0 = nonrobust crashed) ==");
+    if series.is_empty() {
+        return;
+    }
+    print!("{:>14}", "instance");
+    for pt in &series[0].points {
+        print!("{:>10}", pt.label());
+    }
+    println!();
+    for s in series {
+        print!("{:>14}", s.distribution.name());
+        for &(ratio, rc, nc) in &s.ratios {
+            let cell = if nc {
+                "NTB✗".to_string()
+            } else if rc {
+                "R✗".to_string()
+            } else {
+                format!("{ratio:.2}")
+            };
+            print!("{cell:>10}");
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2a_uniform_price_is_bounded_and_hard_instances_pay_off() {
+        let base = RunConfig { p: 1 << 6, ..Default::default() };
+        let points = [NpPoint::Dense(64), NpPoint::Dense(256)];
+        let series = fig2a(&base, &points, 1);
+        let uni = &series[0];
+        for &(ratio, rc, _) in &uni.ratios {
+            assert!(!rc);
+            // price of robustness on Uniform: bounded (paper: ≤ ~1.7)
+            assert!(ratio < 2.5, "uniform ratio {ratio}");
+        }
+        // DeterDupl: NTB-Quick crashes or is much slower → ratio ≤ 1ish/0
+        let dd = series.iter().find(|s| s.distribution == Distribution::DeterDupl).unwrap();
+        for &(ratio, rc, _) in &dd.ratios {
+            assert!(!rc, "RQuick must survive DeterDupl");
+            assert!(ratio < 1.0 + 1e-9 || ratio == 0.0, "DeterDupl ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn fig2d_rams_beats_full_ssort() {
+        // "RAMS for Uniform instances is up to 1000 times faster than
+        // SSort" — the splitter phase (gather 16·log p samples per PE to
+        // PE 0, sort, broadcast) alone dwarfs RAMS at scale
+        let base = RunConfig { p: 1 << 8, ..Default::default() };
+        let points = [NpPoint::Dense(256)];
+        let series =
+            ratio_series(Algorithm::Rams, Algorithm::SSort, Distribution::Uniform, &base, &points, 1);
+        let (ratio, rc, nc) = series.ratios[0];
+        assert!(!rc && !nc);
+        assert!(ratio < 1.0, "RAMS/SSort ratio {ratio} (must win)");
+    }
+
+    #[test]
+    fn fig2d_ns_ssort_is_a_lower_bound_at_moderate_np() {
+        // NS-SSort (free splitters) is a *lower bound* for single-delivery
+        // algorithms; at moderate p and n/p RAMS lands within a small
+        // factor of it (the paper's 1.5–7.4× band is at 131 072 cores)
+        let base = RunConfig { p: 1 << 6, ..Default::default() };
+        let points = [NpPoint::Dense(512)];
+        let series = fig2d(&base, &points, 1);
+        let (ratio, rc, nc) = series[0].ratios[0];
+        assert!(!rc && !nc);
+        assert!(ratio.is_finite() && ratio < 8.0, "RAMS/NS-SSort ratio {ratio}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Figure 4 / Appendix H: median-approximation quality of the binary
+//! k-window tree (§III-B) vs Dean et al.'s ternary tree — max rank error
+//! and rank-error variance over repeated runs, with the c·n^−γ fit.
+
+use crate::median::{sequential_binary_estimate, sequential_ternary_estimate};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MedianErrorPoint {
+    pub n: usize,
+    pub max_err: f64,
+    pub var: f64,
+}
+
+/// Rank error |r/(n−1) − 1/2| statistics over `reps` random permutations.
+fn error_stats(
+    n: usize,
+    reps: usize,
+    seed: u64,
+    estimate: impl Fn(&[u64], &mut Rng) -> Option<u64>,
+) -> MedianErrorPoint {
+    let mut rng = Rng::seeded(seed, n as u64);
+    let mut vals: Vec<u64> = (0..n as u64).collect();
+    let mut errs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        rng.shuffle(&mut vals);
+        let est = estimate(&vals, &mut rng).expect("non-empty");
+        let err = (est as f64 / (n - 1) as f64 - 0.5).abs();
+        errs.push(err);
+    }
+    let max_err = errs.iter().copied().fold(0.0, f64::max);
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    let var = errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / errs.len() as f64;
+    MedianErrorPoint { n, max_err, var }
+}
+
+pub struct Fig4 {
+    pub binary: Vec<MedianErrorPoint>,
+    pub ternary: Vec<MedianErrorPoint>,
+    /// fitted (c, γ) for max_err ≈ c·n^−γ
+    pub binary_fit: (f64, f64),
+    pub ternary_fit: (f64, f64),
+}
+
+/// Least-squares fit of log(err) = log c − γ·log n.
+pub fn fit_power_law(points: &[MedianErrorPoint]) -> (f64, f64) {
+    let xs: Vec<f64> = points.iter().map(|p| (p.n as f64).ln()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.max_err.max(1e-12).ln()).collect();
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    (intercept.exp(), -slope)
+}
+
+/// Binary tree over powers of two, ternary over powers of three (the
+/// paper's Fig. 4 setup: inputs up to 2^20, 2000 reps — scale down via
+/// `max_pow` / `reps` for CI).
+pub fn run(max_pow2: u32, reps: usize, seed: u64) -> Fig4 {
+    let binary: Vec<MedianErrorPoint> = (4..=max_pow2)
+        .map(|l| error_stats(1 << l, reps, seed, |v, r| sequential_binary_estimate(v, 2, r)))
+        .collect();
+    let max_pow3 = ((max_pow2 as f64) * 2f64.ln() / 3f64.ln()).floor() as u32;
+    let ternary: Vec<MedianErrorPoint> = (3..=max_pow3)
+        .map(|l| error_stats(3usize.pow(l), reps, seed, |v, r| sequential_ternary_estimate(v, r)))
+        .collect();
+    let binary_fit = fit_power_law(&binary);
+    let ternary_fit = fit_power_law(&ternary);
+    Fig4 { binary, ternary, binary_fit, ternary_fit }
+}
+
+impl Fig4 {
+    pub fn print(&self) {
+        println!("\n== Fig.4 — median approximation quality ==");
+        println!("{:>10} {:>12} {:>12}", "n", "max_err", "variance");
+        println!("-- binary k-window tree (§III-B) --");
+        for p in &self.binary {
+            println!("{:>10} {:>12.5} {:>12.3e}", p.n, p.max_err, p.var);
+        }
+        println!("-- ternary tree (Dean et al.) --");
+        for p in &self.ternary {
+            println!("{:>10} {:>12.5} {:>12.3e}", p.n, p.max_err, p.var);
+        }
+        println!(
+            "fit: binary max_err ≈ {:.2}·n^-{:.3}   (paper: 1.44·n^-0.39)",
+            self.binary_fit.0, self.binary_fit.1
+        );
+        println!(
+            "fit: ternary max_err ≈ {:.2}·n^-{:.3}  (paper: 2·n^-0.37)",
+            self.ternary_fit.0, self.ternary_fit.1
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_beats_ternary_and_errors_decay() {
+        let fig = run(12, 60, 42);
+        // errors decay with n
+        let firstb = fig.binary.first().unwrap().max_err;
+        let lastb = fig.binary.last().unwrap().max_err;
+        assert!(lastb < firstb, "binary error must decay: {firstb} → {lastb}");
+        // fitted exponents land near the paper's (γ ≈ 0.37..0.39)
+        assert!(
+            fig.binary_fit.1 > 0.2 && fig.binary_fit.1 < 0.6,
+            "binary γ {}",
+            fig.binary_fit.1
+        );
+        assert!(
+            fig.ternary_fit.1 > 0.2 && fig.ternary_fit.1 < 0.6,
+            "ternary γ {}",
+            fig.ternary_fit.1
+        );
+    }
+
+    #[test]
+    fn power_law_fit_recovers_known_curve() {
+        let pts: Vec<MedianErrorPoint> = (4..12)
+            .map(|l| {
+                let n = 1usize << l;
+                MedianErrorPoint { n, max_err: 1.5 * (n as f64).powf(-0.4), var: 0.0 }
+            })
+            .collect();
+        let (c, g) = fit_power_law(&pts);
+        assert!((c - 1.5).abs() < 0.05, "c = {c}");
+        assert!((g - 0.4).abs() < 0.01, "γ = {g}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 5 / Appendix K: running-time *ratios* of every algorithm to the
+//! fastest algorithm per (instance, n/p) — the paper's normalized view of
+//! Fig. 1.
+
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::experiments::fig1::{self, Fig1};
+use crate::input::Distribution;
+
+pub struct Fig5 {
+    pub fig1: Fig1,
+}
+
+pub fn run(base: &RunConfig, max_log: u32, reps: usize) -> Fig5 {
+    Fig5 { fig1: fig1::run(base, max_log, reps) }
+}
+
+impl Fig5 {
+    /// ratio of `alg` to the per-point winner (∞ for crashes).
+    pub fn ratio(&self, dist: Distribution, pt: crate::experiments::NpPoint, alg: Algorithm) -> f64 {
+        let best = self.fig1.winner(dist, pt);
+        let b = self.fig1.cell(dist, pt, best).time;
+        let c = self.fig1.cell(dist, pt, alg);
+        if c.crashed {
+            f64::INFINITY
+        } else {
+            c.time / b
+        }
+    }
+
+    pub fn print(&self) {
+        for &dist in &self.fig1.distributions {
+            println!("\n== Fig.5 [{}] — ratio to fastest ==", dist.name());
+            print!("{:>8}", "n/p");
+            for a in &self.fig1.algorithms {
+                print!("{:>12}", a.name());
+            }
+            println!();
+            for &pt in &self.fig1.points {
+                print!("{:>8}", pt.label());
+                for &a in &self.fig1.algorithms {
+                    let r = self.ratio(dist, pt, a);
+                    if r.is_finite() {
+                        print!("{r:>12.2}");
+                    } else {
+                        print!("{:>12}", "CRASH");
+                    }
+                }
+                println!();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::NpPoint;
+
+    #[test]
+    fn winner_has_ratio_one() {
+        let base = RunConfig { p: 1 << 5, ..Default::default() };
+        let fig = run(&base, 3, 1);
+        for &d in &[Distribution::Uniform] {
+            for &pt in &[NpPoint::Dense(1), NpPoint::Dense(8)] {
+                let w = fig.fig1.winner(d, pt);
+                assert!((fig.ratio(d, pt, w) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Experiment harness: one module per paper table/figure (see DESIGN.md §4).
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod tuning;
+
+use crate::algorithms::{run, Algorithm, RunReport};
+use crate::config::RunConfig;
+use crate::input::{generate, Distribution};
+
+/// The n/p sweep grid of the paper's Fig. 1: sparse points 3^-5..3^-1 and
+/// dense powers of two up to `max_log`.
+pub fn np_sweep(max_log: u32) -> Vec<NpPoint> {
+    let mut pts = Vec::new();
+    for k in (1..=5u32).rev() {
+        pts.push(NpPoint::Sparse(3usize.pow(k)));
+    }
+    for l in 0..=max_log {
+        pts.push(NpPoint::Dense(1usize << l));
+    }
+    pts
+}
+
+/// One point on the n/p axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NpPoint {
+    /// `Sparse(s)`: one element on every s-th PE (n/p = 1/s).
+    Sparse(usize),
+    /// `Dense(m)`: m elements per PE.
+    Dense(usize),
+}
+
+impl NpPoint {
+    pub fn apply(&self, cfg: &RunConfig) -> RunConfig {
+        match *self {
+            NpPoint::Sparse(s) => cfg.clone().with_sparsity(s),
+            NpPoint::Dense(m) => cfg.clone().with_n_per_pe(m),
+        }
+    }
+
+    pub fn n_over_p(&self) -> f64 {
+        match *self {
+            NpPoint::Sparse(s) => 1.0 / s as f64,
+            NpPoint::Dense(m) => m as f64,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            NpPoint::Sparse(s) => format!("3^-{}", (s as f64).log(3.0).round() as u32),
+            NpPoint::Dense(m) => format!("2^{}", (m as f64).log2().round() as u32),
+        }
+    }
+}
+
+/// Run one (algorithm, distribution, n/p) cell, averaging `reps` seeds
+/// (the paper averages 5 runs after a warmup).
+pub fn run_cell(
+    alg: Algorithm,
+    dist: Distribution,
+    base: &RunConfig,
+    point: NpPoint,
+    reps: usize,
+) -> CellResult {
+    let mut times = Vec::with_capacity(reps);
+    let mut last: Option<RunReport> = None;
+    for rep in 0..reps.max(1) {
+        let mut cfg = point.apply(base).with_seed(base.seed.wrapping_add(rep as u64 * 7919));
+        // gather-style algorithms concentrate Θ(n) on one PE by design —
+        // the sweep shows their (steep) curve instead of tripping the
+        // robustness memory cap meant for *accidental* concentration
+        if matches!(alg, Algorithm::GatherM | Algorithm::AllGatherM) {
+            cfg.mem_cap_factor = None;
+        }
+        // AllGatherM replicates the whole input on every PE: n·p resident
+        // elements. Past a host-memory threshold that is an OOM on the
+        // real machine too — report it as such instead of thrashing.
+        if alg == Algorithm::AllGatherM && cfg.n_total().saturating_mul(cfg.p) > (1 << 27) {
+            return CellResult {
+                algorithm: alg,
+                distribution: dist,
+                point,
+                time: f64::INFINITY,
+                crashed: true,
+                ok: false,
+                report: None,
+            };
+        }
+        let report = run(alg, &cfg, generate(&cfg, dist));
+        if report.crashed.is_some() {
+            return CellResult {
+                algorithm: alg,
+                distribution: dist,
+                point,
+                time: f64::INFINITY,
+                crashed: true,
+                ok: false,
+                report: Some(report),
+            };
+        }
+        times.push(report.time);
+        last = Some(report);
+    }
+    let report = last.unwrap();
+    CellResult {
+        algorithm: alg,
+        distribution: dist,
+        point,
+        time: times.iter().sum::<f64>() / times.len() as f64,
+        crashed: false,
+        ok: report.validation.ok(),
+        report: Some(report),
+    }
+}
+
+/// One cell of a figure.
+#[derive(Debug)]
+pub struct CellResult {
+    pub algorithm: Algorithm,
+    pub distribution: Distribution,
+    pub point: NpPoint,
+    pub time: f64,
+    pub crashed: bool,
+    pub ok: bool,
+    pub report: Option<RunReport>,
+}
+
+impl CellResult {
+    pub fn display_time(&self) -> String {
+        if self.crashed {
+            "CRASH".to_string()
+        } else {
+            format!("{:.3e}", self.time)
+        }
+    }
+}

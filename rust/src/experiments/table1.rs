@@ -1,0 +1,143 @@
+//! Table I: asymptotic latency (α-count) and communication volume
+//! (β-volume) of the algorithms. We validate the table empirically: the
+//! simulator counts startups and words exactly, so measuring two machine
+//! sizes and checking growth against the predicted exponent reproduces
+//! each row.
+
+use crate::algorithms::{run, Algorithm};
+use crate::config::RunConfig;
+use crate::input::{generate, Distribution};
+
+/// Measured α/β footprint of one run.
+#[derive(Clone, Copy, Debug)]
+pub struct Footprint {
+    pub p: usize,
+    pub n_per_pe: usize,
+    /// max startups on the critical path ≈ messages / p (aggregate proxy)
+    pub messages_per_pe: f64,
+    pub words_per_pe: f64,
+    pub time: f64,
+}
+
+pub fn measure(alg: Algorithm, p: usize, n_per_pe: usize, seed: u64) -> Option<Footprint> {
+    let mut cfg = RunConfig::default().with_p(p).with_n_per_pe(n_per_pe).with_seed(seed);
+    // footprint measurement must not trip the memory cap: gather-style
+    // algorithms legitimately concentrate Θ(n) on one PE
+    cfg.mem_cap_factor = None;
+    let report = run(alg, &cfg, generate(&cfg, Distribution::Uniform));
+    if report.crashed.is_some() {
+        return None;
+    }
+    Some(Footprint {
+        p,
+        n_per_pe,
+        messages_per_pe: report.stats.messages as f64 / p as f64,
+        words_per_pe: report.stats.words as f64 / p as f64,
+        time: report.time,
+    })
+}
+
+/// One row of the empirical Table I.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub algorithm: Algorithm,
+    pub small: Footprint,
+    pub large: Footprint,
+    /// growth of per-PE messages when p quadruples (≈ latency exponent)
+    pub msg_growth: f64,
+    /// growth of per-PE words when p quadruples
+    pub word_growth: f64,
+}
+
+/// Compare footprints at p and 4p (same n/p).
+pub fn run_table(n_per_pe: usize, p_small: usize, seed: u64) -> Vec<Row> {
+    let p_large = p_small * 4;
+    let algos = [
+        Algorithm::GatherM,
+        Algorithm::AllGatherM,
+        Algorithm::Rfis,
+        Algorithm::RQuick,
+        Algorithm::Bitonic,
+        Algorithm::Rams,
+        Algorithm::HykSort,
+        Algorithm::SSort,
+    ];
+    let mut rows = Vec::new();
+    for alg in algos {
+        let (Some(s), Some(l)) = (
+            measure(alg, p_small, n_per_pe, seed),
+            measure(alg, p_large, n_per_pe, seed),
+        ) else {
+            continue;
+        };
+        rows.push(Row {
+            algorithm: alg,
+            small: s,
+            large: l,
+            msg_growth: l.messages_per_pe / s.messages_per_pe,
+            word_growth: l.words_per_pe / s.words_per_pe,
+        });
+    }
+    rows
+}
+
+pub fn print_rows(rows: &[Row]) {
+    println!("\n== Table I (empirical): per-PE α/β footprint growth when p ×4 ==");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>12}",
+        "algorithm", "msgs/PE(p)", "msgs/PE(4p)", "msg ×", "words ×"
+    );
+    for r in rows {
+        println!(
+            "{:>12} {:>12.1} {:>12.1} {:>12.2} {:>12.2}",
+            r.algorithm.name(),
+            r.small.messages_per_pe,
+            r.large.messages_per_pe,
+            r.msg_growth,
+            r.word_growth
+        );
+    }
+    println!("expected: log-latency rows grow ~(log4p/logp); SSort words ~×1, msgs ×4");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_growth_ranks_algorithms() {
+        // n/p must exceed 4·p_small so SSort's per-PE message count is not
+        // capped by the element count (Ω(p) needs p distinct targets)
+        let rows = run_table(1 << 9, 1 << 5, 7);
+        let get = |a: Algorithm| rows.iter().find(|r| r.algorithm == a);
+        // SSort's per-PE message count grows ~linearly with p (Ω(p) row);
+        // RQuick's grows only logarithmically (log²p row)
+        let ss = get(Algorithm::SSort).expect("ssort measured");
+        let rq = get(Algorithm::RQuick).expect("rquick measured");
+        assert!(
+            ss.msg_growth > 2.0,
+            "SSort msgs must grow ~linearly: {}",
+            ss.msg_growth
+        );
+        assert!(
+            rq.msg_growth < ss.msg_growth,
+            "RQuick {} vs SSort {}",
+            rq.msg_growth,
+            ss.msg_growth
+        );
+        // Bitonic moves Θ(n/p·log²p) words per PE — more than RQuick's
+        // Θ(n/p·log p) at the same size
+        let bi = get(Algorithm::Bitonic).expect("bitonic measured");
+        assert!(bi.large.words_per_pe > rq.large.words_per_pe);
+        // AllGatherM words per PE ~ n (grows ×4 with p at fixed n/p)
+        let ag = get(Algorithm::AllGatherM).expect("allgatherm measured");
+        assert!(ag.word_growth > 3.0, "AllGatherM {}", ag.word_growth);
+        // RFIS words per PE ~ n/√p (grows ×2)
+        let rf = get(Algorithm::Rfis).expect("rfis measured");
+        assert!(
+            rf.word_growth > 1.5 && rf.word_growth < 3.0,
+            "RFIS {}",
+            rf.word_growth
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Appendix J2: parameter tuning — RAMS level counts and HykSort k, plus
+//! the selector crossover thresholds.
+
+use crate::algorithms::{hyksort, quick, rams};
+use crate::config::RunConfig;
+use crate::input::{generate, Distribution};
+use crate::localsort::RustSort;
+use crate::sim::Machine;
+
+/// Simulated time of RAMS at a fixed level count.
+pub fn rams_time(cfg: &RunConfig, levels: usize) -> f64 {
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    mach.mem_cap_elems = cfg.mem_cap_elems();
+    let mut data = generate(cfg, Distribution::Uniform);
+    let ac = rams::AmsConfig::robust(cfg).with_levels(levels);
+    rams::sort(&mut mach, &mut data, cfg, &mut RustSort, &ac);
+    mach.time()
+}
+
+/// Simulated time of HykSort at a given k.
+pub fn hyksort_time(cfg: &RunConfig, k: usize) -> f64 {
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    mach.mem_cap_elems = cfg.mem_cap_elems();
+    let mut data = generate(cfg, Distribution::Uniform);
+    let hc = hyksort::HykConfig { k, ..Default::default() };
+    hyksort::sort(&mut mach, &mut data, cfg, &mut RustSort, &hc);
+    mach.time()
+}
+
+/// Simulated time of RQuick at a given median window k.
+pub fn rquick_time(cfg: &RunConfig, window_k: usize) -> f64 {
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    mach.mem_cap_elems = cfg.mem_cap_elems();
+    let mut data = generate(cfg, Distribution::Uniform);
+    let qc = quick::QuickConfig { window_k, ..quick::QuickConfig::robust() };
+    quick::sort(&mut mach, &mut data, cfg, &mut RustSort, &qc);
+    mach.time()
+}
+
+pub struct Tuning {
+    pub p: usize,
+    /// (n_per_pe, level, time) grid
+    pub rams_levels: Vec<(usize, usize, f64)>,
+    /// (n_per_pe, k, time) grid
+    pub hyksort_k: Vec<(usize, usize, f64)>,
+    /// (n_per_pe, window, time) grid
+    pub rquick_window: Vec<(usize, usize, f64)>,
+}
+
+pub fn run(p: usize, sizes: &[usize]) -> Tuning {
+    let base = RunConfig::default().with_p(p);
+    let mut rams_levels = Vec::new();
+    let mut hyksort_k = Vec::new();
+    let mut rquick_window = Vec::new();
+    for &m in sizes {
+        let cfg = base.clone().with_n_per_pe(m);
+        for levels in 1..=3 {
+            rams_levels.push((m, levels, rams_time(&cfg, levels)));
+        }
+        for k in [8usize, 16, 32, 64] {
+            hyksort_k.push((m, k, hyksort_time(&cfg, k)));
+        }
+        for w in [4usize, 16, 64] {
+            rquick_window.push((m, w, rquick_time(&cfg, w)));
+        }
+    }
+    Tuning { p, rams_levels, hyksort_k, rquick_window }
+}
+
+impl Tuning {
+    pub fn print(&self) {
+        println!("\n== App. J2 tuning on p = {} ==", self.p);
+        println!("-- RAMS levels (n/p, l, time) --");
+        for (m, l, t) in &self.rams_levels {
+            println!("{m:>8} l={l}  {t:.3e}");
+        }
+        println!("-- HykSort k --");
+        for (m, k, t) in &self.hyksort_k {
+            println!("{m:>8} k={k:<3} {t:.3e}");
+        }
+        println!("-- RQuick median window --");
+        for (m, w, t) in &self.rquick_window {
+            println!("{m:>8} w={w:<3} {t:.3e}");
+        }
+    }
+
+    /// Best RAMS level per size (paper: more levels help small inputs).
+    pub fn best_rams_level(&self, m: usize) -> usize {
+        self.rams_levels
+            .iter()
+            .filter(|(mm, _, _)| *mm == m)
+            .min_by(|a, b| a.2.total_cmp(&b.2))
+            .map(|(_, l, _)| *l)
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_levels_help_small_inputs_on_bigger_machines() {
+        // the App. J2 finding: more levels speed up RAMS for small inputs
+        // (k ≈ p startups per PE collapse to l·p^(1/l)); with n/p = 256 on
+        // p = 256 the 1-level variant pays ~min(p, n/p) startups per PE
+        let t = run(1 << 8, &[256]);
+        let small_best = t.best_rams_level(256);
+        assert!(small_best >= 2, "small-input best level {small_best}");
+    }
+
+    #[test]
+    fn tuning_grid_is_complete() {
+        let t = run(1 << 6, &[64]);
+        assert_eq!(t.rams_levels.len(), 3);
+        assert_eq!(t.hyksort_k.len(), 4);
+        assert_eq!(t.rquick_window.len(), 3);
+        assert!(t.rams_levels.iter().all(|(_, _, t)| t.is_finite()));
+    }
+}

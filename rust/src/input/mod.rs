@@ -1,0 +1,333 @@
+//! Input instance generators — the ten distributions of the paper's
+//! evaluation (§VII, Appendix J): the seven Helman et al. instances plus
+//! Mirrored, AllToOne, and Reverse, each designed to break a specific
+//! nonrobust mechanism.
+//!
+//! Keys are drawn from `[0, 2^32)` like the paper's 32-bit key ranges;
+//! every element carries a unique origin id (never read by nonrobust
+//! variants).
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::rng::Rng;
+use crate::sim::bit_reverse;
+
+/// Key domain (the paper generates 32-bit keys inside 64-bit elements).
+pub const KEY_RANGE: u64 = 1 << 32;
+
+/// The benchmark input instances.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// Independent uniform random keys.
+    Uniform,
+    /// Independent Gaussian keys (centre 2^31).
+    Gaussian,
+    /// Locally random, globally sorted: PE i draws from bucket i.
+    BucketSorted,
+    /// Deterministic duplicates: halving blocks of identical keys —
+    /// only O(log n) distinct keys (kills algorithms without tie-breaking).
+    DeterDupl,
+    /// 32 local buckets of random size, each filled with one value 0..31.
+    RandDupl,
+    /// All keys equal.
+    Zero,
+    /// √p groups, bit-reversed group-to-bucket mapping.
+    GGroup,
+    /// Helman's staggered instance (hard for hypercube routing).
+    Staggered,
+    /// Bit-reversed PE→bucket mapping: after log(p)/2 naive quicksort
+    /// recursions, √p PEs hold n/√p elements each (§VII).
+    Mirrored,
+    /// All last elements route to PE 0 at the first sample-sort level:
+    /// min(p, n/p) messages hit one PE without DMA (Fig. 2c).
+    AllToOne,
+    /// Globally reverse-sorted.
+    Reverse,
+}
+
+impl Distribution {
+    pub const ALL: [Distribution; 11] = [
+        Distribution::Uniform,
+        Distribution::Gaussian,
+        Distribution::BucketSorted,
+        Distribution::DeterDupl,
+        Distribution::RandDupl,
+        Distribution::Zero,
+        Distribution::GGroup,
+        Distribution::Staggered,
+        Distribution::Mirrored,
+        Distribution::AllToOne,
+        Distribution::Reverse,
+    ];
+
+    /// The four instances Figure 1 plots.
+    pub const FIG1: [Distribution; 4] = [
+        Distribution::Uniform,
+        Distribution::Staggered,
+        Distribution::BucketSorted,
+        Distribution::DeterDupl,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "Uniform",
+            Distribution::Gaussian => "Gaussian",
+            Distribution::BucketSorted => "BucketSorted",
+            Distribution::DeterDupl => "DeterDupl",
+            Distribution::RandDupl => "RandDupl",
+            Distribution::Zero => "Zero",
+            Distribution::GGroup => "g-Group",
+            Distribution::Staggered => "Staggered",
+            Distribution::Mirrored => "Mirrored",
+            Distribution::AllToOne => "AllToOne",
+            Distribution::Reverse => "Reverse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Distribution> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|d| d.name().eq_ignore_ascii_case(s) || d.name().replace('-', "").eq_ignore_ascii_case(&s.replace('-', "")))
+    }
+}
+
+/// Generate the full input: one vector of elements per PE.
+pub fn generate(cfg: &RunConfig, dist: Distribution) -> Vec<Vec<Elem>> {
+    let p = cfg.p;
+    if cfg.sparsity > 1 {
+        return generate_sparse(cfg, dist);
+    }
+    let m = cfg.n_per_pe;
+    (0..p).map(|pe| generate_pe(cfg, dist, pe, m)).collect()
+}
+
+fn generate_sparse(cfg: &RunConfig, dist: Distribution) -> Vec<Vec<Elem>> {
+    (0..cfg.p)
+        .map(|pe| {
+            if pe % cfg.sparsity == 0 {
+                generate_pe(cfg, dist, pe, 1)
+            } else {
+                Vec::new()
+            }
+        })
+        .collect()
+}
+
+/// Keys for one PE (m elements), per the instance definitions.
+fn generate_pe(cfg: &RunConfig, dist: Distribution, pe: usize, m: usize) -> Vec<Elem> {
+    let p = cfg.p as u64;
+    let logp = (cfg.p.max(2)).trailing_zeros().max(1);
+    let mut rng = Rng::seeded(cfg.seed, pe as u64);
+    let bucket_w = (KEY_RANGE / p).max(1);
+    let keys: Vec<u64> = match dist {
+        Distribution::Uniform => (0..m).map(|_| rng.below(KEY_RANGE)).collect(),
+        Distribution::Gaussian => (0..m)
+            .map(|_| {
+                let x = rng.normal() * (KEY_RANGE as f64 / 8.0) + KEY_RANGE as f64 / 2.0;
+                x.clamp(0.0, (KEY_RANGE - 1) as f64) as u64
+            })
+            .collect(),
+        Distribution::BucketSorted => {
+            let lo = pe as u64 * bucket_w;
+            (0..m).map(|_| rng.range(lo, lo + bucket_w)).collect()
+        }
+        Distribution::DeterDupl => {
+            // halving blocks of identical keys: values log2(n), log2(n/2)…
+            let n = (cfg.p * m).max(2);
+            let top = 63 - (n as u64).leading_zeros() as u64; // ≈ log2 n
+            let mut keys = Vec::with_capacity(m);
+            let mut block = m / 2;
+            let mut v = top;
+            while keys.len() < m && block > 0 {
+                for _ in 0..block {
+                    if keys.len() < m {
+                        keys.push(v);
+                    }
+                }
+                block /= 2;
+                v = v.saturating_sub(1);
+            }
+            while keys.len() < m {
+                keys.push(0);
+            }
+            keys
+        }
+        Distribution::RandDupl => {
+            // 32 local buckets of random size, each filled with a value 0..31
+            let mut keys = Vec::with_capacity(m);
+            while keys.len() < m {
+                let remaining = m - keys.len();
+                let size = (rng.below(m.max(1) as u64 / 8 + 1) as usize + 1).min(remaining);
+                let v = rng.below(32);
+                keys.extend(std::iter::repeat(v).take(size));
+            }
+            keys
+        }
+        Distribution::Zero => vec![0; m],
+        Distribution::GGroup => {
+            // g = √p groups; group j draws from bucket bit_reverse(j)
+            let g = (1usize << (logp / 2)).max(1);
+            let group = pe / (cfg.p / g).max(1);
+            let gbits = g.trailing_zeros();
+            let bucket = bit_reverse(group, gbits) as u64;
+            let w = (KEY_RANGE / g as u64).max(1);
+            let lo = bucket * w;
+            (0..m).map(|_| rng.range(lo, lo + w)).collect()
+        }
+        Distribution::Staggered => {
+            // PE i < p/2 → bucket 2i+1; else bucket 2(i − p/2)
+            let half = cfg.p / 2;
+            let bucket = if pe < half.max(1) {
+                (2 * pe + 1) as u64 % p
+            } else {
+                (2 * (pe - half)) as u64
+            };
+            let lo = bucket * bucket_w;
+            (0..m).map(|_| rng.range(lo, lo + bucket_w)).collect()
+        }
+        Distribution::Mirrored => {
+            let bucket = bit_reverse(pe, logp) as u64 % p;
+            let lo = bucket * bucket_w;
+            (0..m).map(|_| rng.range(lo, lo + bucket_w)).collect()
+        }
+        Distribution::AllToOne => {
+            // first m−1 elements: decreasing bucket by PE (reverse-sorted
+            // globally); last element: tiny key p − i → all route to PE 0.
+            let span = KEY_RANGE - p;
+            let w = (span / p).max(1);
+            let lo = p + (p - 1 - pe as u64) * w;
+            let hi = lo + w;
+            let mut keys: Vec<u64> =
+                (0..m.saturating_sub(1)).map(|_| rng.range(lo, hi.min(KEY_RANGE))).collect();
+            keys.push(p - pe as u64);
+            keys
+        }
+        Distribution::Reverse => {
+            // globally reverse sorted, unique-ish keys
+            let lo = (p - 1 - pe as u64) * bucket_w;
+            let step = (bucket_w / m.max(1) as u64).max(1);
+            (0..m).map(|j| lo + (m - 1 - j) as u64 * step).collect()
+        }
+    };
+    keys.into_iter()
+        .enumerate()
+        .map(|(idx, key)| Elem::new(key, pe, idx))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(p: usize, m: usize) -> RunConfig {
+        RunConfig::default().with_p(p).with_n_per_pe(m)
+    }
+
+    #[test]
+    fn all_distributions_generate_right_sizes_and_unique_ids() {
+        let c = cfg(16, 32);
+        for d in Distribution::ALL {
+            let data = generate(&c, d);
+            assert_eq!(data.len(), 16);
+            assert!(data.iter().all(|v| v.len() == 32), "{d:?}");
+            let mut ids: Vec<u64> = data.iter().flatten().map(|e| e.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 512, "{d:?} ids must be unique");
+            assert!(data.iter().flatten().all(|e| e.key < KEY_RANGE), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_only_every_kth_pe() {
+        let c = RunConfig::default().with_p(27).with_sparsity(9);
+        let data = generate(&c, Distribution::Uniform);
+        for (pe, v) in data.iter().enumerate() {
+            assert_eq!(v.len(), usize::from(pe % 9 == 0));
+        }
+        assert_eq!(data.iter().map(Vec::len).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn bucket_sorted_is_globally_sorted_across_pes() {
+        let c = cfg(8, 64);
+        let data = generate(&c, Distribution::BucketSorted);
+        for pe in 0..7 {
+            let max = data[pe].iter().map(|e| e.key).max().unwrap();
+            let min = data[pe + 1].iter().map(|e| e.key).min().unwrap();
+            assert!(max <= min + (KEY_RANGE / 8), "adjacent buckets overlap grossly");
+            assert!(
+                data[pe].iter().map(|e| e.key).min().unwrap()
+                    < data[pe + 1].iter().map(|e| e.key).max().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn deter_dupl_has_few_distinct_keys() {
+        let c = cfg(32, 256);
+        let data = generate(&c, Distribution::DeterDupl);
+        let mut keys: Vec<u64> = data.iter().flatten().map(|e| e.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert!(keys.len() <= 2 * 13 + 2, "distinct keys: {}", keys.len());
+    }
+
+    #[test]
+    fn zero_is_all_equal() {
+        let data = generate(&cfg(4, 16), Distribution::Zero);
+        assert!(data.iter().flatten().all(|e| e.key == 0));
+    }
+
+    #[test]
+    fn all_to_one_last_elements_are_tiny() {
+        let c = cfg(16, 8);
+        let data = generate(&c, Distribution::AllToOne);
+        for (pe, v) in data.iter().enumerate() {
+            let last = v.last().unwrap().key;
+            assert_eq!(last, 16 - pe as u64);
+            // non-last elements are all ≥ p (route high)
+            assert!(v[..v.len() - 1].iter().all(|e| e.key >= 16));
+        }
+    }
+
+    #[test]
+    fn reverse_is_globally_descending_across_pes() {
+        let c = cfg(8, 4);
+        let data = generate(&c, Distribution::Reverse);
+        let flat: Vec<u64> = data.iter().flatten().map(|e| e.key).collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(flat, sorted, "must already be reverse-sorted");
+    }
+
+    #[test]
+    fn mirrored_buckets_are_bit_reversed() {
+        let c = cfg(8, 16);
+        let data = generate(&c, Distribution::Mirrored);
+        let w = KEY_RANGE / 8;
+        for (pe, v) in data.iter().enumerate() {
+            let bucket = bit_reverse(pe, 3) as u64;
+            assert!(v.iter().all(|e| e.key / w == bucket), "pe {pe}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let c = cfg(8, 32);
+        let a = generate(&c, Distribution::Uniform);
+        let b = generate(&c, Distribution::Uniform);
+        assert_eq!(a, b);
+        let c2 = c.clone().with_seed(999);
+        assert_ne!(a, generate(&c2, Distribution::Uniform));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Distribution::parse("uniform"), Some(Distribution::Uniform));
+        assert_eq!(Distribution::parse("g-group"), Some(Distribution::GGroup));
+        assert_eq!(Distribution::parse("ggroup"), Some(Distribution::GGroup));
+        assert_eq!(Distribution::parse("nope"), None);
+    }
+}

@@ -1,0 +1,56 @@
+//! # rmps — Robust Massively Parallel Sorting
+//!
+//! A full reproduction of *Robust Massively Parallel Sorting*
+//! (Axtmann & Sanders, 2016): the four robust algorithms that together
+//! cover the entire input-size spectrum — **GatherM** (very sparse),
+//! **RFIS** (sparse/tiny), **RQuick** (small), **RAMS** (large) — plus every
+//! baseline the paper compares against (AllGatherM, Bitonic, SSort,
+//! HykSort, and the nonrobust NTB-/NDMA- ablation variants).
+//!
+//! The machine substrate is a deterministic single-ported α-β
+//! message-passing simulator ([`sim`]): algorithms move *real elements*
+//! between virtual PEs while per-PE virtual clocks advance by `α + β·len`
+//! per message plus calibrated local work — exactly the cost model the
+//! paper's analysis (Table I / Appendix A) is stated in, so crossover
+//! points and robustness blowups reproduce even though absolute seconds
+//! belong to JUQUEEN.
+//!
+//! The node-local hot phases (batched bitonic local sort and the Super
+//! Scalar Sample Sort classifier) are AOT-compiled JAX/Pallas kernels
+//! loaded and executed through PJRT by [`runtime`]; Python never runs on
+//! the sort path.
+//!
+//! ```no_run
+//! use rmps::prelude::*;
+//!
+//! let cfg = RunConfig { p: 1 << 8, n_per_pe: 1 << 10, ..Default::default() };
+//! let input = rmps::input::generate(&cfg, Distribution::Uniform);
+//! let report = rmps::algorithms::run(Algorithm::RQuick, &cfg, input);
+//! assert!(report.is_globally_sorted);
+//! ```
+
+pub mod algorithms;
+pub mod config;
+pub mod elements;
+pub mod experiments;
+pub mod input;
+pub mod localsort;
+pub mod median;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod shuffle;
+pub mod sim;
+pub mod verify;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{Algorithm, RunReport};
+    pub use crate::config::RunConfig;
+    pub use crate::elements::Elem;
+    pub use crate::input::Distribution;
+    pub use crate::model::CostModel;
+    pub use crate::sim::Machine;
+}

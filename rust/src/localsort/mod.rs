@@ -1,0 +1,84 @@
+//! Node-local sort backends.
+//!
+//! Every algorithm starts by sorting each PE's fragment. Two backends:
+//! pure-Rust pdqsort ([`RustSort`]) and the PJRT-executed Pallas bitonic
+//! network ([`crate::runtime::XlaSort`]), which batches all fragments of a
+//! round into one executable launch — the AOT artifact on the hot path.
+//!
+//! The *virtual* cost charged to PE clocks is the same either way
+//! (`cmp·m·log m`); the backend choice affects only host wallclock, which
+//! is what the §Perf benchmarks measure.
+
+use crate::elements::Elem;
+
+/// A batched local-sort backend. Sorts each run ascending in full
+/// `(key, id)` order.
+pub trait SortBackend {
+    fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]);
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend: `slice::sort_unstable` (pdqsort) per run.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct RustSort;
+
+impl SortBackend for RustSort {
+    fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]) {
+        for run in runs {
+            run.sort_unstable();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-pdqsort"
+    }
+}
+
+/// Sort all of a machine's per-PE fragments with `backend`, charging each
+/// PE the model's sort cost.
+pub fn sort_all(
+    mach: &mut crate::sim::Machine,
+    data: &mut [Vec<Elem>],
+    backend: &mut dyn SortBackend,
+) {
+    for (pe, run) in data.iter().enumerate() {
+        mach.work_sort(pe, run.len());
+    }
+    let mut refs: Vec<&mut Vec<Elem>> = data.iter_mut().collect();
+    backend.sort_runs(&mut refs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+    use crate::rng::Rng;
+    use crate::sim::Machine;
+
+    #[test]
+    fn rust_sort_orders_by_key_then_id() {
+        let mut runs = vec![vec![
+            Elem::with_id(5, 2),
+            Elem::with_id(1, 9),
+            Elem::with_id(5, 1),
+            Elem::with_id(0, 0),
+        ]];
+        let mut refs: Vec<&mut Vec<Elem>> = runs.iter_mut().collect();
+        RustSort.sort_runs(&mut refs);
+        assert!(crate::elements::is_sorted(&runs[0]));
+        assert_eq!(runs[0][1], Elem::with_id(1, 9));
+        assert_eq!(runs[0][2], Elem::with_id(5, 1));
+    }
+
+    #[test]
+    fn sort_all_charges_cost() {
+        let mut mach = Machine::new(2, CostModel::default());
+        let mut rng = Rng::seeded(0, 0);
+        let mut data: Vec<Vec<Elem>> = (0..2)
+            .map(|pe| (0..128).map(|i| Elem::new(rng.next_u64(), pe, i)).collect())
+            .collect();
+        sort_all(&mut mach, &mut data, &mut RustSort);
+        assert!(data.iter().all(|r| crate::elements::is_sorted(r)));
+        assert!(mach.clock(0) > 0.0 && mach.clock(1) > 0.0);
+    }
+}

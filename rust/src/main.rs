@@ -1,0 +1,224 @@
+//! rmps — CLI launcher for the Robust Massively Parallel Sorting
+//! reproduction: single runs, full figure regenerations, and tuning
+//! sweeps on the simulated α-β machine.
+//!
+//! The environment is offline, so argument parsing is hand-rolled
+//! (`--key value` flags) instead of pulling in clap.
+
+use anyhow::{anyhow, bail, Result};
+
+use rmps::algorithms::{run_with_backend, Algorithm};
+use rmps::config::RunConfig;
+use rmps::experiments::{self, NpPoint};
+use rmps::input::{generate, Distribution};
+use rmps::localsort::{RustSort, SortBackend};
+use rmps::model::CostModel;
+
+const USAGE: &str = "\
+rmps — Robust Massively Parallel Sorting (Axtmann & Sanders 2016) reproduction
+
+USAGE: rmps <COMMAND> [--key value ...]
+
+COMMANDS
+  run      one algorithm on one instance
+             --algo A        (default Robust)   GatherM|AllGatherM|RFIS|RQuick|
+                             NTB-Quick|Bitonic|RAMS|NTB-AMS|NDMA-AMS|HykSort|
+                             SSort|NS-SSort|Robust
+             --dist D        (default Uniform)  Uniform|Gaussian|BucketSorted|
+                             DeterDupl|RandDupl|Zero|g-Group|Staggered|
+                             Mirrored|AllToOne|Reverse
+             --n-per-pe M    (default 1024)
+             --sparsity S    (default 1; >1 = one element per S PEs)
+  fig1     running times of all algorithms over the n/p sweep
+             --max-log L     (default 10)    --reps R (default 1)
+  fig2a    RQuick / NTB-Quick ratios        --max-log L
+  fig2b    fig2a on a smaller default machine
+  fig2c    RAMS / NDMA-AMS ratios           --max-log L
+  fig2d    RAMS / NS-SSort ratios           --max-log L
+  fig4     median-tree quality              --max-pow2 (18) --reps (500)
+  fig5     ratios of each algorithm to the fastest --max-log L
+  table1   empirical Table I footprint growth  --n-per-pe --p-small
+  tuning   App. J2 parameter sweeps          --p
+
+MACHINE FLAGS (all commands)
+  --p P            simulated PEs, power of two (default 1024)
+  --alpha A        startup cost (default 4000)
+  --beta B         per-word cost (default 13)
+  --seed S         RNG seed (default 0xC0FFEE)
+  --xla-local-sort use the PJRT/XLA batched local sorter (needs artifacts/)
+";
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    kv: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut kv = std::collections::HashMap::new();
+        let mut flags = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if !a.starts_with("--") {
+                bail!("unexpected argument {a:?}");
+            }
+            let key = a.trim_start_matches("--").to_string();
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                kv.insert(key, argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key);
+                i += 1;
+            }
+        }
+        Ok(Self { kv, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.kv.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("invalid value for --{key}: {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+}
+
+fn machine_config(a: &Args) -> Result<RunConfig> {
+    Ok(RunConfig {
+        p: a.get("p", 1usize << 10)?,
+        seed: a.get("seed", 0xC0FFEEu64)?,
+        cost: CostModel {
+            alpha: a.get("alpha", 4000.0)?,
+            beta: a.get("beta", 13.0)?,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+}
+
+fn backend(a: &Args) -> Result<Box<dyn SortBackend>> {
+    if a.flag("xla-local-sort") {
+        Ok(Box::new(rmps::runtime::XlaSort::from_env()?))
+    } else {
+        Ok(Box::new(RustSort))
+    }
+}
+
+fn dense_points(max_log: u32) -> Vec<NpPoint> {
+    (0..=max_log).step_by(2).map(|l| NpPoint::Dense(1 << l)).collect()
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let a = Args::parse(&argv[1..])?;
+
+    match cmd.as_str() {
+        "run" => {
+            let algo = a.get_str("algo", "Robust");
+            let dist = a.get_str("dist", "Uniform");
+            let alg =
+                Algorithm::parse(&algo).ok_or_else(|| anyhow!("unknown algorithm {algo}"))?;
+            let d =
+                Distribution::parse(&dist).ok_or_else(|| anyhow!("unknown distribution {dist}"))?;
+            let mut cfg = machine_config(&a)?;
+            let sparsity: usize = a.get("sparsity", 1)?;
+            if sparsity > 1 {
+                cfg = cfg.with_sparsity(sparsity);
+            } else {
+                cfg = cfg.with_n_per_pe(a.get("n-per-pe", 1024)?);
+            }
+            let mut be = backend(&a)?;
+            let input = generate(&cfg, d);
+            let report = run_with_backend(alg, &cfg, input, be.as_mut());
+            println!(
+                "algo={} dist={} p={} n/p={:.4}",
+                alg.name(),
+                d.name(),
+                cfg.p,
+                cfg.n_over_p()
+            );
+            println!(
+                "simulated time  : {:.4e} (α={}, β={})",
+                report.time, cfg.cost.alpha, cfg.cost.beta
+            );
+            println!("messages        : {}", report.stats.messages);
+            println!("words moved     : {}", report.stats.words);
+            println!("max PE memory   : {}", report.stats.max_mem_elems);
+            println!("host wallclock  : {:.1} ms", report.wall_ms);
+            match &report.crashed {
+                Some(c) => println!("CRASHED         : {c}"),
+                None => println!(
+                    "sorted={} balanced={} imbalance ε={:.3}",
+                    report.validation.ok(),
+                    report.validation.balanced,
+                    report.validation.imbalance.epsilon
+                ),
+            }
+        }
+        "fig1" => {
+            let cfg = machine_config(&a)?;
+            let fig = experiments::fig1::run(&cfg, a.get("max-log", 10u32)?, a.get("reps", 1)?);
+            fig.print();
+        }
+        "fig2a" | "fig2b" => {
+            let mut cfg = machine_config(&a)?;
+            if cmd == "fig2b" && !a.kv.contains_key("p") {
+                cfg.p = 1 << 8; // the paper's smaller 8 192-core machine
+            }
+            let series =
+                experiments::fig2::fig2a(&cfg, &dense_points(a.get("max-log", 10u32)?), 1);
+            experiments::fig2::print_series("Fig.2a/b RQuick vs NTB-Quick", &series);
+        }
+        "fig2c" => {
+            let cfg = machine_config(&a)?;
+            let series =
+                experiments::fig2::fig2c(&cfg, &dense_points(a.get("max-log", 10u32)?), 1);
+            experiments::fig2::print_series("Fig.2c RAMS vs NDMA-AMS", &series);
+        }
+        "fig2d" => {
+            let cfg = machine_config(&a)?;
+            let series =
+                experiments::fig2::fig2d(&cfg, &dense_points(a.get("max-log", 12u32)?), 1);
+            experiments::fig2::print_series("Fig.2d RAMS vs NS-SSort", &series);
+        }
+        "fig4" => {
+            experiments::fig4::run(
+                a.get("max-pow2", 18u32)?,
+                a.get("reps", 500usize)?,
+                a.get("seed", 42u64)?,
+            )
+            .print();
+        }
+        "fig5" => {
+            let cfg = machine_config(&a)?;
+            experiments::fig5::run(&cfg, a.get("max-log", 10u32)?, 1).print();
+        }
+        "table1" => {
+            let rows = experiments::table1::run_table(
+                a.get("n-per-pe", 64usize)?,
+                a.get("p-small", 1usize << 6)?,
+                a.get("seed", 7u64)?,
+            );
+            experiments::table1::print_rows(&rows);
+        }
+        "tuning" => {
+            experiments::tuning::run(a.get("p", 1usize << 8)?, &[16, 256, 4096]).print();
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! Binary-tree median approximation (§III-B): the k-window reduction.
+//!
+//! Window slots may be "undefined": entries running off the left of a local
+//! array are treated as −∞, off the right as +∞ (the paper's convention),
+//! encoded in a `u128` with a +1 offset so both sentinels order correctly.
+
+use crate::elements::{Elem, Key};
+use crate::rng::Rng;
+use crate::sim::{bcast_cost, Machine};
+
+/// −∞ sentinel (undefined slots left of the data).
+const NEG: u128 = 0;
+/// +∞ sentinel (undefined slots right of the data).
+const POS: u128 = u64::MAX as u128 + 2;
+
+#[inline]
+fn enc(k: Key) -> u128 {
+    k as u128 + 1
+}
+
+#[inline]
+fn dec(v: u128) -> Option<Key> {
+    if v == NEG || v == POS {
+        None
+    } else {
+        Some((v - 1) as u64)
+    }
+}
+
+/// A sorted k-window of (possibly undefined) key slots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Window(pub Vec<u128>);
+
+impl Window {
+    /// The leaf contribution of a PE holding sorted keys `a` (§III-B):
+    /// the k slots around the local median, with sentinel padding and a
+    /// coin flip between ⌊m/2⌋ / ⌈m/2⌉ centring for odd m.
+    pub fn leaf(a: &[Key], k: usize, rng: &mut Rng) -> Self {
+        debug_assert!(k >= 2 && k % 2 == 0);
+        debug_assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        let m = a.len();
+        // centre position (1-indexed half point); coin flip for odd m
+        let c = if m % 2 == 0 {
+            m / 2
+        } else if rng.coin() {
+            m / 2
+        } else {
+            m / 2 + 1
+        };
+        // 1-indexed slots c − k/2 + 1 ..= c + k/2
+        let mut w = Vec::with_capacity(k);
+        for s in 0..k {
+            let pos1 = c as i64 - (k / 2) as i64 + 1 + s as i64; // 1-indexed
+            if pos1 < 1 {
+                w.push(NEG);
+            } else if pos1 as usize > m {
+                w.push(POS);
+            } else {
+                w.push(enc(a[pos1 as usize - 1]));
+            }
+        }
+        Window(w)
+    }
+
+    /// Internal node: merge two k-windows, keep the centre k slots.
+    pub fn merge(&self, other: &Window) -> Window {
+        let k = self.0.len();
+        debug_assert_eq!(k, other.0.len());
+        let mut merged = Vec::with_capacity(2 * k);
+        let (a, b) = (&self.0, &other.0);
+        let (mut i, mut j) = (0, 0);
+        while i < k && j < k {
+            if a[i] <= b[j] {
+                merged.push(a[i]);
+                i += 1;
+            } else {
+                merged.push(b[j]);
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&a[i..]);
+        merged.extend_from_slice(&b[j..]);
+        Window(merged[k / 2..k / 2 + k].to_vec())
+    }
+
+    /// Root: coin flip between the two central slots (a[k/2], a[k/2+1]
+    /// 1-indexed). Falls back to the nearest defined slot; `None` if the
+    /// whole window is undefined (no elements anywhere).
+    pub fn root_pick(&self, rng: &mut Rng) -> Option<Key> {
+        let k = self.0.len();
+        let first = k / 2 - 1; // 0-indexed a[k/2]
+        let pick = if rng.coin() { first } else { first + 1 };
+        if let Some(v) = dec(self.0[pick]) {
+            return Some(v);
+        }
+        // nearest defined slot
+        for d in 1..k {
+            for idx in [pick.wrapping_sub(d), pick + d] {
+                if idx < k {
+                    if let Some(v) = dec(self.0[idx]) {
+                        return Some(v);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    pub fn is_all_undefined(&self) -> bool {
+        self.0.iter().all(|&v| v == NEG || v == POS)
+    }
+}
+
+/// Distributed median approximation over a PE group (§III-B), implemented
+/// as an *allreduce butterfly* of k-windows — "in most MPI implementations
+/// this algorithm can be implemented by defining an appropriate reduction
+/// operator": log q pairwise exchange rounds, every member ends with the
+/// same merged window, no separate broadcast. O((α + β·k)·log q).
+///
+/// `local[pe]` must be sorted by key (global PE indexing). Returns `None`
+/// iff the group holds no elements at all (the RQuick "ISEMPTY(s)" exit).
+pub fn median_binary(
+    mach: &mut Machine,
+    pes: &[usize],
+    local: &[Vec<Elem>],
+    k: usize,
+    rng: &mut Rng,
+) -> Option<Key> {
+    assert!(pes.len().is_power_of_two());
+    let dim = pes.len().trailing_zeros();
+    let size = pes.len();
+    let mut win: Vec<Window> = pes
+        .iter()
+        .map(|&pe| {
+            let keys: Vec<Key> = local[pe].iter().map(|e| e.key).collect();
+            mach.work_linear(pe, k); // window extraction
+            Window::leaf(&keys, k, rng)
+        })
+        .collect();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        let snapshot = win.clone();
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(pes[r], pes[pr], k, k);
+            }
+            win[r] = snapshot[r].merge(&snapshot[pr]);
+            mach.work_linear(pes[r], 2 * k);
+        }
+    }
+    // all members hold the identical window; one shared coin flip
+    debug_assert!(win.iter().all(|w| w == &win[0]));
+    win[0].root_pick(rng)
+}
+
+/// Binomial-tree variant (reduce-to-root + broadcast): kept for the cost
+/// comparison in benches — ~2× the α-depth of the butterfly.
+pub fn median_binary_tree_bcast(
+    mach: &mut Machine,
+    pes: &[usize],
+    local: &[Vec<Elem>],
+    k: usize,
+    rng: &mut Rng,
+) -> Option<Key> {
+    assert!(pes.len().is_power_of_two());
+    let dim = pes.len().trailing_zeros();
+    let size = pes.len();
+    let mut win: Vec<Option<Window>> = pes
+        .iter()
+        .map(|&pe| {
+            let keys: Vec<Key> = local[pe].iter().map(|e| e.key).collect();
+            mach.work_linear(pe, k);
+            Some(Window::leaf(&keys, k, rng))
+        })
+        .collect();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        for r in 0..size {
+            if r & bit != 0 && r & (bit - 1) == 0 {
+                let dst = r & !bit;
+                let w = win[r].take().expect("window already sent");
+                mach.send(pes[r], pes[dst], k);
+                let acc = win[dst].as_mut().expect("reducer holds window");
+                *acc = acc.merge(&w);
+                mach.work_linear(pes[dst], 2 * k);
+            }
+        }
+    }
+    let root = win[0].take().expect("root window");
+    let result = root.root_pick(rng);
+    bcast_cost(mach, pes, 0, 1);
+    result
+}
+
+/// Sequential binary-tree estimate over `n = 2^d` single-element leaves —
+/// the Fig. 4 / App. H benchmark harness (no Machine involved).
+pub fn sequential_binary_estimate(vals: &[Key], k: usize, rng: &mut Rng) -> Option<Key> {
+    assert!(vals.len().is_power_of_two());
+    let mut level: Vec<Window> = vals
+        .iter()
+        .map(|&v| Window::leaf(&[v], k, rng))
+        .collect();
+    while level.len() > 1 {
+        level = level
+            .chunks(2)
+            .map(|pair| pair[0].merge(&pair[1]))
+            .collect();
+    }
+    level[0].root_pick(rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+    use crate::sim::Cube;
+
+    fn rng() -> Rng {
+        Rng::seeded(42, 0)
+    }
+
+    #[test]
+    fn leaf_window_even() {
+        // a = [1..6], m=6, k=2 → slots a[3], a[4] (1-indexed) = 3, 4
+        let w = Window::leaf(&[1, 2, 3, 4, 5, 6], 2, &mut rng());
+        assert_eq!(w.0, vec![enc(3), enc(4)]);
+    }
+
+    #[test]
+    fn leaf_window_pads_with_sentinels() {
+        let w = Window::leaf(&[7], 4, &mut rng());
+        // m=1 odd: centre 0 or 1; either way one real slot, NEG left, POS right
+        let real: Vec<_> = w.0.iter().filter_map(|&v| dec(v)).collect();
+        assert_eq!(real, vec![7]);
+        assert!(w.0[0] == NEG);
+        assert!(*w.0.last().unwrap() == POS);
+    }
+
+    #[test]
+    fn leaf_window_empty_is_all_undefined() {
+        let w = Window::leaf(&[], 4, &mut rng());
+        assert!(w.is_all_undefined());
+        assert_eq!(w.root_pick(&mut rng()), None);
+    }
+
+    #[test]
+    fn merge_keeps_centre() {
+        let a = Window(vec![enc(1), enc(2), enc(3), enc(4)]);
+        let b = Window(vec![enc(2), enc(3), enc(5), enc(9)]);
+        // merged: 1 2 2 3 3 4 5 9 → centre 4: 2 3 3 4
+        assert_eq!(a.merge(&b).0, vec![enc(2), enc(3), enc(3), enc(4)]);
+    }
+
+    #[test]
+    fn merge_sentinels_order_correctly() {
+        let a = Window(vec![NEG, enc(10)]);
+        let b = Window(vec![enc(5), POS]);
+        // merged: NEG 5 10 POS → centre 2: 5, 10
+        assert_eq!(a.merge(&b).0, vec![enc(5), enc(10)]);
+    }
+
+    #[test]
+    fn distributed_median_is_reasonable() {
+        let p = 64;
+        let m = 64;
+        let mut mach = Machine::new(p, CostModel::default());
+        let mut r = rng();
+        // PE-local sorted runs of a global 0..(p·m) permutation-ish uniform
+        let mut all: Vec<u64> = (0..(p * m) as u64).collect();
+        r.shuffle(&mut all);
+        let local: Vec<Vec<Elem>> = (0..p)
+            .map(|pe| {
+                let mut v: Vec<Elem> = all[pe * m..(pe + 1) * m]
+                    .iter()
+                    .map(|&k| Elem::new(k, pe, 0))
+                    .collect();
+                v.sort();
+                v
+            })
+            .collect();
+        let est = median_binary(&mut mach, &Cube::whole(p).pe_vec(), &local, 8, &mut r)
+            .expect("non-empty");
+        let n = (p * m) as f64;
+        let rel = (est as f64 / n - 0.5).abs();
+        assert!(rel < 0.15, "estimate rank error {rel}");
+        // latency: O(α log p) — must stay well under α·p
+        assert!(mach.time() < CostModel::default().alpha * p as f64 / 2.0);
+    }
+
+    #[test]
+    fn distributed_median_empty_cube_returns_none() {
+        let p = 4;
+        let mut mach = Machine::new(p, CostModel::default());
+        let local: Vec<Vec<Elem>> = vec![Vec::new(); p];
+        assert_eq!(
+            median_binary(&mut mach, &Cube::whole(p).pe_vec(), &local, 4, &mut rng()),
+            None
+        );
+    }
+
+    #[test]
+    fn sequential_estimate_close_to_true_median() {
+        let mut r = rng();
+        let n = 1 << 12;
+        let mut vals: Vec<u64> = (0..n as u64).collect();
+        r.shuffle(&mut vals);
+        let mut errs = Vec::new();
+        for _ in 0..20 {
+            let est = sequential_binary_estimate(&vals, 2, &mut r).unwrap();
+            errs.push((est as f64 / n as f64 - 0.5).abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        // App. H: error ~ 1.44·n^-0.39 ≈ 0.055 for n = 4096
+        assert!(mean_err < 0.1, "mean rank error {mean_err}");
+    }
+}

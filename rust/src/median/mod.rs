@@ -1,0 +1,16 @@
+//! Approximate median selection with a single reduction (§III-B, App. H).
+//!
+//! The paper's splitter selector: every PE contributes the k-window around
+//! its local median; a binomial-tree reduction merges windows keeping the
+//! centre k; the root coin-flips between the two central candidates. Total
+//! cost O(α·log p) — the ingredient that keeps RQuick's latency at
+//! O(log²p) where median-of-medians pays Ω(β·p).
+//!
+//! [`ternary`] implements Dean et al.'s median-of-three tree for the
+//! Fig. 4 / App. H comparison.
+
+pub mod binary;
+pub mod ternary;
+
+pub use binary::{median_binary, sequential_binary_estimate, Window};
+pub use ternary::sequential_ternary_estimate;

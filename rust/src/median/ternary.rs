@@ -1,0 +1,99 @@
+//! Ternary median tree of Dean et al. [16] — the App. H / Fig. 4 baseline:
+//! leaves are single elements, each internal node forwards the median of
+//! its three children. Rank error ≈ 2·n^−0.37 (the paper's binary k-window
+//! tree beats it at ≈ 1.44·n^−0.39).
+
+use crate::elements::Key;
+use crate::rng::Rng;
+
+/// Median of three keys.
+#[inline]
+fn med3(a: Key, b: Key, c: Key) -> Key {
+    a.max(b).min(a.min(b).max(c))
+}
+
+/// Sequential ternary-tree estimate over `n = 3^h` elements. The input is
+/// randomly permuted by the caller (the estimator is only truthful for
+/// random permutations, §III-B); `rng` is used for nothing here but kept
+/// for signature symmetry with the binary estimator.
+pub fn sequential_ternary_estimate(vals: &[Key], _rng: &mut Rng) -> Option<Key> {
+    let n = vals.len();
+    if n == 0 {
+        return None;
+    }
+    assert!(is_power_of_three(n), "ternary tree needs n = 3^h");
+    let mut level: Vec<Key> = vals.to_vec();
+    while level.len() > 1 {
+        level = level.chunks(3).map(|c| med3(c[0], c[1], c[2])).collect();
+    }
+    Some(level[0])
+}
+
+/// `true` iff `n` is a power of three.
+pub fn is_power_of_three(mut n: usize) -> bool {
+    if n == 0 {
+        return false;
+    }
+    while n % 3 == 0 {
+        n /= 3;
+    }
+    n == 1
+}
+
+/// Largest power of three ≤ `n`.
+pub fn pow3_below(n: usize) -> usize {
+    let mut p = 1;
+    while p * 3 <= n {
+        p *= 3;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn med3_cases() {
+        assert_eq!(med3(1, 2, 3), 2);
+        assert_eq!(med3(3, 1, 2), 2);
+        assert_eq!(med3(2, 3, 1), 2);
+        assert_eq!(med3(5, 5, 1), 5);
+        assert_eq!(med3(7, 7, 7), 7);
+    }
+
+    #[test]
+    fn power_of_three_detection() {
+        assert!(is_power_of_three(1));
+        assert!(is_power_of_three(3));
+        assert!(is_power_of_three(81));
+        assert!(!is_power_of_three(0));
+        assert!(!is_power_of_three(2));
+        assert!(!is_power_of_three(12));
+        assert_eq!(pow3_below(100), 81);
+        assert_eq!(pow3_below(3), 3);
+    }
+
+    #[test]
+    fn estimate_is_near_median_for_random_permutation() {
+        let mut rng = Rng::seeded(7, 0);
+        let n = 3usize.pow(8); // 6561
+        let mut vals: Vec<u64> = (0..n as u64).collect();
+        let mut errs = Vec::new();
+        for _ in 0..30 {
+            rng.shuffle(&mut vals);
+            let est = sequential_ternary_estimate(&vals, &mut rng).unwrap();
+            errs.push((est as f64 / n as f64 - 0.5).abs());
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        // Dean et al.: error ~ 2·n^-0.37 ≈ 0.077 for n = 6561
+        assert!(mean < 0.12, "mean rank error {mean}");
+    }
+
+    #[test]
+    fn estimate_singleton() {
+        let mut rng = Rng::seeded(0, 0);
+        assert_eq!(sequential_ternary_estimate(&[42], &mut rng), Some(42));
+        assert_eq!(sequential_ternary_estimate(&[], &mut rng), None);
+    }
+}

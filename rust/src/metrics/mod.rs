@@ -1,0 +1,101 @@
+//! Run metrics: everything the paper's evaluation reports — simulated time,
+//! startup counts (the α axis), communication volume (the β axis), local
+//! work, memory high-water marks, and imbalance.
+
+/// Aggregate counters accumulated by the [`crate::sim::Machine`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    /// Total messages sent (each pays one α).
+    pub messages: u64,
+    /// Total words moved (each pays one β).
+    pub words: u64,
+    /// Total local work charged (instruction units).
+    pub local_work: f64,
+    /// Maximum number of elements simultaneously resident on any PE.
+    pub max_mem_elems: usize,
+    /// Maximum messages sent or received by a single PE in a single
+    /// irregular round (the DMA analysis of Fig. 2c watches this).
+    pub max_degree: usize,
+}
+
+impl Stats {
+    pub fn merge_from(&mut self, o: &Stats) {
+        self.messages += o.messages;
+        self.words += o.words;
+        self.local_work += o.local_work;
+        self.max_mem_elems = self.max_mem_elems.max(o.max_mem_elems);
+        self.max_degree = self.max_degree.max(o.max_degree);
+    }
+}
+
+/// Load-imbalance summary over final PE loads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Imbalance {
+    pub max_load: usize,
+    pub min_load: usize,
+    pub avg_load: f64,
+    /// `max_load / avg_load - 1` (paper's ε); 0 for perfectly balanced.
+    pub epsilon: f64,
+}
+
+impl Imbalance {
+    pub fn from_loads(loads: impl IntoIterator<Item = usize>) -> Self {
+        let mut max = 0usize;
+        let mut min = usize::MAX;
+        let mut sum = 0usize;
+        let mut count = 0usize;
+        for l in loads {
+            max = max.max(l);
+            min = min.min(l);
+            sum += l;
+            count += 1;
+        }
+        if count == 0 {
+            return Self::default();
+        }
+        let avg = sum as f64 / count as f64;
+        Self {
+            max_load: max,
+            min_load: min,
+            avg_load: avg,
+            epsilon: if avg > 0.0 { max as f64 / avg - 1.0 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_balanced() {
+        let im = Imbalance::from_loads([4, 4, 4, 4]);
+        assert_eq!(im.epsilon, 0.0);
+        assert_eq!(im.max_load, 4);
+    }
+
+    #[test]
+    fn imbalance_skewed() {
+        let im = Imbalance::from_loads([8, 0, 0, 0]);
+        assert_eq!(im.max_load, 8);
+        assert_eq!(im.min_load, 0);
+        assert!((im.epsilon - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_empty() {
+        let im = Imbalance::from_loads([]);
+        assert_eq!(im.max_load, 0);
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = Stats { messages: 1, words: 10, local_work: 5.0, max_mem_elems: 3, max_degree: 2 };
+        let b = Stats { messages: 2, words: 1, local_work: 1.0, max_mem_elems: 9, max_degree: 1 };
+        a.merge_from(&b);
+        assert_eq!(a.messages, 3);
+        assert_eq!(a.words, 11);
+        assert_eq!(a.max_mem_elems, 9);
+        assert_eq!(a.max_degree, 2);
+    }
+}

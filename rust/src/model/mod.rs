@@ -1,0 +1,109 @@
+//! The paper's model of computation (Appendix A): symmetric single-ported
+//! message passing. Sending a message of `l` machine words costs
+//! `α + l·β`; local work is measured in machine instructions (unit 1),
+//! with `α ≫ β ≫ 1`.
+//!
+//! Default constants are calibrated to JUQUEEN (the paper's testbed):
+//! PowerPC A2 at 1.6 GHz, 2.5 µs worst-case MPI latency (≈ 4000 cycles)
+//! and an effective per-core bandwidth of ≈ 1 GB/s (≈ 13 cycles per 8-byte
+//! word). Absolute values only scale the time axis; the *ratios* α/β and
+//! β/1 determine every crossover in the paper's figures.
+
+/// α-β cost model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Message startup overhead (machine instructions).
+    pub alpha: f64,
+    /// Per-word transfer time (machine instructions). One element = one word.
+    pub beta: f64,
+    /// Local work per element-comparison (merge step, partition step).
+    pub cmp: f64,
+    /// Full-duplex exchanges: a pairwise sendrecv of `l1`/`l2` words costs
+    /// `α + β·max(l1,l2)` when `true` (telephone model), `α + β·(l1+l2)`
+    /// when `false`. BlueGene/Q links are bidirectional → default `true`.
+    pub duplex: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            alpha: 4000.0,
+            beta: 13.0,
+            cmp: 2.0,
+            duplex: true,
+        }
+    }
+}
+
+impl CostModel {
+    /// Cost of one message of `l` words.
+    #[inline]
+    pub fn msg(&self, l: usize) -> f64 {
+        self.alpha + self.beta * l as f64
+    }
+
+    /// Cost of a pairwise exchange sending `l_out` and receiving `l_in`.
+    #[inline]
+    pub fn xchg(&self, l_out: usize, l_in: usize) -> f64 {
+        if self.duplex {
+            self.alpha + self.beta * l_out.max(l_in) as f64
+        } else {
+            self.alpha + self.beta * (l_out + l_in) as f64
+        }
+    }
+
+    /// Local sorting cost for `m` elements: `cmp · m·log2(m)`.
+    #[inline]
+    pub fn sort_work(&self, m: usize) -> f64 {
+        if m <= 1 {
+            return self.cmp;
+        }
+        self.cmp * m as f64 * (m as f64).log2()
+    }
+
+    /// Local merge/partition cost for `m` elements: `cmp · m`.
+    #[inline]
+    pub fn linear_work(&self, m: usize) -> f64 {
+        self.cmp * m as f64
+    }
+
+    /// Cost of a `log k`-deep branchless classifier pass over `m` elements.
+    #[inline]
+    pub fn classify_work(&self, m: usize, k: usize) -> f64 {
+        self.cmp * m as f64 * (k.max(2) as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_respect_alpha_gg_beta_gg_one() {
+        let c = CostModel::default();
+        assert!(c.alpha > 10.0 * c.beta);
+        assert!(c.beta > 1.0);
+    }
+
+    #[test]
+    fn msg_cost_is_affine() {
+        let c = CostModel::default();
+        assert_eq!(c.msg(0), c.alpha);
+        assert_eq!(c.msg(10) - c.msg(0), 10.0 * c.beta);
+    }
+
+    #[test]
+    fn duplex_exchange_takes_max() {
+        let c = CostModel { duplex: true, ..Default::default() };
+        assert_eq!(c.xchg(10, 4), c.alpha + 10.0 * c.beta);
+        let h = CostModel { duplex: false, ..Default::default() };
+        assert_eq!(h.xchg(10, 4), h.alpha + 14.0 * h.beta);
+    }
+
+    #[test]
+    fn sort_work_monotone() {
+        let c = CostModel::default();
+        assert!(c.sort_work(0) <= c.sort_work(2));
+        assert!(c.sort_work(100) < c.sort_work(1000));
+    }
+}

@@ -1,0 +1,257 @@
+//! Super Scalar Sample Sort partitioning (Sanders & Winkel [26]) with the
+//! tie-breaking extension of App. G — the local phase of RAMS and SSort.
+//!
+//! The classifier is a branchless descent of a perfect splitter tree
+//! (eytzinger layout): `log k` fused compare/select steps per element. The
+//! tie-breaking variant descends on strict lexicographic `(key, id)` order,
+//! which *simulates unique keys* — the reason RAMS survives DeterDupl/Zero.
+//!
+//! Mirrors `python/compile/kernels/classify.py` (the PJRT-accelerated
+//! version); both are validated against each other in `rust/tests/`.
+
+use crate::elements::{Elem, Key};
+
+/// A perfect splitter tree over `S = 2^h − 1` splitters.
+#[derive(Clone, Debug)]
+pub struct SplitterTree {
+    /// eytzinger layout, 1-based; index 0 unused (mirrors the kernel).
+    keys: Vec<Key>,
+    ids: Vec<u64>,
+    /// packed (key, id) as u128 — one branchless compare per tie-breaking
+    /// descent level instead of key/id cascades (§Perf).
+    packed: Vec<u128>,
+    /// number of splitters S.
+    s: usize,
+    /// tree height h = log2(S+1).
+    h: u32,
+}
+
+#[inline]
+fn pack(e: &Elem) -> u128 {
+    ((e.key as u128) << 64) | e.id as u128
+}
+
+impl SplitterTree {
+    /// Build from splitters sorted in `(key, id)` order. `S+1` must be a
+    /// power of two (callers pad by repeating the last splitter).
+    pub fn new(sorted: &[Elem]) -> Self {
+        let s = sorted.len();
+        assert!((s + 1).is_power_of_two(), "need 2^h - 1 splitters, got {s}");
+        debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        let mut keys = vec![0; s + 1];
+        let mut ids = vec![0; s + 1];
+        // recursive BFS fill == eytzinger layout
+        fn fill(
+            sorted: &[Elem],
+            keys: &mut [Key],
+            ids: &mut [u64],
+            t: usize,
+            lo: usize,
+            hi: i64,
+        ) {
+            if t >= keys.len() || hi < lo as i64 {
+                return;
+            }
+            let mid = (lo as i64 + hi) as usize / 2;
+            keys[t] = sorted[mid].key;
+            ids[t] = sorted[mid].id;
+            fill(sorted, keys, ids, 2 * t, lo, mid as i64 - 1);
+            fill(sorted, keys, ids, 2 * t + 1, mid + 1, hi);
+        }
+        if s > 0 {
+            fill(sorted, &mut keys, &mut ids, 1, 0, s as i64 - 1);
+            keys[0] = keys[1];
+            ids[0] = ids[1];
+        }
+        let packed = keys
+            .iter()
+            .zip(&ids)
+            .map(|(&k, &i)| ((k as u128) << 64) | i as u128)
+            .collect();
+        Self { keys, ids, packed, s, h: (s + 1).trailing_zeros() }
+    }
+
+    /// Number of buckets (S + 1).
+    #[inline]
+    pub fn buckets(&self) -> usize {
+        self.s + 1
+    }
+
+    /// Nonrobust bucket index: number of splitters with key strictly less
+    /// than `key` (equal keys all land in the splitter's own bucket — the
+    /// behaviour that melts down on duplicate-heavy instances).
+    #[inline]
+    pub fn classify_key(&self, key: Key) -> usize {
+        let mut t = 1usize;
+        for _ in 0..self.h {
+            t = 2 * t + usize::from(self.keys[t] < key);
+        }
+        t - (self.s + 1)
+    }
+
+    /// Tie-breaking bucket index on strict lexicographic `(key, id)` order
+    /// (App. G): equal keys spread across buckets by origin id. The
+    /// (key, id) pair is compared as one packed u128 — branchless.
+    #[inline]
+    pub fn classify_tb(&self, e: &Elem) -> usize {
+        let pe = pack(e);
+        let mut t = 1usize;
+        for _ in 0..self.h {
+            t = 2 * t + usize::from(self.packed[t] < pe);
+        }
+        t - (self.s + 1)
+    }
+}
+
+/// Partition `data` into `tree.buckets()` buckets. `tie_break` selects the
+/// robust (App. G) or nonrobust classifier. Preserves input order inside
+/// each bucket (stable).
+pub fn partition(data: &[Elem], tree: &SplitterTree, tie_break: bool) -> Vec<Vec<Elem>> {
+    let nb = tree.buckets();
+    // two passes: count then place — cache-friendlier than push-per-bucket
+    let mut counts = vec![0usize; nb];
+    let mut labels = Vec::with_capacity(data.len());
+    if tie_break {
+        for e in data {
+            let b = tree.classify_tb(e);
+            labels.push(b as u32);
+            counts[b] += 1;
+        }
+    } else {
+        for e in data {
+            let b = tree.classify_key(e.key);
+            labels.push(b as u32);
+            counts[b] += 1;
+        }
+    }
+    let mut out: Vec<Vec<Elem>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (e, &b) in data.iter().zip(&labels) {
+        out[b as usize].push(*e);
+    }
+    out
+}
+
+/// Pick `s` evenly spaced splitters from a globally sorted sample
+/// (`sample[⌈(i+1)·len/(s+1)⌉−1`-ish positions), padding to `2^h − 1` by
+/// repeating the maximum — the shape [`SplitterTree::new`] requires.
+pub fn pick_splitters(sample: &[Elem], s: usize) -> Vec<Elem> {
+    debug_assert!((s + 1).is_power_of_two());
+    if sample.is_empty() {
+        // degenerate: all-identical sentinel splitters (single real bucket)
+        return vec![Elem::with_id(Key::MAX, u64::MAX); s];
+    }
+    let mut out = Vec::with_capacity(s);
+    for i in 1..=s {
+        let idx = (i * sample.len()) / (s + 1);
+        out.push(sample[idx.min(sample.len() - 1)]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elems(keys: &[u64]) -> Vec<Elem> {
+        keys.iter().enumerate().map(|(i, &k)| Elem::new(k, 0, i)).collect()
+    }
+
+    fn sorted_elems(keys: &[u64]) -> Vec<Elem> {
+        let mut v = elems(keys);
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn classify_matches_linear_scan() {
+        let spl = sorted_elems(&[10, 20, 30, 40, 50, 60, 70]);
+        let tree = SplitterTree::new(&spl);
+        for key in [0u64, 10, 11, 20, 35, 70, 71, 100] {
+            let expect = spl.iter().filter(|s| s.key < key).count();
+            assert_eq!(tree.classify_key(key), expect, "key {key}");
+        }
+    }
+
+    #[test]
+    fn classify_tb_matches_linear_scan_with_duplicates() {
+        let mut spl: Vec<Elem> = vec![
+            Elem::with_id(5, 10),
+            Elem::with_id(5, 20),
+            Elem::with_id(5, 30),
+        ];
+        spl.sort();
+        let tree = SplitterTree::new(&spl);
+        for id in [0u64, 10, 15, 20, 25, 30, 99] {
+            let e = Elem::with_id(5, id);
+            let expect = spl.iter().filter(|s| **s < e).count();
+            assert_eq!(tree.classify_tb(&e), expect, "id {id}");
+        }
+        // keys off the splitter value ignore ids
+        assert_eq!(tree.classify_tb(&Elem::with_id(4, 999)), 0);
+        assert_eq!(tree.classify_tb(&Elem::with_id(6, 0)), 3);
+    }
+
+    #[test]
+    fn partition_is_ordered_and_complete() {
+        let spl = sorted_elems(&[100, 200, 300]);
+        let tree = SplitterTree::new(&spl);
+        let data = elems(&[50, 150, 250, 350, 100, 200, 300, 0]);
+        let parts = partition(&data, &tree, false);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(Vec::len).sum();
+        assert_eq!(total, data.len());
+        // bucket membership: all keys in bucket b are in (spl[b-1], spl[b]]
+        for (b, part) in parts.iter().enumerate() {
+            for e in part {
+                if b > 0 {
+                    assert!(e.key >= spl[b - 1].key);
+                }
+                if b < 3 {
+                    assert!(e.key <= spl[b].key);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tb_partition_balances_all_equal_keys() {
+        // the Zero instance in miniature: 64 equal keys, ids 0..64,
+        // splitters at ids 15/31/47 → four buckets of 16
+        let mut spl: Vec<Elem> =
+            [15u64, 31, 47].iter().map(|&i| Elem::with_id(0, i)).collect();
+        spl.sort();
+        let tree = SplitterTree::new(&spl);
+        let data: Vec<Elem> = (0..64).map(|i| Elem::with_id(0, i)).collect();
+        let parts = partition(&data, &tree, true);
+        assert_eq!(parts.iter().map(Vec::len).collect::<Vec<_>>(), vec![16, 16, 16, 16]);
+        // nonrobust classifier dumps everything into one bucket
+        let parts = partition(&data, &tree, false);
+        assert_eq!(parts[0].len(), 64);
+    }
+
+    #[test]
+    fn pick_splitters_even_spread() {
+        let sample = sorted_elems(&(0..100u64).collect::<Vec<_>>());
+        let spl = pick_splitters(&sample, 3);
+        let keys: Vec<u64> = spl.iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![25, 50, 75]);
+    }
+
+    #[test]
+    fn pick_splitters_empty_sample() {
+        let spl = pick_splitters(&[], 7);
+        assert_eq!(spl.len(), 7);
+        let tree = SplitterTree::new(&spl);
+        assert_eq!(tree.classify_key(12345), 0);
+    }
+
+    #[test]
+    fn single_splitter_tree() {
+        let spl = sorted_elems(&[42]);
+        let tree = SplitterTree::new(&spl);
+        assert_eq!(tree.buckets(), 2);
+        assert_eq!(tree.classify_key(41), 0);
+        assert_eq!(tree.classify_key(42), 0);
+        assert_eq!(tree.classify_key(43), 1);
+    }
+}

@@ -1,0 +1,280 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and run them on
+//! the request path (Python is never involved at runtime).
+//!
+//! Pipeline per artifact: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects in proto form; the text parser
+//! reassigns ids (see python/compile/aot.py and /opt/xla-example).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+use crate::elements::{key_from_i64, key_to_i64, Elem};
+use crate::localsort::SortBackend;
+
+/// One entry of `artifacts/manifest.txt` (`name kind batch n splitters`).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub kind: String,
+    pub batch: usize,
+    pub n: usize,
+    pub splitters: usize,
+}
+
+/// Parse the whitespace-separated manifest (written by `compile/aot.py`).
+fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactMeta>> {
+    let mut out = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 4 {
+            return Err(eyre!("manifest line {} malformed: {line:?}", lineno + 1));
+        }
+        out.insert(
+            f[0].to_string(),
+            ArtifactMeta {
+                kind: f[1].to_string(),
+                batch: f[2].parse().context("batch")?,
+                n: f[3].parse().context("n")?,
+                splitters: f.get(4).and_then(|s| s.parse().ok()).unwrap_or(0),
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Lazily-compiled store of PJRT executables keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: HashMap<String, ArtifactMeta>,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (built by `make artifacts`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let manifest = parse_manifest(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?,
+        )?;
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, execs: HashMap::new() })
+    }
+
+    /// Default artifact location: `$RMPS_ARTIFACTS` or `./artifacts`.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("RMPS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and fetch an executable by artifact name.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+            )
+            .map_err(|e| eyre!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| eyre!("compiling {name}: {e:?}"))?;
+            self.execs.insert(name.to_string(), exe);
+        }
+        Ok(&self.execs[name])
+    }
+
+    /// Execute the `sort_pairs` artifact `name` on a full (B, N) batch of
+    /// i64 keys/ids. Returns sorted (keys, ids) row-major.
+    pub fn run_sort_pairs(
+        &mut self,
+        name: &str,
+        b: usize,
+        n: usize,
+        keys: &[i64],
+        ids: &[i64],
+    ) -> Result<(Vec<i64>, Vec<i64>)> {
+        debug_assert_eq!(keys.len(), b * n);
+        let kl = xla::Literal::vec1(keys)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let il = xla::Literal::vec1(ids)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[kl, il])
+            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let (ok, oi) = result.to_tuple2().map_err(|e| eyre!("{e:?}"))?;
+        Ok((
+            ok.to_vec::<i64>().map_err(|e| eyre!("{e:?}"))?,
+            oi.to_vec::<i64>().map_err(|e| eyre!("{e:?}"))?,
+        ))
+    }
+
+    /// Execute a plain `sort` artifact on a (B, N) batch of i64 keys.
+    pub fn run_sort(&mut self, name: &str, b: usize, n: usize, keys: &[i64]) -> Result<Vec<i64>> {
+        debug_assert_eq!(keys.len(), b * n);
+        let kl = xla::Literal::vec1(keys)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[kl])
+            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
+        out.to_vec::<i64>().map_err(|e| eyre!("{e:?}"))
+    }
+
+    /// Execute a `classify` artifact: bucket index per element.
+    pub fn run_classify(
+        &mut self,
+        name: &str,
+        b: usize,
+        n: usize,
+        keys: &[i64],
+        tree: &[i64],
+    ) -> Result<Vec<i32>> {
+        let kl = xla::Literal::vec1(keys)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let tl = xla::Literal::vec1(tree);
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[kl, tl])
+            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))
+    }
+}
+
+/// Padding sentinel: sorts after every real (key, id) pair.
+const PAD_KEY: i64 = i64::MAX;
+const PAD_ID: i64 = i64::MAX;
+
+/// The PJRT-backed batched local-sort backend: groups fragments by padded
+/// row size, fills (B, N) batches, and launches the Pallas bitonic-network
+/// executable once per batch. Fragments longer than the largest artifact
+/// row fall back to pdqsort.
+pub struct XlaSort {
+    rt: Runtime,
+    /// `sort_pairs` artifacts as (row_n, batch, name), ascending by n.
+    sizes: Vec<(usize, usize, String)>,
+    /// number of PJRT launches (batching effectiveness, for §Perf).
+    pub exec_calls: usize,
+}
+
+impl XlaSort {
+    pub fn new(rt: Runtime) -> Result<Self> {
+        let mut sizes: Vec<(usize, usize, String)> = rt
+            .manifest
+            .iter()
+            .filter(|(_, m)| m.kind == "sort_pairs")
+            .map(|(name, m)| (m.n, m.batch, name.clone()))
+            .collect();
+        if sizes.is_empty() {
+            return Err(eyre!("no sort_pairs artifacts in manifest — run `make artifacts`"));
+        }
+        sizes.sort();
+        Ok(Self { rt, sizes, exec_calls: 0 })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::new(Runtime::from_env()?)
+    }
+
+    /// Smallest artifact row size that fits `len`, if any.
+    fn pick(&self, len: usize) -> Option<(usize, usize, String)> {
+        self.sizes.iter().find(|(n, _, _)| *n >= len).cloned()
+    }
+
+    fn sort_group(&mut self, group: &mut [&mut Vec<Elem>], n: usize, b: usize, name: &str) {
+        for chunk in group.chunks_mut(b) {
+            let mut keys = vec![PAD_KEY; b * n];
+            let mut ids = vec![PAD_ID; b * n];
+            for (r, run) in chunk.iter().enumerate() {
+                for (c, e) in run.iter().enumerate() {
+                    keys[r * n + c] = key_to_i64(e.key);
+                    ids[r * n + c] = e.id as i64;
+                }
+            }
+            let (ok, oi) = self
+                .rt
+                .run_sort_pairs(name, b, n, &keys, &ids)
+                .expect("PJRT sort_pairs execution failed");
+            self.exec_calls += 1;
+            for (r, run) in chunk.iter_mut().enumerate() {
+                let len = run.len();
+                run.clear();
+                for c in 0..len {
+                    let k = key_from_i64(ok[r * n + c]);
+                    let id = oi[r * n + c] as u64;
+                    run.push(Elem::with_id(k, id));
+                }
+            }
+        }
+    }
+}
+
+impl SortBackend for XlaSort {
+    fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]) {
+        // group run indices by target artifact
+        let mut groups: HashMap<String, (usize, usize, Vec<usize>)> = HashMap::new();
+        let mut fallback: Vec<usize> = Vec::new();
+        for (i, run) in runs.iter().enumerate() {
+            if run.len() <= 1 {
+                continue;
+            }
+            match self.pick(run.len()) {
+                Some((n, b, name)) => {
+                    groups.entry(name).or_insert_with(|| (n, b, Vec::new())).2.push(i);
+                }
+                None => fallback.push(i),
+            }
+        }
+        let mut names: Vec<String> = groups.keys().cloned().collect();
+        names.sort();
+        for name in names {
+            let (n, b, idxs) = groups.remove(&name).unwrap();
+            // move the runs out, sort the batch, move them back — avoids
+            // aliasing &mut into `runs` at multiple indices
+            let mut taken: Vec<(usize, Vec<Elem>)> =
+                idxs.iter().map(|&i| (i, std::mem::take(runs[i]))).collect();
+            {
+                let mut refs: Vec<&mut Vec<Elem>> =
+                    taken.iter_mut().map(|(_, v)| v).collect();
+                self.sort_group(&mut refs, n, b, &name);
+            }
+            for (i, v) in taken {
+                *runs[i] = v;
+            }
+        }
+        for i in fallback {
+            runs[i].sort_unstable();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas-bitonic"
+    }
+}

@@ -1,0 +1,188 @@
+//! Randomized shuffling on hypercubes (§III-A, Appendix C).
+//!
+//! The folklore skew-removal: Helman et al. send every element to a random
+//! PE directly (α·p + β·n/p). The paper's small-input variant routes along
+//! the hypercube instead — each PE splits its local data into two random
+//! halves per dimension and ships one half to the partner — for
+//! O((α + β·n/p)·log p) total.
+
+use crate::elements::Elem;
+use crate::rng::Rng;
+use crate::sim::{Cube, Machine};
+
+/// Hypercube random redistribution over `cube`. `data` is indexed by
+/// global PE; only cube members are touched. After the call, every element
+/// resides on a uniformly random member (up to the balanced-split
+/// constraint, which the paper prefers for slightly better balance).
+pub fn hypercube_shuffle(
+    mach: &mut Machine,
+    cube: Cube,
+    data: &mut [Vec<Elem>],
+    rng: &mut Rng,
+) {
+    let size = cube.size();
+    let base = cube.base();
+    for j in (0..cube.dim).rev() {
+        let bit = 1usize << j;
+        // each member splits locally into keep/send halves
+        let mut outgoing: Vec<Vec<Elem>> = vec![Vec::new(); size];
+        for r in 0..size {
+            let pe = base + r;
+            let local = std::mem::take(&mut data[pe]);
+            mach.work_linear(pe, local.len());
+            // balanced random split (App. C's "split local data in two
+            // random halves"): a *partial* Fisher–Yates that randomises
+            // only the kept prefix — half the RNG draws and moves of a
+            // full shuffle, same uniform-random-subset distribution (§Perf)
+            let mut v = local;
+            let half = v.len() / 2;
+            let extra = v.len() % 2 == 1 && rng.coin();
+            let cut = half + usize::from(extra);
+            for i in 0..cut {
+                let j = i + rng.below((v.len() - i) as u64) as usize;
+                v.swap(i, j);
+            }
+            let send = v.split_off(cut);
+            data[pe] = v;
+            outgoing[r] = send;
+        }
+        // pairwise exchange along dimension j
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(base + r, base + pr, outgoing[r].len(), outgoing[pr].len());
+            }
+        }
+        for r in 0..size {
+            let pr = r ^ bit;
+            let incoming = std::mem::take(&mut outgoing[pr]);
+            data[base + r].extend(incoming);
+            mach.note_mem(base + r, data[base + r].len(), "hypercube shuffle");
+        }
+    }
+}
+
+/// Direct shuffle (Helman et al. [5]): each element is sent straight to a
+/// uniformly random PE — one irregular round costing up to α·p startups
+/// per PE. Used by SSort-style baselines.
+pub fn direct_shuffle(
+    mach: &mut Machine,
+    cube: Cube,
+    data: &mut [Vec<Elem>],
+    rng: &mut Rng,
+) {
+    let size = cube.size();
+    let base = cube.base();
+    let mut buckets: Vec<Vec<Vec<Elem>>> = (0..size).map(|_| vec![Vec::new(); size]).collect();
+    for r in 0..size {
+        let pe = base + r;
+        for e in std::mem::take(&mut data[pe]) {
+            let t = rng.below(size as u64) as usize;
+            buckets[r][t].push(e);
+        }
+        mach.work_linear(pe, buckets[r].iter().map(Vec::len).sum());
+    }
+    let recv = crate::sim::alltoallv(mach, &cube.pe_vec(), buckets);
+    for r in 0..size {
+        let pe = base + r;
+        let mut v: Vec<Elem> = recv[r].iter().flatten().copied().collect();
+        data[pe].append(&mut v);
+        mach.note_mem(pe, data[pe].len(), "direct shuffle");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+
+    fn machine(p: usize) -> Machine {
+        Machine::new(p, CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true })
+    }
+
+    fn skewed_input(p: usize, n: usize) -> Vec<Vec<Elem>> {
+        // everything on PE 0 — maximal skew
+        let mut data = vec![Vec::new(); p];
+        data[0] = (0..n).map(|i| Elem::new(i as u64, 0, i)).collect();
+        data
+    }
+
+    #[test]
+    fn hypercube_shuffle_preserves_multiset() {
+        let p = 16;
+        let mut mach = machine(p);
+        let mut rng = Rng::seeded(1, 0);
+        let mut data = skewed_input(p, 512);
+        let mut before: Vec<Elem> = data.iter().flatten().copied().collect();
+        hypercube_shuffle(&mut mach, Cube::whole(p), &mut data, &mut rng);
+        let mut after: Vec<Elem> = data.iter().flatten().copied().collect();
+        before.sort();
+        after.sort();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn hypercube_shuffle_balances_skew() {
+        let p = 16;
+        let n = 1024;
+        let mut mach = machine(p);
+        let mut rng = Rng::seeded(2, 0);
+        let mut data = skewed_input(p, n);
+        hypercube_shuffle(&mut mach, Cube::whole(p), &mut data, &mut rng);
+        let avg = n / p;
+        for (pe, v) in data.iter().enumerate() {
+            assert!(
+                v.len() <= 2 * avg && v.len() >= avg / 2,
+                "PE {pe} holds {} (avg {avg})",
+                v.len()
+            );
+        }
+    }
+
+    #[test]
+    fn hypercube_shuffle_latency_is_logarithmic() {
+        let p = 64;
+        let mut mach = machine(p);
+        let mut rng = Rng::seeded(3, 0);
+        let mut data: Vec<Vec<Elem>> = (0..p)
+            .map(|pe| (0..8).map(|i| Elem::new(i as u64, pe, i)).collect())
+            .collect();
+        hypercube_shuffle(&mut mach, Cube::whole(p), &mut data, &mut rng);
+        // 6 dims → ~6 α-rounds, far below the α·p of a direct exchange
+        assert!(mach.time() < 10.0 * 100.0 + 600.0, "time {}", mach.time());
+    }
+
+    #[test]
+    fn direct_shuffle_preserves_multiset_and_costs_p_startups() {
+        let p = 8;
+        let mut mach = machine(p);
+        let mut rng = Rng::seeded(4, 0);
+        let mut data: Vec<Vec<Elem>> = (0..p)
+            .map(|pe| (0..64).map(|i| Elem::new((pe * 64 + i) as u64, pe, i)).collect())
+            .collect();
+        let before: usize = data.iter().map(Vec::len).sum();
+        direct_shuffle(&mut mach, Cube::whole(p), &mut data, &mut rng);
+        let after: usize = data.iter().map(Vec::len).sum();
+        assert_eq!(before, after);
+        assert!(mach.stats.messages as usize >= p * (p - 1) / 2);
+    }
+
+    #[test]
+    fn shuffle_on_subcube_leaves_rest_alone() {
+        let p = 8;
+        let mut mach = machine(p);
+        let mut rng = Rng::seeded(5, 0);
+        let mut data: Vec<Vec<Elem>> = (0..p)
+            .map(|pe| vec![Elem::new(pe as u64, pe, 0)])
+            .collect();
+        let cube = Cube { prefix: 0, dim: 2 }; // PEs 0..4
+        hypercube_shuffle(&mut mach, cube, &mut data, &mut rng);
+        for pe in 4..8 {
+            assert_eq!(data[pe].len(), 1);
+            assert_eq!(data[pe][0].key, pe as u64);
+            assert_eq!(mach.clock(pe), 0.0);
+        }
+        let low: usize = data[..4].iter().map(Vec::len).sum();
+        assert_eq!(low, 4);
+    }
+}

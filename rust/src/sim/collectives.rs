@@ -1,0 +1,453 @@
+//! Collective operations on PE groups, with the textbook hypercube /
+//! binomial-tree costs the paper assumes (§II, Appendix B).
+//!
+//! Groups are explicit ordered PE lists (`pes: &[usize]`) so the same
+//! collectives serve contiguous subcubes (quicksort, RAMS) *and* strided
+//! groups (RFIS' grid rows and columns). Hypercube collectives require a
+//! power-of-two group size, like the paper's algorithms.
+//!
+//! Data-moving collectives really move the elements; scalar collectives
+//! really combine the values — the simulator never "fakes" a result, it
+//! only *prices* it.
+
+use crate::elements::{merge, Elem};
+use crate::sim::Machine;
+
+fn assert_pow2(pes: &[usize]) -> u32 {
+    assert!(pes.len().is_power_of_two(), "hypercube collective needs 2^d members");
+    pes.len().trailing_zeros()
+}
+
+/// Provenance-tracking result of [`all_gather_merge`]: the three sorted
+/// runs each PE ends with — elements that arrived from lower-ranked group
+/// members (`left`), its own elements (`own`), and elements from
+/// higher-ranked members (`right`). RFIS' tie-breaking (App. F) needs
+/// exactly this split; plain AllGatherM output is `left ⊕ own ⊕ right`.
+#[derive(Clone, Debug, Default)]
+pub struct GatheredRuns {
+    pub left: Vec<Elem>,
+    pub own: Vec<Elem>,
+    pub right: Vec<Elem>,
+}
+
+impl GatheredRuns {
+    /// All elements in sorted order (the classical all-gather-merge output).
+    pub fn merged(&self) -> Vec<Elem> {
+        merge(&merge(&self.left, &self.own), &self.right)
+    }
+
+    pub fn total(&self) -> usize {
+        self.left.len() + self.own.len() + self.right.len()
+    }
+}
+
+/// Hypercube all-gather-merge over the group (O(β·q·|a| + α·log q)).
+///
+/// `local[pe]` is each member's sorted input run (indexed by *global* PE
+/// number). Returns per-member [`GatheredRuns`] in group rank order.
+pub fn all_gather_merge(
+    mach: &mut Machine,
+    pes: &[usize],
+    local: &[Vec<Elem>],
+) -> Vec<GatheredRuns> {
+    let dim = assert_pow2(pes);
+    let size = pes.len();
+    let mut runs: Vec<GatheredRuns> = pes
+        .iter()
+        .map(|&pe| GatheredRuns { own: local[pe].clone(), ..Default::default() })
+        .collect();
+    // full merged content per member, exchanged wholesale each round
+    let mut full: Vec<Vec<Elem>> = pes.iter().map(|&pe| local[pe].clone()).collect();
+
+    for j in 0..dim {
+        let bit = 1usize << j;
+        // move the current state out: each member reads its own old run
+        // and its partner's — no cloning of the payload (§Perf)
+        let old: Vec<Vec<Elem>> = std::mem::take(&mut full);
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(pes[r], pes[pr], old[r].len(), old[pr].len());
+            }
+        }
+        full = (0..size)
+            .map(|r| {
+                let pr = r ^ bit;
+                let incoming = &old[pr];
+                if pr < r {
+                    runs[r].left = merge(&runs[r].left, incoming);
+                } else {
+                    runs[r].right = merge(&runs[r].right, incoming);
+                }
+                let merged = merge(&old[r], incoming);
+                mach.work_linear(pes[r], merged.len());
+                mach.note_mem(pes[r], merged.len(), "all-gather-merge");
+                merged
+            })
+            .collect();
+    }
+    runs
+}
+
+/// Binomial-tree gather-merge to the group's rank-0 member (GatherM).
+/// Returns the merged data (resident on `pes[0]`).
+pub fn gather_merge(mach: &mut Machine, pes: &[usize], local: &[Vec<Elem>]) -> Vec<Elem> {
+    let dim = assert_pow2(pes);
+    let size = pes.len();
+    let mut cur: Vec<Option<Vec<Elem>>> =
+        pes.iter().map(|&pe| Some(local[pe].clone())).collect();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        for r in 0..size {
+            // senders this round: lowest set bit of r is `bit`
+            if r & bit != 0 && r & (bit - 1) == 0 {
+                let dst = r & !bit;
+                let data = cur[r].take().expect("sender already gave data away");
+                mach.send(pes[r], pes[dst], data.len());
+                let acc = cur[dst].as_mut().expect("receiver must hold data");
+                let merged = merge(acc, &data);
+                mach.work_linear(pes[dst], merged.len());
+                mach.note_mem(pes[dst], merged.len(), "gather-merge");
+                *acc = merged;
+            }
+        }
+    }
+    cur[0].take().expect("root holds the result")
+}
+
+/// Binomial broadcast of `l` words from group rank `root_r`.
+/// Only prices the communication; the caller distributes the value.
+pub fn bcast_cost(mach: &mut Machine, pes: &[usize], root_r: usize, l: usize) {
+    let size = pes.len();
+    if size <= 1 {
+        return;
+    }
+    let dim = assert_pow2(pes);
+    // relabel so the root is rank 0
+    let rel = |r: usize| r ^ root_r;
+    let mut have: Vec<bool> = (0..size).map(|r| rel(r) == 0).collect();
+    for j in (0..dim).rev() {
+        let bit = 1usize << j;
+        for r in 0..size {
+            if have[r] && rel(r) & (bit - 1) == 0 && rel(r) & bit == 0 {
+                let partner = rel(rel(r) | bit); // undo relabel
+                if !have[partner] {
+                    mach.send(pes[r], pes[partner], l);
+                    have[partner] = true;
+                }
+            }
+        }
+    }
+    debug_assert!(have.iter().all(|&h| h));
+}
+
+/// Hypercube all-reduce of one `u64` per member with operator `op`.
+/// Returns the reduced value (same on every member). Cost: (α+β)·log q.
+pub fn allreduce_u64(
+    mach: &mut Machine,
+    pes: &[usize],
+    vals: &[u64],
+    op: impl Fn(u64, u64) -> u64,
+) -> u64 {
+    let dim = assert_pow2(pes);
+    let size = pes.len();
+    let mut cur: Vec<u64> = pes.iter().map(|&pe| vals[pe]).collect();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        let snapshot = cur.clone();
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(pes[r], pes[pr], 1, 1);
+            }
+            cur[r] = op(snapshot[r], snapshot[pr]);
+        }
+    }
+    let v = cur[0];
+    debug_assert!(cur.iter().all(|&x| x == v));
+    v
+}
+
+/// Element-wise all-reduce of equal-length `u64` vectors (RFIS' scattered
+/// rank reduction uses this along grid rows). `vals` is indexed by global
+/// PE. Cost: (α + β·len)·log q.
+pub fn allreduce_vec_u64(
+    mach: &mut Machine,
+    pes: &[usize],
+    vals: &mut [Vec<u64>],
+    op: impl Fn(u64, u64) -> u64,
+) {
+    let dim = assert_pow2(pes);
+    let size = pes.len();
+    let len = vals[pes[0]].len();
+    debug_assert!(pes.iter().all(|&pe| vals[pe].len() == len));
+    for j in 0..dim {
+        let bit = 1usize << j;
+        let snapshot: Vec<Vec<u64>> = pes.iter().map(|&pe| vals[pe].clone()).collect();
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(pes[r], pes[pr], len, len);
+            }
+            let dst = &mut vals[pes[r]];
+            for (d, s) in dst.iter_mut().zip(snapshot[pr].iter()) {
+                *d = op(*d, *s);
+            }
+            mach.work_linear(pes[r], len);
+        }
+    }
+}
+
+/// Hypercube exclusive prefix sum + total over one `usize` per member.
+/// Returns `(exclusive_prefix, total)` per member in group rank order.
+pub fn prefix_sum(mach: &mut Machine, pes: &[usize], vals: &[usize]) -> Vec<(usize, usize)> {
+    let dim = assert_pow2(pes);
+    let size = pes.len();
+    let mut pre: Vec<usize> = vec![0; size];
+    let mut tot: Vec<usize> = pes.iter().map(|&pe| vals[pe]).collect();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        let pre_snap = pre.clone();
+        let tot_snap = tot.clone();
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(pes[r], pes[pr], 1, 1);
+            }
+            if pr < r {
+                pre[r] = pre_snap[r] + tot_snap[pr];
+            }
+            tot[r] = tot_snap[r] + tot_snap[pr];
+        }
+    }
+    pre.into_iter().zip(tot).collect()
+}
+
+/// Vector variant of [`prefix_sum`]: per-member vector of `usize` counts
+/// (e.g. one slot per bucket); returns `(exclusive_prefix_vec, total_vec)`
+/// per member in rank order. Cost: (α + β·len)·log q.
+pub fn prefix_sum_vec(
+    mach: &mut Machine,
+    pes: &[usize],
+    vals: &[Vec<usize>],
+) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let dim = assert_pow2(pes);
+    let size = pes.len();
+    let len = vals[0].len();
+    debug_assert!(vals.iter().all(|v| v.len() == len));
+    let mut pre: Vec<Vec<usize>> = vec![vec![0; len]; size];
+    let mut tot: Vec<Vec<usize>> = vals.to_vec();
+    for j in 0..dim {
+        let bit = 1usize << j;
+        let pre_snap = pre.clone();
+        let tot_snap = tot.clone();
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                mach.xchg(pes[r], pes[pr], len, len);
+            }
+            for i in 0..len {
+                if pr < r {
+                    pre[r][i] = pre_snap[r][i] + tot_snap[pr][i];
+                }
+                tot[r][i] = tot_snap[r][i] + tot_snap[pr][i];
+            }
+            mach.work_linear(pes[r], len);
+        }
+    }
+    pre.into_iter().zip(tot).collect()
+}
+
+/// Direct (non-hypercube) all-to-all personalized exchange: member `r`
+/// sends `send[r][t]` to member `t` in one irregular round — the Ω(q)
+/// startup pattern of single-level algorithms (SSort).
+/// Returns `recv[t][r] = send[r][t]`.
+pub fn alltoallv(
+    mach: &mut Machine,
+    pes: &[usize],
+    send: Vec<Vec<Vec<Elem>>>,
+) -> Vec<Vec<Vec<Elem>>> {
+    let size = pes.len();
+    debug_assert_eq!(send.len(), size);
+    let mut msgs = Vec::new();
+    for (r, targets) in send.iter().enumerate() {
+        debug_assert_eq!(targets.len(), size);
+        for (t, data) in targets.iter().enumerate() {
+            if t != r && !data.is_empty() {
+                msgs.push((pes[r], pes[t], data.len()));
+            }
+        }
+    }
+    mach.route_round(&msgs);
+    let mut recv: Vec<Vec<Vec<Elem>>> = (0..size).map(|_| vec![Vec::new(); size]).collect();
+    for (r, targets) in send.into_iter().enumerate() {
+        for (t, data) in targets.into_iter().enumerate() {
+            recv[t][r] = data;
+        }
+    }
+    for t in 0..size {
+        let total: usize = recv[t].iter().map(|v| v.len()).sum();
+        mach.note_mem(pes[t], total, "alltoallv");
+    }
+    recv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+    use crate::sim::Cube;
+
+    fn machine(p: usize) -> Machine {
+        Machine::new(p, CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true })
+    }
+
+    fn elems(pe: usize, keys: &[u64]) -> Vec<Elem> {
+        let mut v: Vec<Elem> =
+            keys.iter().enumerate().map(|(i, &k)| Elem::new(k, pe, i)).collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn all_gather_merge_collects_everything_sorted() {
+        let mut m = machine(4);
+        let local = vec![
+            elems(0, &[10, 40]),
+            elems(1, &[20]),
+            elems(2, &[5, 30, 35]),
+            elems(3, &[25]),
+        ];
+        let runs = all_gather_merge(&mut m, &Cube::whole(4).pe_vec(), &local);
+        for (pe, r) in runs.iter().enumerate() {
+            let merged = r.merged();
+            assert_eq!(merged.len(), 7, "pe {pe}");
+            assert!(crate::elements::is_sorted(&merged));
+            assert_eq!(r.own.len(), local[pe].len());
+        }
+        // provenance: rank 0 has everything in `right`, rank 3 in `left`
+        assert_eq!(runs[0].left.len(), 0);
+        assert_eq!(runs[0].right.len(), 5);
+        assert_eq!(runs[3].right.len(), 0);
+        assert_eq!(runs[3].left.len(), 6);
+        assert_eq!(runs[1].left.len(), 2);
+        assert_eq!(runs[1].right.len(), 4);
+    }
+
+    #[test]
+    fn all_gather_merge_on_strided_group() {
+        // a "column" of a 2×2 grid: PEs {1, 3}
+        let mut m = machine(4);
+        let local = vec![elems(0, &[9]), elems(1, &[5]), elems(2, &[9]), elems(3, &[1])];
+        let runs = all_gather_merge(&mut m, &[1, 3], &local);
+        assert_eq!(runs[0].merged().len(), 2);
+        assert_eq!(runs[0].right[0].key, 1); // PE 3's element, higher-ranked
+        assert_eq!(runs[1].left[0].key, 5);
+        assert_eq!(m.clock(0), 0.0);
+        assert_eq!(m.clock(2), 0.0);
+    }
+
+    #[test]
+    fn all_gather_merge_cost_is_log_latency() {
+        let mut m = machine(8);
+        let local: Vec<Vec<Elem>> = (0..8).map(|pe| elems(pe, &[pe as u64])).collect();
+        all_gather_merge(&mut m, &Cube::whole(8).pe_vec(), &local);
+        assert!(m.time() < 4.0 * 100.0 + 100.0);
+        assert!(m.time() >= 3.0 * 100.0);
+    }
+
+    #[test]
+    fn gather_merge_root_gets_sorted_whole() {
+        let mut m = machine(8);
+        let local: Vec<Vec<Elem>> =
+            (0..8).map(|pe| elems(pe, &[(8 - pe) as u64 * 10, pe as u64])).collect();
+        let out = gather_merge(&mut m, &Cube::whole(8).pe_vec(), &local);
+        assert_eq!(out.len(), 16);
+        assert!(crate::elements::is_sorted(&out));
+    }
+
+    #[test]
+    fn gather_merge_on_subcube() {
+        let mut m = machine(8);
+        let local: Vec<Vec<Elem>> = (0..8).map(|pe| elems(pe, &[pe as u64])).collect();
+        let cube = Cube { prefix: 1, dim: 2 }; // PEs 4..8
+        let out = gather_merge(&mut m, &cube.pe_vec(), &local);
+        let keys: Vec<u64> = out.iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![4, 5, 6, 7]);
+        assert_eq!(m.clock(0), 0.0);
+    }
+
+    #[test]
+    fn allreduce_u64_sums() {
+        let mut m = machine(8);
+        let vals: Vec<u64> = (0..8).collect();
+        let s = allreduce_u64(&mut m, &Cube::whole(8).pe_vec(), &vals, |a, b| a + b);
+        assert_eq!(s, 28);
+        assert_eq!(m.stats.messages, 2 * 4 * 3);
+    }
+
+    #[test]
+    fn allreduce_vec_sums_elementwise() {
+        let mut m = machine(4);
+        let mut vals: Vec<Vec<u64>> = (0..4).map(|pe| vec![pe as u64, 1]).collect();
+        allreduce_vec_u64(&mut m, &Cube::whole(4).pe_vec(), &mut vals, |a, b| a + b);
+        for v in &vals {
+            assert_eq!(v, &vec![6, 4]);
+        }
+    }
+
+    #[test]
+    fn prefix_sum_exclusive() {
+        let mut m = machine(8);
+        let vals: Vec<usize> = (0..8).map(|pe| pe + 1).collect();
+        let out = prefix_sum(&mut m, &Cube::whole(8).pe_vec(), &vals);
+        let mut acc = 0;
+        for (r, &(pre, tot)) in out.iter().enumerate() {
+            assert_eq!(pre, acc, "rank {r}");
+            assert_eq!(tot, 36);
+            acc += vals[r];
+        }
+    }
+
+    #[test]
+    fn prefix_sum_vec_per_slot() {
+        let mut m = machine(4);
+        let vals: Vec<Vec<usize>> = (0..4).map(|r| vec![r, 10 * r]).collect();
+        let out = prefix_sum_vec(&mut m, &Cube::whole(4).pe_vec(), &vals);
+        let mut acc = [0usize, 0];
+        for (r, (pre, tot)) in out.iter().enumerate() {
+            assert_eq!(pre[0], acc[0]);
+            assert_eq!(pre[1], acc[1]);
+            assert_eq!(tot, &vec![6, 60]);
+            acc[0] += vals[r][0];
+            acc[1] += vals[r][1];
+        }
+    }
+
+    #[test]
+    fn alltoallv_delivers_transposed() {
+        let mut m = machine(4);
+        let send: Vec<Vec<Vec<Elem>>> = (0..4)
+            .map(|r| (0..4).map(|t| elems(r, &[(r * 10 + t) as u64])).collect())
+            .collect();
+        let recv = alltoallv(&mut m, &Cube::whole(4).pe_vec(), send);
+        for t in 0..4 {
+            for r in 0..4 {
+                assert_eq!(recv[t][r][0].key, (r * 10 + t) as u64);
+            }
+        }
+        assert_eq!(m.stats.messages, 12);
+    }
+
+    #[test]
+    fn bcast_cost_log_rounds() {
+        let mut m = machine(16);
+        bcast_cost(&mut m, &Cube::whole(16).pe_vec(), 0, 1);
+        assert_eq!(m.stats.messages, 15);
+        assert!(m.time() <= 4.0 * 101.0 + 1e-9);
+        // non-zero root
+        let mut m = machine(8);
+        bcast_cost(&mut m, &Cube::whole(8).pe_vec(), 5, 2);
+        assert_eq!(m.stats.messages, 7);
+    }
+}

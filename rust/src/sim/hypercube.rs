@@ -1,0 +1,155 @@
+//! Hypercube topology helpers: subcubes (the paper's §II concept) and the
+//! iterate-over-dimensions design pattern (Algorithm 1).
+
+/// A `dim`-dimensional subcube: the PEs whose numbers share the high bits
+/// `dim..d-1`, i.e. `prefix·2^dim .. (prefix+1)·2^dim`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cube {
+    pub prefix: usize,
+    pub dim: u32,
+}
+
+impl Cube {
+    /// The whole machine of `p = 2^d` PEs.
+    pub fn whole(p: usize) -> Self {
+        assert!(p.is_power_of_two(), "hypercube algorithms need p = 2^d");
+        Self { prefix: 0, dim: p.trailing_zeros() }
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        1 << self.dim
+    }
+
+    /// First global PE number in this cube.
+    #[inline]
+    pub fn base(&self) -> usize {
+        self.prefix << self.dim
+    }
+
+    /// Global PE number of local rank `r`.
+    #[inline]
+    pub fn pe(&self, r: usize) -> usize {
+        debug_assert!(r < self.size());
+        self.base() + r
+    }
+
+    /// Local rank of global PE `pe` (must be a member).
+    #[inline]
+    pub fn rank(&self, pe: usize) -> usize {
+        debug_assert!(self.contains(pe));
+        pe - self.base()
+    }
+
+    #[inline]
+    pub fn contains(&self, pe: usize) -> bool {
+        pe >> self.dim == self.prefix
+    }
+
+    /// Iterate over member PEs.
+    pub fn pes(&self) -> impl Iterator<Item = usize> {
+        let base = self.base();
+        base..base + self.size()
+    }
+
+    /// Member PEs as a vector (for barrier-style APIs).
+    pub fn pe_vec(&self) -> Vec<usize> {
+        self.pes().collect()
+    }
+
+    /// Split along the highest local dimension `dim-1` into the 0-subcube
+    /// (low half) and the 1-subcube (high half) — one step of hypercube
+    /// quicksort's recursion.
+    pub fn split(&self) -> (Cube, Cube) {
+        assert!(self.dim >= 1);
+        let d = self.dim - 1;
+        (
+            Cube { prefix: self.prefix << 1, dim: d },
+            Cube { prefix: (self.prefix << 1) | 1, dim: d },
+        )
+    }
+
+    /// Split into `k = 2^logk` equal subcubes along the top `logk` dims.
+    pub fn split_k(&self, logk: u32) -> Vec<Cube> {
+        assert!(logk <= self.dim);
+        let d = self.dim - logk;
+        (0..1usize << logk)
+            .map(|i| Cube { prefix: (self.prefix << logk) | i, dim: d })
+            .collect()
+    }
+
+    /// Hypercube partner of `pe` along local dimension `j` (`j < dim`).
+    #[inline]
+    pub fn partner(&self, pe: usize, j: u32) -> usize {
+        debug_assert!(j < self.dim);
+        pe ^ (1 << j)
+    }
+}
+
+/// Reverse the low `bits` bits of `x` — the Mirrored instance's `m_i` and
+/// the bit-fixing routing analysis both need it.
+#[inline]
+pub fn bit_reverse(x: usize, bits: u32) -> usize {
+    if bits == 0 {
+        return 0;
+    }
+    (x.reverse_bits()) >> (usize::BITS - bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_and_split() {
+        let c = Cube::whole(8);
+        assert_eq!(c.size(), 8);
+        assert_eq!(c.pes().collect::<Vec<_>>(), (0..8).collect::<Vec<_>>());
+        let (lo, hi) = c.split();
+        assert_eq!(lo.pes().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(hi.pes().collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        let (hl, hh) = hi.split();
+        assert_eq!(hl.pes().collect::<Vec<_>>(), vec![4, 5]);
+        assert_eq!(hh.pes().collect::<Vec<_>>(), vec![6, 7]);
+    }
+
+    #[test]
+    fn split_k_partitions() {
+        let c = Cube::whole(16);
+        let subs = c.split_k(2);
+        assert_eq!(subs.len(), 4);
+        let all: Vec<usize> = subs.iter().flat_map(|s| s.pes()).collect();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rank_pe_roundtrip() {
+        let c = Cube { prefix: 3, dim: 2 };
+        assert_eq!(c.base(), 12);
+        for r in 0..4 {
+            assert_eq!(c.rank(c.pe(r)), r);
+            assert!(c.contains(c.pe(r)));
+        }
+        assert!(!c.contains(11));
+        assert!(!c.contains(16));
+    }
+
+    #[test]
+    fn partner_flips_bit() {
+        let c = Cube::whole(8);
+        assert_eq!(c.partner(0, 2), 4);
+        assert_eq!(c.partner(5, 0), 4);
+    }
+
+    #[test]
+    fn bit_reverse_small() {
+        assert_eq!(bit_reverse(0b001, 3), 0b100);
+        assert_eq!(bit_reverse(0b110, 3), 0b011);
+        assert_eq!(bit_reverse(1, 1), 1);
+        assert_eq!(bit_reverse(0, 0), 0);
+        // involution
+        for x in 0..64 {
+            assert_eq!(bit_reverse(bit_reverse(x, 6), 6), x);
+        }
+    }
+}

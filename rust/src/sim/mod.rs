@@ -1,0 +1,17 @@
+//! The machine substrate: a deterministic single-ported α-β message-passing
+//! simulator (the paper's Appendix A model made executable).
+//!
+//! Algorithms move *real elements* between virtual PEs; the simulator
+//! advances one virtual clock per PE. The reported running time of a run is
+//! the maximum clock (makespan), exactly the quantity the paper's analysis
+//! bounds.
+
+mod collectives;
+mod hypercube;
+mod machine;
+mod sparse;
+
+pub use collectives::*;
+pub use hypercube::*;
+pub use machine::*;
+pub use sparse::*;

@@ -1,0 +1,79 @@
+//! NBX-style dynamic sparse data exchange (Hoefler et al. [27]), as used by
+//! RAMS' deterministic message assignment (App. G): receivers do not know
+//! how many messages to expect, so a non-blocking barrier detects
+//! termination. Cost: the irregular round itself plus an O(α·log q)
+//! barrier term.
+
+use crate::sim::Machine;
+
+/// Exchange opaque word-counted messages among a PE group; returns, per
+/// receiving member (group rank), the list of `(sender_rank, payload_index)`
+/// — the caller keeps payloads and uses the indices to deliver.
+///
+/// `msgs` are `(from_rank, to_rank, words)` within the group.
+pub fn nbx_exchange(
+    mach: &mut Machine,
+    pes: &[usize],
+    msgs: &[(usize, usize, usize)],
+) -> Vec<Vec<(usize, usize)>> {
+    let global: Vec<(usize, usize, usize)> = msgs
+        .iter()
+        .map(|&(f, t, l)| (pes[f], pes[t], l))
+        .collect();
+    mach.route_round(&global);
+    // the non-blocking barrier: log q rounds of empty messages
+    mach.barrier(pes);
+    let mut recv: Vec<Vec<(usize, usize)>> = vec![Vec::new(); pes.len()];
+    for (idx, &(f, t, _)) in msgs.iter().enumerate() {
+        recv[t].push((f, idx));
+    }
+    recv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+    use crate::sim::Cube;
+
+    #[test]
+    fn nbx_delivers_and_prices_barrier() {
+        let mut m = Machine::new(
+            8,
+            CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true },
+        );
+        let pes = Cube::whole(8).pe_vec();
+        let msgs = vec![(0, 3, 5), (1, 3, 2), (7, 0, 1)];
+        let recv = nbx_exchange(&mut m, &pes, &msgs);
+        assert_eq!(recv[3].len(), 2);
+        assert_eq!(recv[0], vec![(7, 2)]);
+        assert!(recv[1].is_empty());
+        // barrier synchronised all clocks
+        let t = m.clock(0);
+        assert!((0..8).all(|pe| m.clock(pe) == t));
+        assert!(t >= 100.0); // at least one α
+    }
+
+    #[test]
+    fn nbx_empty_is_barrier_only() {
+        let mut m = Machine::new(
+            4,
+            CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true },
+        );
+        let recv = nbx_exchange(&mut m, &Cube::whole(4).pe_vec(), &[]);
+        assert!(recv.iter().all(|r| r.is_empty()));
+        assert!(m.time() > 0.0);
+    }
+
+    #[test]
+    fn nbx_on_subgroup_leaves_rest_untouched() {
+        let mut m = Machine::new(
+            8,
+            CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true },
+        );
+        let recv = nbx_exchange(&mut m, &[4, 5, 6, 7], &[(0, 1, 3)]);
+        assert_eq!(recv[1], vec![(0, 0)]);
+        assert_eq!(m.clock(0), 0.0);
+        assert!(m.clock(4) > 0.0);
+    }
+}

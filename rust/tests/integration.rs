@@ -1,0 +1,153 @@
+//! Integration tests: whole runs over the public API, cross-algorithm
+//! agreement, and randomized property sweeps (hand-rolled — proptest is
+//! not vendored in this offline environment; failures print the seed).
+
+use rmps::algorithms::{run, Algorithm};
+use rmps::config::RunConfig;
+use rmps::elements::Elem;
+use rmps::input::{generate, Distribution};
+use rmps::rng::Rng;
+
+/// All robust algorithms agree with a sequential sort of the same input.
+#[test]
+fn robust_algorithms_agree_with_sequential_oracle() {
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(64);
+    for dist in [Distribution::Uniform, Distribution::RandDupl, Distribution::Staggered] {
+        let input = generate(&cfg, dist);
+        let mut oracle: Vec<Elem> = input.iter().flatten().copied().collect();
+        oracle.sort_unstable();
+        let oracle_keys: Vec<u64> = oracle.iter().map(|e| e.key).collect();
+        for alg in [Algorithm::Rfis, Algorithm::RQuick, Algorithm::Rams, Algorithm::Bitonic] {
+            let report = run(alg, &cfg, input.clone());
+            assert!(report.succeeded(), "{alg:?}/{dist:?}: {:?}", report.crashed);
+            let got: Vec<u64> =
+                report.output.iter().flatten().map(|e| e.key).collect();
+            assert_eq!(got, oracle_keys, "{alg:?}/{dist:?} key sequence");
+        }
+    }
+}
+
+/// Property sweep: random (p, n/p, distribution, seed) quadruples — every
+/// robust algorithm must produce sorted, multiset-preserving, balanced
+/// output. 60 random cases; the failing seed is printed on assert.
+#[test]
+fn property_sweep_robust_algorithms() {
+    let mut meta = Rng::seeded(0xD1CE, 0);
+    for case in 0..60 {
+        let p = 1usize << (2 + meta.below(5)); // 4..64
+        let m = 1usize << meta.below(8); // 1..128
+        let dist = Distribution::ALL[meta.below(Distribution::ALL.len() as u64) as usize];
+        let seed = meta.next_u64();
+        let cfg = RunConfig::default().with_p(p).with_n_per_pe(m).with_seed(seed);
+        let input = generate(&cfg, dist);
+        for alg in [Algorithm::RQuick, Algorithm::Rams, Algorithm::Rfis, Algorithm::Robust] {
+            let report = run(alg, &cfg, input.clone());
+            assert!(
+                report.succeeded(),
+                "case {case}: {alg:?} p={p} m={m} {dist:?} seed={seed:#x}: {:?} {:?}",
+                report.crashed,
+                report.validation
+            );
+        }
+    }
+}
+
+/// Property sweep over sparse inputs (n < p).
+#[test]
+fn property_sweep_sparse() {
+    let mut meta = Rng::seeded(0xBEEF, 1);
+    for case in 0..30 {
+        let p = 1usize << (3 + meta.below(5)); // 8..128
+        let s = 2 + meta.below(9) as usize; // sparsity 2..10
+        let dist =
+            [Distribution::Uniform, Distribution::Zero, Distribution::Staggered][meta.below(3) as usize];
+        let seed = meta.next_u64();
+        let cfg = RunConfig::default().with_p(p).with_sparsity(s).with_seed(seed);
+        let input = generate(&cfg, dist);
+        for alg in [Algorithm::RQuick, Algorithm::Rfis, Algorithm::GatherM, Algorithm::Robust] {
+            let report = run(alg, &cfg, input.clone());
+            assert!(
+                report.crashed.is_none() && report.validation.ok(),
+                "case {case}: {alg:?} p={p} s={s} {dist:?} seed={seed:#x}: {:?} {:?}",
+                report.crashed,
+                report.validation
+            );
+        }
+    }
+}
+
+/// Determinism: identical config → identical report (time, stats, output).
+#[test]
+fn runs_are_deterministic() {
+    let cfg = RunConfig::default().with_p(32).with_n_per_pe(64);
+    for alg in [Algorithm::RQuick, Algorithm::Rams, Algorithm::Rfis] {
+        let a = run(alg, &cfg, generate(&cfg, Distribution::Staggered));
+        let b = run(alg, &cfg, generate(&cfg, Distribution::Staggered));
+        assert_eq!(a.time, b.time, "{alg:?} time");
+        assert_eq!(a.stats.messages, b.stats.messages, "{alg:?} messages");
+        assert_eq!(a.output, b.output, "{alg:?} output");
+    }
+}
+
+/// The ids make every robust sort a *permutation-stable* total order:
+/// outputs of different robust algorithms are identical element-for-element
+/// on duplicate-heavy inputs (not just key-equal).
+#[test]
+fn tie_broken_outputs_are_identical_across_algorithms() {
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(32);
+    let input = generate(&cfg, Distribution::Zero);
+    let a = run(Algorithm::Rfis, &cfg, input.clone());
+    let b = run(Algorithm::Rams, &cfg, input.clone());
+    assert!(a.succeeded() && b.succeeded());
+    let flat_a: Vec<Elem> = a.output.iter().flatten().copied().collect();
+    let flat_b: Vec<Elem> = b.output.iter().flatten().copied().collect();
+    assert_eq!(flat_a, flat_b, "identical (key,id) total order");
+}
+
+/// Failure injection: tiny memory caps crash nonrobust algorithms but
+/// never the robust ones.
+#[test]
+fn memory_pressure_only_kills_nonrobust() {
+    let mut cfg = RunConfig::default().with_p(32).with_n_per_pe(256);
+    cfg.mem_cap_factor = Some(6.0);
+    for dist in [Distribution::Zero, Distribution::DeterDupl] {
+        for alg in [Algorithm::RQuick, Algorithm::Rams, Algorithm::Rfis] {
+            let r = run(alg, &cfg, generate(&cfg, dist));
+            assert!(r.succeeded(), "{alg:?}/{dist:?} must survive: {:?}", r.crashed);
+        }
+        let ntb = run(Algorithm::NtbQuick, &cfg, generate(&cfg, dist));
+        assert!(
+            ntb.crashed.is_some() || !ntb.validation.balanced,
+            "NTB-Quick should die on {dist:?}"
+        );
+    }
+}
+
+/// Empty machine (n = 0) and single-PE degenerate cases.
+#[test]
+fn degenerate_shapes() {
+    // p = 1: everything is a local sort
+    let cfg = RunConfig::default().with_p(1).with_n_per_pe(100);
+    for alg in [Algorithm::RQuick, Algorithm::Rfis, Algorithm::GatherM] {
+        let r = run(alg, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(r.validation.ok(), "{alg:?} on p=1: {:?}", r.validation);
+    }
+    // n = 0
+    let cfg = RunConfig::default().with_p(8).with_n_per_pe(0);
+    for alg in [Algorithm::RQuick, Algorithm::Rams, Algorithm::Rfis] {
+        let r = run(alg, &cfg, generate(&cfg, Distribution::Uniform));
+        assert!(r.validation.multiset_preserved, "{alg:?} on n=0");
+    }
+}
+
+/// One element per PE — the MPI_Comm_Split motivation (n = p).
+#[test]
+fn minisort_regime_n_equals_p() {
+    let cfg = RunConfig::default().with_p(64).with_n_per_pe(1);
+    for dist in [Distribution::Uniform, Distribution::Zero, Distribution::Mirrored] {
+        for alg in [Algorithm::Rfis, Algorithm::RQuick, Algorithm::Robust] {
+            let r = run(alg, &cfg, generate(&cfg, dist));
+            assert!(r.succeeded(), "{alg:?}/{dist:?}: {:?}", r.validation);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! PJRT runtime integration: load the AOT HLO-text artifacts, execute them,
+//! and check the XLA local-sort backend agrees bit-for-bit with pdqsort.
+//!
+//! Requires `make artifacts` (the tests locate the artifact dir relative to
+//! CARGO_MANIFEST_DIR and skip loudly if it is missing).
+
+use rmps::algorithms::{run, run_with_backend, Algorithm};
+use rmps::config::RunConfig;
+use rmps::elements::{key_to_i64, Elem};
+use rmps::input::{generate, Distribution};
+use rmps::localsort::{RustSort, SortBackend};
+use rmps::rng::Rng;
+use rmps::runtime::{Runtime, XlaSort};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn sort_pairs_artifact_matches_host_sort() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(dir).expect("runtime");
+    let (name, b, n) = ("sort_pairs_i64_64x256", 64usize, 256usize);
+    let mut rng = Rng::seeded(11, 0);
+    let keys: Vec<i64> = (0..b * n).map(|_| key_to_i64(rng.below(1 << 20))).collect();
+    let ids: Vec<i64> = (0..b * n).map(|i| i as i64).collect();
+    let (ok, oi) = rt.run_sort_pairs(name, b, n, &keys, &ids).expect("execute");
+    for row in 0..b {
+        let mut expect: Vec<(i64, i64)> = (0..n)
+            .map(|c| (keys[row * n + c], ids[row * n + c]))
+            .collect();
+        expect.sort_unstable();
+        let got: Vec<(i64, i64)> =
+            (0..n).map(|c| (ok[row * n + c], oi[row * n + c])).collect();
+        assert_eq!(got, expect, "row {row}");
+    }
+}
+
+#[test]
+fn classify_artifact_matches_host_classifier() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::new(dir).expect("runtime");
+    let (name, b, n, s) = ("classify_i64_64x256_s63", 64usize, 256usize, 63usize);
+    let mut rng = Rng::seeded(13, 0);
+    // sorted splitters → eytzinger tree (tree[0] mirrors tree[1])
+    let mut spl: Vec<i64> = (0..s).map(|_| key_to_i64(rng.below(1 << 20))).collect();
+    spl.sort_unstable();
+    spl.dedup();
+    while spl.len() < s {
+        spl.push(*spl.last().unwrap() + 1);
+        spl.sort_unstable();
+    }
+    let elems: Vec<Elem> = spl
+        .iter()
+        .map(|&v| Elem::with_id(((v as u64) ^ (1 << 63)) as u64, 0))
+        .collect();
+    let tree = rmps::partition::SplitterTree::new(&elems);
+    // rebuild the i64 eytzinger layout the way build_tree does in python
+    let mut layout = vec![0i64; s + 1];
+    fn fill(spl: &[i64], t: usize, lo: i64, hi: i64, out: &mut [i64]) {
+        if t >= out.len() || hi < lo {
+            return;
+        }
+        let mid = ((lo + hi) / 2) as usize;
+        out[t] = spl[mid];
+        fill(spl, 2 * t, lo, mid as i64 - 1, out);
+        fill(spl, 2 * t + 1, mid as i64 + 1, hi, out);
+    }
+    fill(&spl, 1, 0, s as i64 - 1, &mut layout);
+    layout[0] = layout[1];
+    let keys: Vec<i64> = (0..b * n).map(|_| key_to_i64(rng.below(1 << 20))).collect();
+    let got = rt.run_classify(name, b, n, &keys, &layout).expect("execute");
+    for (i, &k) in keys.iter().enumerate() {
+        let key_u = (k as u64) ^ (1 << 63);
+        let expect = tree.classify_key(key_u) as i32;
+        assert_eq!(got[i], expect, "element {i}");
+    }
+}
+
+#[test]
+fn xla_backend_agrees_with_rust_backend_end_to_end() {
+    let dir = need_artifacts!();
+    std::env::set_var("RMPS_ARTIFACTS", &dir);
+    let cfg = RunConfig::default().with_p(64).with_n_per_pe(100);
+    for dist in [Distribution::Uniform, Distribution::Zero] {
+        let input = generate(&cfg, dist);
+        let rust_report = run(Algorithm::RQuick, &cfg, input.clone());
+        let mut xla = XlaSort::from_env().expect("xla backend");
+        let xla_report = run_with_backend(Algorithm::RQuick, &cfg, input, &mut xla);
+        assert!(rust_report.succeeded() && xla_report.succeeded());
+        assert_eq!(
+            rust_report.output, xla_report.output,
+            "{dist:?}: backends must agree bit-for-bit"
+        );
+        assert_eq!(rust_report.time, xla_report.time, "virtual time is backend-independent");
+        assert!(xla.exec_calls > 0, "XLA backend must actually run");
+    }
+}
+
+#[test]
+fn xla_backend_handles_oversized_runs_via_fallback() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(dir).expect("runtime");
+    let mut xla = XlaSort::new(rt).expect("backend");
+    // one run longer than the largest sort_pairs artifact row (1024)
+    let mut rng = Rng::seeded(5, 5);
+    let mut big: Vec<Elem> = (0..5000).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
+    let mut small: Vec<Elem> = (0..50).map(|i| Elem::new(rng.next_u64(), 1, i)).collect();
+    let mut runs: Vec<&mut Vec<Elem>> = vec![&mut big, &mut small];
+    xla.sort_runs(&mut runs);
+    assert!(rmps::elements::is_sorted(&big));
+    assert!(rmps::elements::is_sorted(&small));
+}
