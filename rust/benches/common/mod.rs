@@ -2,6 +2,9 @@
 //! vendored in this offline environment, so each bench is a plain
 //! `harness = false` binary with a median-of-reps wallclock loop).
 
+// each bench binary includes this module but uses only part of it
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Median-of-`reps` wallclock of `f`, in milliseconds, after one warmup.

@@ -44,6 +44,34 @@ struct Particle {
     vy: f64,
 }
 
+/// Pick the local-sort backend. The PJRT path exists only in builds with
+/// the `xla` cargo feature; without it `--xla` falls back to pdqsort.
+#[cfg(feature = "xla")]
+fn make_backend(use_xla: bool) -> Box<dyn SortBackend> {
+    if use_xla {
+        match rmps::runtime::XlaSort::from_env() {
+            Ok(b) => {
+                println!("local sort backend: PJRT/XLA Pallas bitonic (AOT artifacts)");
+                return Box::new(b);
+            }
+            Err(e) => println!("XLA backend unavailable ({e}); falling back to pdqsort"),
+        }
+    } else {
+        println!("local sort backend: rust pdqsort (use --xla for the PJRT path)");
+    }
+    Box::new(RustSort)
+}
+
+#[cfg(not(feature = "xla"))]
+fn make_backend(use_xla: bool) -> Box<dyn SortBackend> {
+    if use_xla {
+        println!("built without the `xla` feature; using rust pdqsort");
+    } else {
+        println!("local sort backend: rust pdqsort (build with --features xla for PJRT)");
+    }
+    Box::new(RustSort)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args.iter().skip(1).find_map(|s| s.parse().ok()).unwrap_or(10);
@@ -52,21 +80,7 @@ fn main() {
     let p = 1 << 8;
     let per_pe = 1 << 9;
     let cfg = RunConfig::default().with_p(p).with_n_per_pe(per_pe);
-    let mut backend: Box<dyn SortBackend> = if use_xla {
-        match rmps::runtime::XlaSort::from_env() {
-            Ok(b) => {
-                println!("local sort backend: PJRT/XLA Pallas bitonic (AOT artifacts)");
-                Box::new(b)
-            }
-            Err(e) => {
-                println!("XLA backend unavailable ({e}); falling back to pdqsort");
-                Box::new(RustSort)
-            }
-        }
-    } else {
-        println!("local sort backend: rust pdqsort (use --xla for the PJRT path)");
-        Box::new(RustSort)
-    };
+    let mut backend: Box<dyn SortBackend> = make_backend(use_xla);
 
     // initial particles: a hot cluster near the origin → heavy skew, the
     // case SFC rebalancing exists for
@@ -90,7 +104,7 @@ fn main() {
 
     println!(
         "SFC rebalancing: {p} PEs × {per_pe} particles, {steps} steps\n{:>5} {:>14} {:>12} {:>10} {:>10}",
-        "step", "sort time", "Melem/unit", "ε before", "ε after"
+        "step", "sort time", "elem/unit", "ε before", "ε after"
     );
 
     let mut total_time = 0.0;
@@ -164,12 +178,6 @@ fn imbalance_by_curve(input: &[Vec<Elem>], p: usize) -> f64 {
             loads[bucket.min(p - 1)] += 1;
         }
     }
-    let avg = loads.iter().sum::<usize>() as f64 / p as f64;
-    let max = *loads.iter().max().unwrap() as f64;
-    if avg > 0.0 {
-        max / avg - 1.0
-    } else {
-        0.0
-    }
+    rmps::metrics::Imbalance::from_loads(loads).epsilon
 }
 

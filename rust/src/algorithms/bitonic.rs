@@ -8,7 +8,7 @@
 //! sparse instances.
 
 use crate::config::RunConfig;
-use crate::elements::{Elem};
+use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
 use crate::sim::Machine;
 

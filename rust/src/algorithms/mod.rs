@@ -77,7 +77,7 @@ impl Algorithm {
         Algorithm::Robust,
     ];
 
-    /// The seven algorithms Figure 1 compares.
+    /// The eight algorithms Figure 1 compares.
     pub const FIG1: [Algorithm; 8] = [
         Algorithm::GatherM,
         Algorithm::AllGatherM,
@@ -159,8 +159,8 @@ pub fn run(alg: Algorithm, cfg: &RunConfig, input: Vec<Vec<Elem>>) -> RunReport 
     run_with_backend(alg, cfg, input, &mut RustSort)
 }
 
-/// Run `alg` with an explicit local-sort backend (e.g. the PJRT
-/// [`crate::runtime::XlaSort`]).
+/// Run `alg` with an explicit local-sort backend (e.g. the PJRT `XlaSort`
+/// in [`crate::runtime`], available with the `xla` cargo feature).
 pub fn run_with_backend(
     alg: Algorithm,
     cfg: &RunConfig,
@@ -284,5 +284,42 @@ mod tests {
         assert_eq!(Algorithm::parse("ntbquick"), Some(Algorithm::NtbQuick));
         assert_eq!(Algorithm::parse("ns_ssort"), Some(Algorithm::NsSSort));
         assert_eq!(Algorithm::parse("bogus"), None);
+    }
+
+    /// `name()` → `parse` must round-trip for every variant, and parsing
+    /// must be insensitive to ASCII case and to `-`/`_` separators.
+    #[test]
+    fn parse_round_trips_every_variant() {
+        assert_eq!(Algorithm::ALL.len(), 15);
+        for a in Algorithm::ALL {
+            let name = a.name();
+            assert_eq!(Algorithm::parse(name), Some(a), "{name}");
+            assert_eq!(Algorithm::parse(&name.to_lowercase()), Some(a), "{name} lower");
+            assert_eq!(Algorithm::parse(&name.to_uppercase()), Some(a), "{name} upper");
+            assert_eq!(
+                Algorithm::parse(&name.replace('-', "_")),
+                Some(a),
+                "{name} with underscores"
+            );
+            assert_eq!(
+                Algorithm::parse(&name.replace('-', "")),
+                Some(a),
+                "{name} separators stripped"
+            );
+        }
+    }
+
+    /// Parsing is case- and separator-insensitive, so the *normalized*
+    /// names must be unique or `parse` would silently return the first
+    /// match for an ambiguous input.
+    #[test]
+    fn algorithm_names_are_unique_after_normalization() {
+        let mut names: Vec<String> = Algorithm::ALL
+            .iter()
+            .map(|a| a.name().to_ascii_lowercase().replace(['-', '_'], ""))
+            .collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Algorithm::ALL.len());
     }
 }

@@ -71,6 +71,40 @@ mod tests {
         assert_eq!(choose(100_000.0), "RAMS");
     }
 
+    /// The exact crossover points the module docs promise (Fig. 1): each
+    /// boundary value lands on the documented side.
+    #[test]
+    fn choose_crossover_boundaries() {
+        // n/p ≤ 1/8 → GatherM; just above → RFIS
+        assert_eq!(choose(0.125), "GatherM");
+        assert_eq!(choose(0.126), "RFIS");
+        // n/p < 4 → RFIS; exactly 4 → RQuick
+        assert_eq!(choose(3.999), "RFIS");
+        assert_eq!(choose(4.0), "RQuick");
+        // n/p ≤ 2^14 → RQuick; above → RAMS
+        assert_eq!(choose((1 << 14) as f64), "RQuick");
+        assert_eq!(choose((1 << 14) as f64 + 1.0), "RAMS");
+    }
+
+    /// `Algorithm::Robust` really dispatches on n/p: the chosen algorithm's
+    /// footprint shows. Sparse picks GatherM (root-only output shape); the
+    /// n = p point picks RFIS (balanced); both sort correctly.
+    #[test]
+    fn robust_dispatch_follows_choose() {
+        // n/p = 1/16 ≤ 1/8 → GatherM leaves everything on PE 0
+        let cfg = RunConfig::default().with_p(32).with_sparsity(16);
+        assert_eq!(choose(cfg.n_over_p()), "GatherM");
+        let r = run(Algorithm::Robust, &cfg, generate(&cfg, Distribution::Uniform));
+        assert_eq!(r.output_shape, OutputShape::RootOnly);
+        assert!(r.validation.ok(), "{:?}", r.validation);
+        // n/p = 1 < 4 → RFIS: balanced output shape
+        let cfg = RunConfig::default().with_p(32).with_n_per_pe(1);
+        assert_eq!(choose(cfg.n_over_p()), "RFIS");
+        let r = run(Algorithm::Robust, &cfg, generate(&cfg, Distribution::Uniform));
+        assert_eq!(r.output_shape, OutputShape::Balanced);
+        assert!(r.succeeded(), "{:?}", r.validation);
+    }
+
     #[test]
     fn selector_sorts_across_the_size_spectrum() {
         // sparse → GatherM

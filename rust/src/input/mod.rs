@@ -160,7 +160,8 @@ fn generate_pe(cfg: &RunConfig, dist: Distribution, pe: usize, m: usize) -> Vec<
                 let remaining = m - keys.len();
                 let size = (rng.below(m.max(1) as u64 / 8 + 1) as usize + 1).min(remaining);
                 let v = rng.below(32);
-                keys.extend(std::iter::repeat(v).take(size));
+                let new_len = keys.len() + size;
+                keys.resize(new_len, v);
             }
             keys
         }

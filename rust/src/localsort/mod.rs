@@ -1,9 +1,10 @@
 //! Node-local sort backends.
 //!
 //! Every algorithm starts by sorting each PE's fragment. Two backends:
-//! pure-Rust pdqsort ([`RustSort`]) and the PJRT-executed Pallas bitonic
-//! network ([`crate::runtime::XlaSort`]), which batches all fragments of a
-//! round into one executable launch — the AOT artifact on the hot path.
+//! pure-Rust pdqsort ([`RustSort`]) and — behind the off-by-default `xla`
+//! cargo feature — the PJRT-executed Pallas bitonic network (`XlaSort` in
+//! [`crate::runtime`]), which batches all fragments of a round into one
+//! executable launch — the AOT artifact on the hot path.
 //!
 //! The *virtual* cost charged to PE clocks is the same either way
 //! (`cmp·m·log m`); the backend choice affects only host wallclock, which

@@ -3,9 +3,8 @@
 //! sweeps on the simulated α-β machine.
 //!
 //! The environment is offline, so argument parsing is hand-rolled
-//! (`--key value` flags) instead of pulling in clap.
-
-use anyhow::{anyhow, bail, Result};
+//! (`--key value` flags) instead of pulling in clap, and errors are a
+//! plain message type instead of anyhow.
 
 use rmps::algorithms::{run_with_backend, Algorithm};
 use rmps::config::RunConfig;
@@ -13,6 +12,22 @@ use rmps::experiments::{self, NpPoint};
 use rmps::input::{generate, Distribution};
 use rmps::localsort::{RustSort, SortBackend};
 use rmps::model::CostModel;
+
+/// Minimal CLI error: `Debug` prints the bare message, which is what
+/// `fn main() -> Result<()>` shows on a nonzero exit.
+struct CliError(String);
+
+impl std::fmt::Debug for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+type Result<T> = std::result::Result<T, CliError>;
+
+macro_rules! bail {
+    ($($t:tt)*) => { return Err(CliError(format!($($t)*))) };
+}
 
 const USAGE: &str = "\
 rmps — Robust Massively Parallel Sorting (Axtmann & Sanders 2016) reproduction
@@ -23,7 +38,7 @@ COMMANDS
   run      one algorithm on one instance
              --algo A        (default Robust)   GatherM|AllGatherM|RFIS|RQuick|
                              NTB-Quick|Bitonic|RAMS|NTB-AMS|NDMA-AMS|HykSort|
-                             SSort|NS-SSort|Robust
+                             SSort|NS-SSort|Minisort|Mways|Robust
              --dist D        (default Uniform)  Uniform|Gaussian|BucketSorted|
                              DeterDupl|RandDupl|Zero|g-Group|Staggered|
                              Mirrored|AllToOne|Reverse
@@ -45,7 +60,8 @@ MACHINE FLAGS (all commands)
   --alpha A        startup cost (default 4000)
   --beta B         per-word cost (default 13)
   --seed S         RNG seed (default 0xC0FFEE)
-  --xla-local-sort use the PJRT/XLA batched local sorter (needs artifacts/)
+  --xla-local-sort use the PJRT/XLA batched local sorter
+                   (needs artifacts/ and a build with --features xla)
 ";
 
 /// Minimal `--key value` / `--flag` parser.
@@ -78,7 +94,9 @@ impl Args {
 
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.kv.get(key) {
-            Some(v) => v.parse().map_err(|_| anyhow!("invalid value for --{key}: {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("invalid value for --{key}: {v:?}"))),
             None => Ok(default),
         }
     }
@@ -107,10 +125,21 @@ fn machine_config(a: &Args) -> Result<RunConfig> {
 
 fn backend(a: &Args) -> Result<Box<dyn SortBackend>> {
     if a.flag("xla-local-sort") {
-        Ok(Box::new(rmps::runtime::XlaSort::from_env()?))
-    } else {
-        Ok(Box::new(RustSort))
+        #[cfg(feature = "xla")]
+        {
+            let b = rmps::runtime::XlaSort::from_env()
+                .map_err(|e| CliError(format!("XLA backend: {e}")))?;
+            return Ok(Box::new(b));
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            bail!(
+                "this binary was built without the `xla` feature; \
+                 rebuild with `cargo build --features xla` (see README)"
+            );
+        }
     }
+    Ok(Box::new(RustSort))
 }
 
 fn dense_points(max_log: u32) -> Vec<NpPoint> {
@@ -129,10 +158,10 @@ fn main() -> Result<()> {
         "run" => {
             let algo = a.get_str("algo", "Robust");
             let dist = a.get_str("dist", "Uniform");
-            let alg =
-                Algorithm::parse(&algo).ok_or_else(|| anyhow!("unknown algorithm {algo}"))?;
-            let d =
-                Distribution::parse(&dist).ok_or_else(|| anyhow!("unknown distribution {dist}"))?;
+            let alg = Algorithm::parse(&algo)
+                .ok_or_else(|| CliError(format!("unknown algorithm {algo}")))?;
+            let d = Distribution::parse(&dist)
+                .ok_or_else(|| CliError(format!("unknown distribution {dist}")))?;
             let mut cfg = machine_config(&a)?;
             let sparsity: usize = a.get("sparsity", 1)?;
             if sparsity > 1 {

@@ -16,7 +16,6 @@ use crate::elements::{Elem, Key};
 pub struct SplitterTree {
     /// eytzinger layout, 1-based; index 0 unused (mirrors the kernel).
     keys: Vec<Key>,
-    ids: Vec<u64>,
     /// packed (key, id) as u128 — one branchless compare per tie-breaking
     /// descent level instead of key/id cascades (§Perf).
     packed: Vec<u128>,
@@ -68,7 +67,7 @@ impl SplitterTree {
             .zip(&ids)
             .map(|(&k, &i)| ((k as u128) << 64) | i as u128)
             .collect();
-        Self { keys, ids, packed, s, h: (s + 1).trailing_zeros() }
+        Self { keys, packed, s, h: (s + 1).trailing_zeros() }
     }
 
     /// Number of buckets (S + 1).

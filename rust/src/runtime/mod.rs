@@ -1,21 +1,43 @@
 //! PJRT runtime: load the AOT-compiled HLO-text artifacts and run them on
 //! the request path (Python is never involved at runtime).
 //!
+//! Everything that touches PJRT is gated behind the off-by-default `xla`
+//! cargo feature — the default build of the crate is pure Rust and sorts
+//! locally with [`crate::localsort::RustSort`]. Enabling `--features xla`
+//! additionally requires the `xla` PJRT bindings crate as a dependency
+//! (deliberately not declared in `Cargo.toml`; see README § "XLA backend
+//! (optional)"). The artifact manifest format is parsed by always-compiled
+//! pure-Rust code so it stays testable without PJRT.
+//!
 //! Pipeline per artifact: `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
 //! HLO *text* is the interchange format: jax ≥ 0.5 emits 64-bit instruction
 //! ids that xla_extension 0.5.1 rejects in proto form; the text parser
-//! reassigns ids (see python/compile/aot.py and /opt/xla-example).
+//! reassigns ids (see `python/compile/aot.py`).
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow as eyre, Context, Result};
+/// Error from the artifact loader / PJRT executor. A plain message type so
+/// the runtime needs no external error crate.
+#[derive(Clone, Debug)]
+pub struct RuntimeError(pub String);
 
-use crate::elements::{key_from_i64, key_to_i64, Elem};
-use crate::localsort::SortBackend;
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
 
-/// One entry of `artifacts/manifest.txt` (`name kind batch n splitters`).
+impl std::error::Error for RuntimeError {}
+
+/// Result shorthand used throughout the runtime.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+macro_rules! rterr {
+    ($($t:tt)*) => { RuntimeError(format!($($t)*)) };
+}
+
+/// One entry of `artifacts/manifest.txt` (`name kind batch n [splitters]`).
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
     pub kind: String,
@@ -25,7 +47,9 @@ pub struct ArtifactMeta {
 }
 
 /// Parse the whitespace-separated manifest (written by `compile/aot.py`).
-fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactMeta>> {
+/// Blank lines and `#` comments are skipped; a line is
+/// `name kind batch n [splitters]`.
+pub fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactMeta>> {
     let mut out = HashMap::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -34,247 +58,317 @@ fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactMeta>> {
         }
         let f: Vec<&str> = line.split_whitespace().collect();
         if f.len() < 4 {
-            return Err(eyre!("manifest line {} malformed: {line:?}", lineno + 1));
+            return Err(rterr!("manifest line {} malformed: {line:?}", lineno + 1));
         }
+        let field = |s: &str, what: &str| -> Result<usize> {
+            s.parse()
+                .map_err(|_| rterr!("manifest line {}: bad {what} {s:?}", lineno + 1))
+        };
         out.insert(
             f[0].to_string(),
             ArtifactMeta {
                 kind: f[1].to_string(),
-                batch: f[2].parse().context("batch")?,
-                n: f[3].parse().context("n")?,
-                splitters: f.get(4).and_then(|s| s.parse().ok()).unwrap_or(0),
+                batch: field(f[2], "batch")?,
+                n: field(f[3], "n")?,
+                splitters: match f.get(4) {
+                    Some(s) => field(s, "splitters")?,
+                    None => 0,
+                },
             },
         );
     }
     Ok(out)
 }
 
-/// Lazily-compiled store of PJRT executables keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: HashMap<String, ArtifactMeta>,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// Open the artifact directory (built by `make artifacts`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.txt");
-        let manifest = parse_manifest(
-            &std::fs::read_to_string(&manifest_path)
-                .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?,
-        )?;
-        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, dir, manifest, execs: HashMap::new() })
+    use super::{parse_manifest, ArtifactMeta, Result, RuntimeError};
+    use crate::elements::{key_from_i64, key_to_i64, Elem};
+    use crate::localsort::SortBackend;
+
+    /// Lazily-compiled store of PJRT executables keyed by artifact name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub manifest: HashMap<String, ArtifactMeta>,
+        execs: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Default artifact location: `$RMPS_ARTIFACTS` or `./artifacts`.
-    pub fn from_env() -> Result<Self> {
-        let dir = std::env::var("RMPS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::new(dir)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (once) and fetch an executable by artifact name.
-    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.execs.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
-            )
-            .map_err(|e| eyre!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| eyre!("compiling {name}: {e:?}"))?;
-            self.execs.insert(name.to_string(), exe);
+    impl Runtime {
+        /// Open the artifact directory (built by `make artifacts`).
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+                rterr!("reading {manifest_path:?} — run `make artifacts`: {e}")
+            })?;
+            let manifest = parse_manifest(&text)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| rterr!("PJRT cpu client: {e:?}"))?;
+            Ok(Self { client, dir, manifest, execs: HashMap::new() })
         }
-        Ok(&self.execs[name])
-    }
 
-    /// Execute the `sort_pairs` artifact `name` on a full (B, N) batch of
-    /// i64 keys/ids. Returns sorted (keys, ids) row-major.
-    pub fn run_sort_pairs(
-        &mut self,
-        name: &str,
-        b: usize,
-        n: usize,
-        keys: &[i64],
-        ids: &[i64],
-    ) -> Result<(Vec<i64>, Vec<i64>)> {
-        debug_assert_eq!(keys.len(), b * n);
-        let kl = xla::Literal::vec1(keys)
-            .reshape(&[b as i64, n as i64])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let il = xla::Literal::vec1(ids)
-            .reshape(&[b as i64, n as i64])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(&[kl, il])
-            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("{e:?}"))?;
-        let (ok, oi) = result.to_tuple2().map_err(|e| eyre!("{e:?}"))?;
-        Ok((
-            ok.to_vec::<i64>().map_err(|e| eyre!("{e:?}"))?,
-            oi.to_vec::<i64>().map_err(|e| eyre!("{e:?}"))?,
-        ))
-    }
-
-    /// Execute a plain `sort` artifact on a (B, N) batch of i64 keys.
-    pub fn run_sort(&mut self, name: &str, b: usize, n: usize, keys: &[i64]) -> Result<Vec<i64>> {
-        debug_assert_eq!(keys.len(), b * n);
-        let kl = xla::Literal::vec1(keys)
-            .reshape(&[b as i64, n as i64])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(&[kl])
-            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("{e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
-        out.to_vec::<i64>().map_err(|e| eyre!("{e:?}"))
-    }
-
-    /// Execute a `classify` artifact: bucket index per element.
-    pub fn run_classify(
-        &mut self,
-        name: &str,
-        b: usize,
-        n: usize,
-        keys: &[i64],
-        tree: &[i64],
-    ) -> Result<Vec<i32>> {
-        let kl = xla::Literal::vec1(keys)
-            .reshape(&[b as i64, n as i64])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let tl = xla::Literal::vec1(tree);
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(&[kl, tl])
-            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("{e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))
-    }
-}
-
-/// Padding sentinel: sorts after every real (key, id) pair.
-const PAD_KEY: i64 = i64::MAX;
-const PAD_ID: i64 = i64::MAX;
-
-/// The PJRT-backed batched local-sort backend: groups fragments by padded
-/// row size, fills (B, N) batches, and launches the Pallas bitonic-network
-/// executable once per batch. Fragments longer than the largest artifact
-/// row fall back to pdqsort.
-pub struct XlaSort {
-    rt: Runtime,
-    /// `sort_pairs` artifacts as (row_n, batch, name), ascending by n.
-    sizes: Vec<(usize, usize, String)>,
-    /// number of PJRT launches (batching effectiveness, for §Perf).
-    pub exec_calls: usize,
-}
-
-impl XlaSort {
-    pub fn new(rt: Runtime) -> Result<Self> {
-        let mut sizes: Vec<(usize, usize, String)> = rt
-            .manifest
-            .iter()
-            .filter(|(_, m)| m.kind == "sort_pairs")
-            .map(|(name, m)| (m.n, m.batch, name.clone()))
-            .collect();
-        if sizes.is_empty() {
-            return Err(eyre!("no sort_pairs artifacts in manifest — run `make artifacts`"));
+        /// Default artifact location: `$RMPS_ARTIFACTS` or `./artifacts`.
+        pub fn from_env() -> Result<Self> {
+            let dir = std::env::var("RMPS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Self::new(dir)
         }
-        sizes.sort();
-        Ok(Self { rt, sizes, exec_calls: 0 })
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (once) and fetch an executable by artifact name.
+        pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.execs.contains_key(name) {
+                let path = self.dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| rterr!("non-utf8 path"))?,
+                )
+                .map_err(|e| rterr!("parsing {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| rterr!("compiling {name}: {e:?}"))?;
+                self.execs.insert(name.to_string(), exe);
+            }
+            Ok(&self.execs[name])
+        }
+
+        /// Execute the `sort_pairs` artifact `name` on a full (B, N) batch of
+        /// i64 keys/ids. Returns sorted (keys, ids) row-major.
+        pub fn run_sort_pairs(
+            &mut self,
+            name: &str,
+            b: usize,
+            n: usize,
+            keys: &[i64],
+            ids: &[i64],
+        ) -> Result<(Vec<i64>, Vec<i64>)> {
+            debug_assert_eq!(keys.len(), b * n);
+            let kl = xla::Literal::vec1(keys)
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| rterr!("{e:?}"))?;
+            let il = xla::Literal::vec1(ids)
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| rterr!("{e:?}"))?;
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(&[kl, il])
+                .map_err(|e| rterr!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| rterr!("{e:?}"))?;
+            let (ok, oi) = result.to_tuple2().map_err(|e| rterr!("{e:?}"))?;
+            Ok((
+                ok.to_vec::<i64>().map_err(|e| rterr!("{e:?}"))?,
+                oi.to_vec::<i64>().map_err(|e| rterr!("{e:?}"))?,
+            ))
+        }
+
+        /// Execute a plain `sort` artifact on a (B, N) batch of i64 keys.
+        pub fn run_sort(
+            &mut self,
+            name: &str,
+            b: usize,
+            n: usize,
+            keys: &[i64],
+        ) -> Result<Vec<i64>> {
+            debug_assert_eq!(keys.len(), b * n);
+            let kl = xla::Literal::vec1(keys)
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| rterr!("{e:?}"))?;
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(&[kl])
+                .map_err(|e| rterr!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| rterr!("{e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| rterr!("{e:?}"))?;
+            out.to_vec::<i64>().map_err(|e| rterr!("{e:?}"))
+        }
+
+        /// Execute a `classify` artifact: bucket index per element.
+        pub fn run_classify(
+            &mut self,
+            name: &str,
+            b: usize,
+            n: usize,
+            keys: &[i64],
+            tree: &[i64],
+        ) -> Result<Vec<i32>> {
+            let kl = xla::Literal::vec1(keys)
+                .reshape(&[b as i64, n as i64])
+                .map_err(|e| rterr!("{e:?}"))?;
+            let tl = xla::Literal::vec1(tree);
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(&[kl, tl])
+                .map_err(|e| rterr!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| rterr!("{e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| rterr!("{e:?}"))?;
+            out.to_vec::<i32>().map_err(|e| rterr!("{e:?}"))
+        }
     }
 
-    pub fn from_env() -> Result<Self> {
-        Self::new(Runtime::from_env()?)
+    /// Padding sentinel: sorts after every real (key, id) pair.
+    const PAD_KEY: i64 = i64::MAX;
+    const PAD_ID: i64 = i64::MAX;
+
+    /// The PJRT-backed batched local-sort backend: groups fragments by padded
+    /// row size, fills (B, N) batches, and launches the Pallas bitonic-network
+    /// executable once per batch. Fragments longer than the largest artifact
+    /// row fall back to pdqsort.
+    pub struct XlaSort {
+        rt: Runtime,
+        /// `sort_pairs` artifacts as (row_n, batch, name), ascending by n.
+        sizes: Vec<(usize, usize, String)>,
+        /// number of PJRT launches (batching effectiveness, for §Perf).
+        pub exec_calls: usize,
     }
 
-    /// Smallest artifact row size that fits `len`, if any.
-    fn pick(&self, len: usize) -> Option<(usize, usize, String)> {
-        self.sizes.iter().find(|(n, _, _)| *n >= len).cloned()
-    }
+    impl XlaSort {
+        pub fn new(rt: Runtime) -> Result<Self> {
+            let mut sizes: Vec<(usize, usize, String)> = rt
+                .manifest
+                .iter()
+                .filter(|(_, m)| m.kind == "sort_pairs")
+                .map(|(name, m)| (m.n, m.batch, name.clone()))
+                .collect();
+            if sizes.is_empty() {
+                return Err(rterr!(
+                    "no sort_pairs artifacts in manifest — run `make artifacts`"
+                ));
+            }
+            sizes.sort();
+            Ok(Self { rt, sizes, exec_calls: 0 })
+        }
 
-    fn sort_group(&mut self, group: &mut [&mut Vec<Elem>], n: usize, b: usize, name: &str) {
-        for chunk in group.chunks_mut(b) {
-            let mut keys = vec![PAD_KEY; b * n];
-            let mut ids = vec![PAD_ID; b * n];
-            for (r, run) in chunk.iter().enumerate() {
-                for (c, e) in run.iter().enumerate() {
-                    keys[r * n + c] = key_to_i64(e.key);
-                    ids[r * n + c] = e.id as i64;
+        pub fn from_env() -> Result<Self> {
+            Self::new(Runtime::from_env()?)
+        }
+
+        /// Smallest artifact row size that fits `len`, if any.
+        fn pick(&self, len: usize) -> Option<(usize, usize, String)> {
+            self.sizes.iter().find(|(n, _, _)| *n >= len).cloned()
+        }
+
+        fn sort_group(&mut self, group: &mut [&mut Vec<Elem>], n: usize, b: usize, name: &str) {
+            for chunk in group.chunks_mut(b) {
+                let mut keys = vec![PAD_KEY; b * n];
+                let mut ids = vec![PAD_ID; b * n];
+                for (r, run) in chunk.iter().enumerate() {
+                    for (c, e) in run.iter().enumerate() {
+                        keys[r * n + c] = key_to_i64(e.key);
+                        ids[r * n + c] = e.id as i64;
+                    }
+                }
+                let (ok, oi) = self
+                    .rt
+                    .run_sort_pairs(name, b, n, &keys, &ids)
+                    .expect("PJRT sort_pairs execution failed");
+                self.exec_calls += 1;
+                for (r, run) in chunk.iter_mut().enumerate() {
+                    let len = run.len();
+                    run.clear();
+                    for c in 0..len {
+                        let k = key_from_i64(ok[r * n + c]);
+                        let id = oi[r * n + c] as u64;
+                        run.push(Elem::with_id(k, id));
+                    }
                 }
             }
-            let (ok, oi) = self
-                .rt
-                .run_sort_pairs(name, b, n, &keys, &ids)
-                .expect("PJRT sort_pairs execution failed");
-            self.exec_calls += 1;
-            for (r, run) in chunk.iter_mut().enumerate() {
-                let len = run.len();
-                run.clear();
-                for c in 0..len {
-                    let k = key_from_i64(ok[r * n + c]);
-                    let id = oi[r * n + c] as u64;
-                    run.push(Elem::with_id(k, id));
+        }
+    }
+
+    impl SortBackend for XlaSort {
+        fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]) {
+            // group run indices by target artifact
+            let mut groups: HashMap<String, (usize, usize, Vec<usize>)> = HashMap::new();
+            let mut fallback: Vec<usize> = Vec::new();
+            for (i, run) in runs.iter().enumerate() {
+                if run.len() <= 1 {
+                    continue;
+                }
+                match self.pick(run.len()) {
+                    Some((n, b, name)) => {
+                        groups.entry(name).or_insert_with(|| (n, b, Vec::new())).2.push(i);
+                    }
+                    None => fallback.push(i),
                 }
             }
+            let mut names: Vec<String> = groups.keys().cloned().collect();
+            names.sort();
+            for name in names {
+                let (n, b, idxs) = groups.remove(&name).unwrap();
+                // move the runs out, sort the batch, move them back — avoids
+                // aliasing &mut into `runs` at multiple indices
+                let mut taken: Vec<(usize, Vec<Elem>)> =
+                    idxs.iter().map(|&i| (i, std::mem::take(runs[i]))).collect();
+                {
+                    let mut refs: Vec<&mut Vec<Elem>> =
+                        taken.iter_mut().map(|(_, v)| v).collect();
+                    self.sort_group(&mut refs, n, b, &name);
+                }
+                for (i, v) in taken {
+                    *runs[i] = v;
+                }
+            }
+            for i in fallback {
+                runs[i].sort_unstable();
+            }
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-pallas-bitonic"
         }
     }
 }
 
-impl SortBackend for XlaSort {
-    fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]) {
-        // group run indices by target artifact
-        let mut groups: HashMap<String, (usize, usize, Vec<usize>)> = HashMap::new();
-        let mut fallback: Vec<usize> = Vec::new();
-        for (i, run) in runs.iter().enumerate() {
-            if run.len() <= 1 {
-                continue;
-            }
-            match self.pick(run.len()) {
-                Some((n, b, name)) => {
-                    groups.entry(name).or_insert_with(|| (n, b, Vec::new())).2.push(i);
-                }
-                None => fallback.push(i),
-            }
-        }
-        let mut names: Vec<String> = groups.keys().cloned().collect();
-        names.sort();
-        for name in names {
-            let (n, b, idxs) = groups.remove(&name).unwrap();
-            // move the runs out, sort the batch, move them back — avoids
-            // aliasing &mut into `runs` at multiple indices
-            let mut taken: Vec<(usize, Vec<Elem>)> =
-                idxs.iter().map(|&i| (i, std::mem::take(runs[i]))).collect();
-            {
-                let mut refs: Vec<&mut Vec<Elem>> =
-                    taken.iter_mut().map(|(_, v)| v).collect();
-                self.sort_group(&mut refs, n, b, &name);
-            }
-            for (i, v) in taken {
-                *runs[i] = v;
-            }
-        }
-        for i in fallback {
-            runs[i].sort_unstable();
-        }
+#[cfg(feature = "xla")]
+pub use pjrt::{Runtime, XlaSort};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_entries_comments_and_blanks() {
+        let text = "\
+# artifact manifest (name kind batch n [splitters])
+sort_pairs_i64_64x256 sort_pairs 64 256
+
+classify_i64_64x256_s63 classify 64 256 63
+";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        let s = &m["sort_pairs_i64_64x256"];
+        assert_eq!(
+            (s.kind.as_str(), s.batch, s.n, s.splitters),
+            ("sort_pairs", 64, 256, 0)
+        );
+        assert_eq!(m["classify_i64_64x256_s63"].splitters, 63);
     }
 
-    fn name(&self) -> &'static str {
-        "xla-pallas-bitonic"
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        let short = parse_manifest("name kind 64");
+        assert!(short.is_err());
+        assert!(short.unwrap_err().0.contains("line 1"));
+        let bad_num = parse_manifest("ok sort_pairs 64 256\nbad sort_pairs 64 nan");
+        assert!(bad_num.is_err());
+        assert!(bad_num.unwrap_err().0.contains("line 2"));
+        // a *present* but unparseable splitters field is an error too
+        assert!(parse_manifest("c classify 64 256 s63").is_err());
+    }
+
+    #[test]
+    fn manifest_empty_is_ok() {
+        assert!(parse_manifest("").unwrap().is_empty());
+        assert!(parse_manifest("# only a comment\n").unwrap().is_empty());
     }
 }

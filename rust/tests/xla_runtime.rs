@@ -3,6 +3,11 @@
 //!
 //! Requires `make artifacts` (the tests locate the artifact dir relative to
 //! CARGO_MANIFEST_DIR and skip loudly if it is missing).
+//!
+//! Compiled only with `--features xla`: the default test run needs neither
+//! PJRT nor the artifacts.
+
+#![cfg(feature = "xla")]
 
 use rmps::algorithms::{run, run_with_backend, Algorithm};
 use rmps::config::RunConfig;
