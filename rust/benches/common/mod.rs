@@ -25,3 +25,31 @@ pub fn time_ms<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
+
+/// Worker-thread knob for the experiment driver (`RMPS_BENCH_JOBS`,
+/// default: available host parallelism).
+pub fn env_jobs() -> usize {
+    env_usize("RMPS_BENCH_JOBS", rmps::exec::available_jobs())
+}
+
+/// JSON string literal (the only escaping our bench labels need).
+pub fn json_str(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+/// Write `BENCH_<name>.json` into the current directory — the *package*
+/// root (`rust/`) under `cargo bench`, which runs bench binaries with cwd
+/// set to the manifest dir. CI uploads these as artifacts so perf
+/// regressions leave a machine-readable trail. `fields` values must
+/// already be valid JSON fragments (numbers as-is, strings via
+/// [`json_str`], arrays preassembled).
+pub fn write_bench_json(name: &str, fields: &[(&str, String)]) {
+    let body: Vec<String> =
+        fields.iter().map(|(k, v)| format!("  {}: {v}", json_str(k))).collect();
+    let json = format!("{{\n{}\n}}\n", body.join(",\n"));
+    let path = format!("BENCH_{name}.json");
+    // fail loudly: this JSON is the perf-regression record CI archives —
+    // a silently missing file would read as "bench passed, no data"
+    std::fs::write(&path, json).unwrap_or_else(|e| panic!("could not write {path}: {e}"));
+    println!("[bench] wrote {path}");
+}

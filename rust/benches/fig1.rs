@@ -1,10 +1,14 @@
 //! Bench: regenerate Figure 1 — running times of GatherM, AllGatherM,
 //! RFIS, RQuick, Bitonic, RAMS, HykSort, SSort over the n/p sweep on the
 //! four headline instances. Prints the paper-style table (simulated model
-//! time) plus host wallclock per sweep.
+//! time) plus host wallclock per sweep, and emits `BENCH_fig1.json` with
+//! the serial/parallel wallclocks (CI uploads it as an artifact).
 //!
-//! Knobs: RMPS_BENCH_P (default 1024), RMPS_BENCH_MAXLOG (default 12),
-//!        RMPS_BENCH_REPS (default 1).
+//! Knobs: RMPS_BENCH_P (default 512), RMPS_BENCH_MAXLOG (default 10),
+//!        RMPS_BENCH_REPS (default 1), RMPS_BENCH_JOBS (default: all
+//!        cores). The --jobs 1 baseline sweep (for the recorded speedup
+//!        and identity check) runs by default; RMPS_BENCH_SERIAL=0 skips
+//!        it.
 
 mod common;
 
@@ -15,14 +19,43 @@ fn main() {
     let p = common::env_usize("RMPS_BENCH_P", 1 << 9);
     let max_log = common::env_usize("RMPS_BENCH_MAXLOG", 10) as u32;
     let reps = common::env_usize("RMPS_BENCH_REPS", 1);
-    let base = RunConfig::default().with_p(p);
+    let jobs = common::env_jobs();
+    let serial_too = common::env_usize("RMPS_BENCH_SERIAL", 1) != 0;
 
     let t = std::time::Instant::now();
-    let fig = fig1::run(&base, max_log, reps);
+    let fig = fig1::run(&RunConfig::default().with_p(p), max_log, reps, jobs);
     let wall = t.elapsed().as_secs_f64();
     fig.print();
     println!(
-        "\n[fig1] p={p} max_log={max_log} reps={reps}: {} cells in {wall:.1}s host wallclock",
+        "\n[fig1] p={p} max_log={max_log} reps={reps} jobs={jobs}: {} cells in {wall:.1}s host wallclock",
         fig.cells.len()
     );
+
+    let mut fields = vec![
+        ("bench", common::json_str("fig1")),
+        ("p", p.to_string()),
+        ("max_log", max_log.to_string()),
+        ("reps", reps.to_string()),
+        ("jobs", jobs.to_string()),
+        ("cells", fig.cells.len().to_string()),
+        ("wall_s", format!("{wall:.3}")),
+    ];
+    if serial_too && jobs > 1 {
+        let t = std::time::Instant::now();
+        let serial = fig1::run(&RunConfig::default().with_p(p), max_log, reps, 1);
+        let serial_wall = t.elapsed().as_secs_f64();
+        let identical = serial
+            .cells
+            .iter()
+            .zip(&fig.cells)
+            .all(|(a, b)| a.time.to_bits() == b.time.to_bits() && a.crashed == b.crashed);
+        println!(
+            "[fig1] jobs=1 baseline: {serial_wall:.1}s  (speedup ×{:.2}, identical={identical})",
+            serial_wall / wall.max(1e-9)
+        );
+        fields.push(("serial_wall_s", format!("{serial_wall:.3}")));
+        fields.push(("speedup", format!("{:.3}", serial_wall / wall.max(1e-9))));
+        fields.push(("identical_across_jobs", identical.to_string()));
+    }
+    common::write_bench_json("fig1", &fields);
 }

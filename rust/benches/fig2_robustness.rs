@@ -2,7 +2,8 @@
 //! ratios: RQuick vs NTB-Quick (2a big machine, 2b small machine), RAMS vs
 //! NDMA-AMS (2c), RAMS vs NS-SSort (2d).
 //!
-//! Knobs: RMPS_BENCH_P (default 1024), RMPS_BENCH_MAXLOG (default 12).
+//! Knobs: RMPS_BENCH_P (default 512), RMPS_BENCH_MAXLOG (default 10),
+//! RMPS_BENCH_JOBS (default: all cores).
 
 mod common;
 
@@ -13,22 +14,23 @@ use rmps::experiments::NpPoint;
 fn main() {
     let p = common::env_usize("RMPS_BENCH_P", 1 << 9);
     let max_log = common::env_usize("RMPS_BENCH_MAXLOG", 10) as u32;
+    let jobs = common::env_jobs();
     let points: Vec<NpPoint> =
         (0..=max_log).step_by(2).map(|l| NpPoint::Dense(1 << l)).collect();
 
     let t = std::time::Instant::now();
     let base = RunConfig::default().with_p(p);
-    let series = fig2::fig2a(&base, &points, 1);
+    let series = fig2::fig2a(&base, &points, 1, jobs);
     fig2::print_series(&format!("Fig.2a RQuick vs NTB-Quick (p={p})"), &series);
 
     let small = RunConfig::default().with_p((p / 4).max(16));
-    let series = fig2::fig2a(&small, &points, 1);
+    let series = fig2::fig2a(&small, &points, 1, jobs);
     fig2::print_series(&format!("Fig.2b RQuick vs NTB-Quick (p={})", small.p), &series);
 
-    let series = fig2::fig2c(&base, &points, 1);
+    let series = fig2::fig2c(&base, &points, 1, jobs);
     fig2::print_series(&format!("Fig.2c RAMS vs NDMA-AMS (p={p})"), &series);
 
-    let series = fig2::fig2d(&base, &points, 1);
+    let series = fig2::fig2d(&base, &points, 1, jobs);
     fig2::print_series(&format!("Fig.2d RAMS vs NS-SSort (p={p})"), &series);
 
     println!("\n[fig2] total host wallclock {:.1}s", t.elapsed().as_secs_f64());

@@ -2,7 +2,8 @@
 //! of the binary k-window median tree vs Dean et al.'s ternary tree, with
 //! the c·n^−γ power-law fits.
 //!
-//! Knobs: RMPS_BENCH_MAXPOW2 (default 18), RMPS_BENCH_REPS (default 400).
+//! Knobs: RMPS_BENCH_MAXPOW2 (default 18), RMPS_BENCH_REPS (default 400),
+//! RMPS_BENCH_JOBS (default: all cores).
 
 mod common;
 
@@ -12,7 +13,7 @@ fn main() {
     let max_pow2 = common::env_usize("RMPS_BENCH_MAXPOW2", 18) as u32;
     let reps = common::env_usize("RMPS_BENCH_REPS", 400);
     let t = std::time::Instant::now();
-    let fig = fig4::run(max_pow2, reps, 42);
+    let fig = fig4::run(max_pow2, reps, 42, common::env_jobs());
     fig.print();
     println!(
         "\n[fig4] max n = 2^{max_pow2}, {reps} reps: {:.1}s host wallclock",

@@ -1,7 +1,8 @@
 //! Bench: regenerate Figure 5 / Appendix K — running-time ratios of every
 //! algorithm to the fastest one, per instance and n/p.
 //!
-//! Knobs: RMPS_BENCH_P (default 1024), RMPS_BENCH_MAXLOG (default 12).
+//! Knobs: RMPS_BENCH_P (default 512), RMPS_BENCH_MAXLOG (default 10),
+//! RMPS_BENCH_JOBS (default: all cores).
 
 mod common;
 
@@ -12,7 +13,7 @@ fn main() {
     let p = common::env_usize("RMPS_BENCH_P", 1 << 9);
     let max_log = common::env_usize("RMPS_BENCH_MAXLOG", 10) as u32;
     let t = std::time::Instant::now();
-    let fig = fig5::run(&RunConfig::default().with_p(p), max_log, 1);
+    let fig = fig5::run(&RunConfig::default().with_p(p), max_log, 1, common::env_jobs());
     fig.print();
     println!("\n[fig5] p={p}: {:.1}s host wallclock", t.elapsed().as_secs_f64());
 }

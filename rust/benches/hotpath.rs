@@ -2,9 +2,12 @@
 //!
 //! Measures (median of reps) the end-to-end simulation wallclock for the
 //! flagship algorithms at reference sizes, plus the isolated hot kernels
-//! (merge, partition, shuffle). EXPERIMENTS.md §Perf records before/after.
+//! (merge, partition, shuffle), and emits `BENCH_hotpath.json` (CI uploads
+//! it as an artifact).
 //!
-//! Knobs: RMPS_BENCH_REPS (default 3).
+//! Knobs: RMPS_BENCH_REPS (default 3); RMPS_BENCH_TINY=1 shrinks every
+//! size so a CI smoke run finishes in seconds while still driving the
+//! same code paths.
 
 mod common;
 
@@ -15,7 +18,10 @@ use rmps::input::{generate, Distribution};
 use rmps::partition::{partition, pick_splitters, SplitterTree};
 use rmps::rng::Rng;
 
-fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize) {
+/// One measured line: (label, median ms, Melem/s).
+type Line = (String, f64, f64);
+
+fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Line>) {
     let cfg = RunConfig::default().with_p(p).with_n_per_pe(m);
     let input = generate(&cfg, Distribution::Uniform);
     let ms = common::time_ms(reps, || {
@@ -24,28 +30,31 @@ fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize) {
         r.time
     });
     let n = (p * m) as f64;
-    println!(
-        "{:>10} p={p:<5} n/p={m:<6} {ms:>9.1} ms host   {:>7.2} Melem/s",
-        alg.name(),
-        n / ms / 1e3
-    );
+    let rate = n / ms / 1e3;
+    println!("{:>10} p={p:<5} n/p={m:<6} {ms:>9.1} ms host   {rate:>7.2} Melem/s", alg.name());
+    out.push((format!("{} p={p} n/p={m}", alg.name()), ms, rate));
 }
 
 fn main() {
     let reps = common::env_usize("RMPS_BENCH_REPS", 3);
+    let tiny = common::env_usize("RMPS_BENCH_TINY", 0) != 0;
+    // full sizes for perf tracking; tiny sizes for the CI smoke run
+    let sz = |full: usize, small: usize| if tiny { small } else { full };
+    let mut lines: Vec<Line> = Vec::new();
+
     println!("== end-to-end simulation wallclock (median of {reps}) ==");
-    bench_algo(Algorithm::RQuick, 1 << 10, 1 << 10, reps);
-    bench_algo(Algorithm::Rams, 1 << 9, 1 << 12, reps);
-    bench_algo(Algorithm::Rfis, 1 << 10, 4, reps);
-    bench_algo(Algorithm::Bitonic, 1 << 8, 1 << 10, reps);
-    bench_algo(Algorithm::HykSort, 1 << 9, 1 << 12, reps);
-    bench_algo(Algorithm::Robust, 1 << 10, 1 << 10, reps);
+    bench_algo(Algorithm::RQuick, sz(1 << 10, 1 << 5), sz(1 << 10, 1 << 6), reps, &mut lines);
+    bench_algo(Algorithm::Rams, sz(1 << 9, 1 << 5), sz(1 << 12, 1 << 7), reps, &mut lines);
+    bench_algo(Algorithm::Rfis, sz(1 << 10, 1 << 6), 4, reps, &mut lines);
+    bench_algo(Algorithm::Bitonic, sz(1 << 8, 1 << 5), sz(1 << 10, 1 << 6), reps, &mut lines);
+    bench_algo(Algorithm::HykSort, sz(1 << 9, 1 << 5), sz(1 << 12, 1 << 7), reps, &mut lines);
+    bench_algo(Algorithm::Robust, sz(1 << 10, 1 << 5), sz(1 << 10, 1 << 6), reps, &mut lines);
 
     println!("\n== isolated hot kernels ==");
     let mut rng = Rng::seeded(1, 1);
-    // two-way merge of 1M elements
-    let mut a: Vec<Elem> = (0..1 << 19).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
-    let mut b: Vec<Elem> = (0..1 << 19).map(|i| Elem::new(rng.next_u64(), 1, i)).collect();
+    let kn = sz(1 << 19, 1 << 12); // per-run elements of the 2-way merge
+    let mut a: Vec<Elem> = (0..kn).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
+    let mut b: Vec<Elem> = (0..kn).map(|i| Elem::new(rng.next_u64(), 1, i)).collect();
     a.sort_unstable();
     b.sort_unstable();
     let mut out = Vec::new();
@@ -53,29 +62,57 @@ fn main() {
         merge_into(&a, &b, &mut out);
         out.len()
     });
-    println!("merge_into 2×512k      {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+    let rate = (2 * kn) as f64 / ms / 1e3;
+    println!("merge_into 2-way       {ms:>9.1} ms   {rate:>7.2} Melem/s");
+    lines.push((format!("merge_into 2x{kn}"), ms, rate));
 
-    // 64-way merge of 1M total
-    let runs: Vec<Vec<Elem>> = (0..64)
+    let runs_n = 64;
+    let run_len = sz(1 << 14, 1 << 8);
+    let runs: Vec<Vec<Elem>> = (0..runs_n)
         .map(|r| {
             let mut v: Vec<Elem> =
-                (0..1 << 14).map(|i| Elem::new(rng.next_u64(), r, i)).collect();
+                (0..run_len).map(|i| Elem::new(rng.next_u64(), r, i)).collect();
             v.sort_unstable();
             v
         })
         .collect();
     let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
     let ms = common::time_ms(reps, || multiway_merge(&refs).len());
-    println!("multiway_merge 64×16k  {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+    let rate = (runs_n * run_len) as f64 / ms / 1e3;
+    println!("multiway_merge 64-way  {ms:>9.1} ms   {rate:>7.2} Melem/s");
+    lines.push((format!("multiway_merge 64x{run_len}"), ms, rate));
 
-    // SSSS partition of 1M elements over 127 splitters
-    let data: Vec<Elem> = (0..1 << 20).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
+    let pn = sz(1 << 20, 1 << 13);
+    let data: Vec<Elem> = (0..pn).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
     let mut sample: Vec<Elem> = data.iter().step_by(101).copied().collect();
     sample.sort_unstable();
     let spl = pick_splitters(&sample, 127);
     let tree = SplitterTree::new(&spl);
     let ms = common::time_ms(reps, || partition(&data, &tree, true).len());
-    println!("partition 1M s=127 TB  {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+    let rate = pn as f64 / ms / 1e3;
+    println!("partition s=127 TB     {ms:>9.1} ms   {rate:>7.2} Melem/s");
+    lines.push((format!("partition {pn} s=127 TB"), ms, rate));
     let ms = common::time_ms(reps, || partition(&data, &tree, false).len());
-    println!("partition 1M s=127     {ms:>9.1} ms   {:>7.2} Melem/s", (1 << 20) as f64 / ms / 1e3);
+    let rate = pn as f64 / ms / 1e3;
+    println!("partition s=127        {ms:>9.1} ms   {rate:>7.2} Melem/s");
+    lines.push((format!("partition {pn} s=127"), ms, rate));
+
+    let results: Vec<String> = lines
+        .iter()
+        .map(|(name, ms, rate)| {
+            format!(
+                "{{\"name\": {}, \"ms\": {ms:.3}, \"melem_per_s\": {rate:.3}}}",
+                common::json_str(name)
+            )
+        })
+        .collect();
+    common::write_bench_json(
+        "hotpath",
+        &[
+            ("bench", common::json_str("hotpath")),
+            ("reps", reps.to_string()),
+            ("tiny", tiny.to_string()),
+            ("results", format!("[{}]", results.join(", "))),
+        ],
+    );
 }

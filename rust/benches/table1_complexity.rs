@@ -2,7 +2,8 @@
 //! word volumes at p and 4p and compare the growth factors against the
 //! predicted asymptotic rows.
 //!
-//! Knobs: RMPS_BENCH_PSMALL (default 128), RMPS_BENCH_NPP (default 64).
+//! Knobs: RMPS_BENCH_PSMALL (default 128), RMPS_BENCH_NPP (default 64),
+//! RMPS_BENCH_JOBS (default: all cores).
 
 mod common;
 
@@ -12,7 +13,7 @@ fn main() {
     let p_small = common::env_usize("RMPS_BENCH_PSMALL", 1 << 7);
     let npp = common::env_usize("RMPS_BENCH_NPP", 64);
     let t = std::time::Instant::now();
-    let rows = table1::run_table(npp, p_small, 7);
+    let rows = table1::run_table(npp, p_small, 7, common::env_jobs());
     table1::print_rows(&rows);
 
     println!("\npredicted growth when p ×4 (n/p fixed):");

@@ -17,7 +17,7 @@ fn main() {
     let max_log: u32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(10);
 
     let base = RunConfig::default().with_p(p);
-    let fig = fig1::run(&base, max_log, 1);
+    let fig = fig1::run(&base, max_log, 1, rmps::exec::available_jobs());
 
     println!("winners per n/p on p = {p} (Uniform):");
     println!("{:>8} {:>12} {:>14} {:>12}", "n/p", "winner", "time", "selector");

@@ -1,0 +1,121 @@
+//! Dependency-free parallel execution for the experiment driver.
+//!
+//! The figure sweeps are embarrassingly parallel across (algorithm,
+//! distribution, n/p) cells, but the build environment is offline, so no
+//! rayon: this is a scoped-thread self-scheduling pool. Workers pull the
+//! next job index from a shared atomic counter (the classic work-stealing
+//! degenerate case where the "deque" is a single global index — optimal
+//! here because every job is coarse), so long cells never leave the other
+//! workers idle behind a static partition.
+//!
+//! Determinism: results are returned **in index order** regardless of which
+//! worker computed what or in which interleaving, so `jobs = 1` and
+//! `jobs = N` produce byte-identical experiment tables as long as each job
+//! is itself a pure function of its index (every `run_cell` is: all
+//! randomness derives from per-config seeds).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: the host's available
+/// parallelism (the `--jobs` CLI default), or 1 if it cannot be queried.
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `0..n` on up to `jobs` scoped worker threads, returning the
+/// results in index order.
+///
+/// `jobs` is clamped to `[1, n]`; `jobs <= 1` (or `n <= 1`) runs inline on
+/// the caller's thread with no pool overhead, so the serial path is exactly
+/// the pre-pool code path. A panic in any job is propagated to the caller
+/// with its original payload once the remaining workers have drained.
+pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let f = &f;
+    let mut slots: Vec<Option<R>> = Vec::new();
+    slots.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, f(i)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(done) => {
+                    for (i, r) in done {
+                        slots[i] = Some(r);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("pool covered every index")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_index_order() {
+        for jobs in [1, 2, 3, 8, 64] {
+            let out = parallel_map(jobs, 100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn matches_serial_for_uneven_work() {
+        // skewed job sizes exercise the self-scheduling (a static split
+        // would also pass, but with idle workers)
+        let work = |i: usize| -> u64 {
+            let reps = if i % 7 == 0 { 10_000 } else { 10 };
+            (0..reps).fold(i as u64, |a, b| a.wrapping_mul(31).wrapping_add(b))
+        };
+        let serial: Vec<u64> = (0..64).map(work).collect();
+        assert_eq!(parallel_map(4, 64, work), serial);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert_eq!(parallel_map(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(4, 1, |i| i + 1), vec![1]);
+        assert_eq!(parallel_map(0, 3, |i| i), vec![0, 1, 2]); // jobs clamped to >= 1
+        assert_eq!(parallel_map(100, 3, |i| i), vec![0, 1, 2]); // jobs clamped to <= n
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(4, 16, |i| {
+                if i == 5 {
+                    panic!("job 5 failed");
+                }
+                i
+            })
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn available_jobs_is_positive() {
+        assert!(available_jobs() >= 1);
+    }
+}

@@ -5,10 +5,12 @@
 
 use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
-use crate::experiments::{np_sweep, run_cell, CellResult, NpPoint};
+use crate::experiments::{np_sweep, run_cells, CellResult, NpPoint};
 use crate::input::Distribution;
 
-/// The sweep result: `rows[dist][point][alg]`.
+/// The sweep result. `cells` is laid out as a dense
+/// distribution-major/point/algorithm grid, so [`Fig1::cell`] is an index
+/// computation, not a scan.
 pub struct Fig1 {
     pub points: Vec<NpPoint>,
     pub algorithms: Vec<Algorithm>,
@@ -16,27 +18,45 @@ pub struct Fig1 {
     pub cells: Vec<CellResult>,
 }
 
-pub fn run(base: &RunConfig, max_log: u32, reps: usize) -> Fig1 {
+/// Regenerate Figure 1 on `jobs` worker threads (`1` = fully serial; the
+/// result is byte-identical for every job count).
+pub fn run(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig1 {
     let points = np_sweep(max_log);
     let algorithms: Vec<Algorithm> = Algorithm::FIG1.to_vec();
     let distributions: Vec<Distribution> = Distribution::FIG1.to_vec();
-    let mut cells = Vec::new();
+    let mut specs = Vec::with_capacity(distributions.len() * points.len() * algorithms.len());
     for &dist in &distributions {
         for &point in &points {
             for &alg in &algorithms {
-                cells.push(run_cell(alg, dist, base, point, reps));
+                specs.push((alg, dist, point));
             }
         }
     }
+    let cells = run_cells(jobs, base, &specs, reps);
     Fig1 { points, algorithms, distributions, cells }
 }
 
 impl Fig1 {
-    pub fn cell(&self, dist: Distribution, point: NpPoint, alg: Algorithm) -> &CellResult {
-        self.cells
+    /// Dense grid index of `(dist, point, alg)`; panics (like the old
+    /// linear scan) if the coordinate is not part of the sweep.
+    fn index_of(&self, dist: Distribution, point: NpPoint, alg: Algorithm) -> usize {
+        let d = self
+            .distributions
             .iter()
-            .find(|c| c.distribution == dist && c.point == point && c.algorithm == alg)
-            .expect("cell exists")
+            .position(|&x| x == dist)
+            .expect("distribution in sweep");
+        let pt = self.points.iter().position(|&x| x == point).expect("point in sweep");
+        let a = self.algorithms.iter().position(|&x| x == alg).expect("algorithm in sweep");
+        (d * self.points.len() + pt) * self.algorithms.len() + a
+    }
+
+    pub fn cell(&self, dist: Distribution, point: NpPoint, alg: Algorithm) -> &CellResult {
+        let c = &self.cells[self.index_of(dist, point, alg)];
+        debug_assert!(
+            c.distribution == dist && c.point == point && c.algorithm == alg,
+            "cell grid out of order"
+        );
+        c
     }
 
     /// Fastest algorithm at a point (ignoring crashes).
@@ -83,7 +103,7 @@ mod tests {
     #[test]
     fn fig1_shape_holds_on_small_machine() {
         let base = RunConfig { p: 1 << 6, ..Default::default() };
-        let fig = run(&base, 4, 1);
+        let fig = run(&base, 4, 1, crate::exec::available_jobs());
         // every cell either crashed (allowed for nonrobust algos on hard
         // instances) or produced a correct result
         for c in &fig.cells {
@@ -101,5 +121,27 @@ mod tests {
             matches!(tiny_winner, Algorithm::Rfis | Algorithm::GatherM),
             "tiny winner {tiny_winner:?}"
         );
+    }
+
+    /// The O(1) grid lookup agrees with a full scan on every coordinate.
+    #[test]
+    fn indexed_cell_lookup_matches_scan() {
+        let base = RunConfig { p: 1 << 4, ..Default::default() };
+        let fig = run(&base, 2, 1, 2);
+        for &dist in &fig.distributions {
+            for &pt in &fig.points {
+                for &alg in &fig.algorithms {
+                    let indexed = fig.cell(dist, pt, alg);
+                    let scanned = fig
+                        .cells
+                        .iter()
+                        .find(|c| {
+                            c.distribution == dist && c.point == pt && c.algorithm == alg
+                        })
+                        .expect("cell exists");
+                    assert!(std::ptr::eq(indexed, scanned));
+                }
+            }
+        }
     }
 }

@@ -8,7 +8,7 @@
 
 use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
-use crate::experiments::{run_cell, NpPoint};
+use crate::experiments::{run_cells, NpPoint};
 use crate::input::Distribution;
 
 /// One ratio series: time(robust)/time(nonrobust) per n/p point.
@@ -21,6 +21,57 @@ pub struct RatioSeries {
     pub ratios: Vec<(f64, bool, bool)>,
 }
 
+/// Fan the whole (distribution × point × {robust, nonrobust}) grid of a
+/// Fig. 2 panel out over the worker pool, then assemble the ratio series
+/// in deterministic grid order.
+fn ratio_figure(
+    robust: Algorithm,
+    nonrobust: Algorithm,
+    dists: &[Distribution],
+    base: &RunConfig,
+    points: &[NpPoint],
+    reps: usize,
+    jobs: usize,
+) -> Vec<RatioSeries> {
+    let mut specs = Vec::with_capacity(dists.len() * points.len() * 2);
+    for &d in dists {
+        for &pt in points {
+            specs.push((robust, d, pt));
+            specs.push((nonrobust, d, pt));
+        }
+    }
+    let mut cells = run_cells(jobs, base, &specs, reps).into_iter();
+    dists
+        .iter()
+        .map(|&d| {
+            let ratios = points
+                .iter()
+                .map(|&pt| {
+                    let r = cells.next().expect("robust cell");
+                    let n = cells.next().expect("nonrobust cell");
+                    debug_assert!(
+                        r.algorithm == robust && r.distribution == d && r.point == pt,
+                        "ratio grid out of order"
+                    );
+                    debug_assert!(
+                        n.algorithm == nonrobust && n.distribution == d && n.point == pt,
+                        "ratio grid out of order"
+                    );
+                    let ratio = if n.crashed {
+                        0.0 // nonrobust failed: robust wins "infinitely"
+                    } else if r.crashed {
+                        f64::INFINITY
+                    } else {
+                        r.time / n.time
+                    };
+                    (ratio, r.crashed, n.crashed)
+                })
+                .collect();
+            RatioSeries { distribution: d, points: points.to_vec(), ratios }
+        })
+        .collect()
+}
+
 pub fn ratio_series(
     robust: Algorithm,
     nonrobust: Algorithm,
@@ -28,21 +79,11 @@ pub fn ratio_series(
     base: &RunConfig,
     points: &[NpPoint],
     reps: usize,
+    jobs: usize,
 ) -> RatioSeries {
-    let mut ratios = Vec::with_capacity(points.len());
-    for &pt in points {
-        let r = run_cell(robust, dist, base, pt, reps);
-        let n = run_cell(nonrobust, dist, base, pt, reps);
-        let ratio = if n.crashed {
-            0.0 // nonrobust failed: robust wins "infinitely"
-        } else if r.crashed {
-            f64::INFINITY
-        } else {
-            r.time / n.time
-        };
-        ratios.push((ratio, r.crashed, n.crashed));
-    }
-    RatioSeries { distribution: dist, points: points.to_vec(), ratios }
+    ratio_figure(robust, nonrobust, &[dist], base, points, reps, jobs)
+        .pop()
+        .expect("one series")
 }
 
 /// The instances of Fig. 2a/2b.
@@ -63,22 +104,24 @@ pub const AMS_INSTANCES: [Distribution; 5] = [
     Distribution::DeterDupl,
 ];
 
-pub fn fig2a(base: &RunConfig, points: &[NpPoint], reps: usize) -> Vec<RatioSeries> {
-    QUICK_INSTANCES
-        .iter()
-        .map(|&d| ratio_series(Algorithm::RQuick, Algorithm::NtbQuick, d, base, points, reps))
-        .collect()
+pub fn fig2a(base: &RunConfig, points: &[NpPoint], reps: usize, jobs: usize) -> Vec<RatioSeries> {
+    ratio_figure(Algorithm::RQuick, Algorithm::NtbQuick, &QUICK_INSTANCES, base, points, reps, jobs)
 }
 
-pub fn fig2c(base: &RunConfig, points: &[NpPoint], reps: usize) -> Vec<RatioSeries> {
-    AMS_INSTANCES
-        .iter()
-        .map(|&d| ratio_series(Algorithm::Rams, Algorithm::NdmaAms, d, base, points, reps))
-        .collect()
+pub fn fig2c(base: &RunConfig, points: &[NpPoint], reps: usize, jobs: usize) -> Vec<RatioSeries> {
+    ratio_figure(Algorithm::Rams, Algorithm::NdmaAms, &AMS_INSTANCES, base, points, reps, jobs)
 }
 
-pub fn fig2d(base: &RunConfig, points: &[NpPoint], reps: usize) -> Vec<RatioSeries> {
-    vec![ratio_series(Algorithm::Rams, Algorithm::NsSSort, Distribution::Uniform, base, points, reps)]
+pub fn fig2d(base: &RunConfig, points: &[NpPoint], reps: usize, jobs: usize) -> Vec<RatioSeries> {
+    vec![ratio_series(
+        Algorithm::Rams,
+        Algorithm::NsSSort,
+        Distribution::Uniform,
+        base,
+        points,
+        reps,
+        jobs,
+    )]
 }
 
 pub fn print_series(title: &str, series: &[RatioSeries]) {
@@ -115,7 +158,7 @@ mod tests {
     fn fig2a_uniform_price_is_bounded_and_hard_instances_pay_off() {
         let base = RunConfig { p: 1 << 6, ..Default::default() };
         let points = [NpPoint::Dense(64), NpPoint::Dense(256)];
-        let series = fig2a(&base, &points, 1);
+        let series = fig2a(&base, &points, 1, crate::exec::available_jobs());
         let uni = &series[0];
         for &(ratio, rc, _) in &uni.ratios {
             assert!(!rc);
@@ -137,8 +180,15 @@ mod tests {
         // PE 0, sort, broadcast) alone dwarfs RAMS at scale
         let base = RunConfig { p: 1 << 8, ..Default::default() };
         let points = [NpPoint::Dense(256)];
-        let series =
-            ratio_series(Algorithm::Rams, Algorithm::SSort, Distribution::Uniform, &base, &points, 1);
+        let series = ratio_series(
+            Algorithm::Rams,
+            Algorithm::SSort,
+            Distribution::Uniform,
+            &base,
+            &points,
+            1,
+            2,
+        );
         let (ratio, rc, nc) = series.ratios[0];
         assert!(!rc && !nc);
         assert!(ratio < 1.0, "RAMS/SSort ratio {ratio} (must win)");
@@ -151,7 +201,7 @@ mod tests {
         // factor of it (the paper's 1.5–7.4× band is at 131 072 cores)
         let base = RunConfig { p: 1 << 6, ..Default::default() };
         let points = [NpPoint::Dense(512)];
-        let series = fig2d(&base, &points, 1);
+        let series = fig2d(&base, &points, 1, 2);
         let (ratio, rc, nc) = series[0].ratios[0];
         assert!(!rc && !nc);
         assert!(ratio.is_finite() && ratio < 8.0, "RAMS/NS-SSort ratio {ratio}");

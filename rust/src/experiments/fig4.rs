@@ -58,15 +58,29 @@ pub fn fit_power_law(points: &[MedianErrorPoint]) -> (f64, f64) {
 
 /// Binary tree over powers of two, ternary over powers of three (the
 /// paper's Fig. 4 setup: inputs up to 2^20, 2000 reps — scale down via
-/// `max_pow` / `reps` for CI).
-pub fn run(max_pow2: u32, reps: usize, seed: u64) -> Fig4 {
-    let binary: Vec<MedianErrorPoint> = (4..=max_pow2)
-        .map(|l| error_stats(1 << l, reps, seed, |v, r| sequential_binary_estimate(v, 2, r)))
-        .collect();
+/// `max_pow` / `reps` for CI). Every (tree, n) grid point runs as one job
+/// on the worker pool; each is seeded independently, so any `jobs` count
+/// yields identical statistics.
+pub fn run(max_pow2: u32, reps: usize, seed: u64, jobs: usize) -> Fig4 {
+    #[derive(Clone, Copy)]
+    enum Tree {
+        Bin(u32),
+        Ter(u32),
+    }
     let max_pow3 = ((max_pow2 as f64) * 2f64.ln() / 3f64.ln()).floor() as u32;
-    let ternary: Vec<MedianErrorPoint> = (3..=max_pow3)
-        .map(|l| error_stats(3usize.pow(l), reps, seed, |v, r| sequential_ternary_estimate(v, r)))
-        .collect();
+    let mut specs: Vec<Tree> = (4..=max_pow2).map(Tree::Bin).collect();
+    let n_bin = specs.len();
+    specs.extend((3..=max_pow3).map(Tree::Ter));
+    let mut pts = crate::exec::parallel_map(jobs, specs.len(), |i| match specs[i] {
+        Tree::Bin(l) => {
+            error_stats(1 << l, reps, seed, |v, r| sequential_binary_estimate(v, 2, r))
+        }
+        Tree::Ter(l) => {
+            error_stats(3usize.pow(l), reps, seed, |v, r| sequential_ternary_estimate(v, r))
+        }
+    });
+    let ternary: Vec<MedianErrorPoint> = pts.split_off(n_bin);
+    let binary = pts;
     let binary_fit = fit_power_law(&binary);
     let ternary_fit = fit_power_law(&ternary);
     Fig4 { binary, ternary, binary_fit, ternary_fit }
@@ -101,7 +115,7 @@ mod tests {
 
     #[test]
     fn binary_beats_ternary_and_errors_decay() {
-        let fig = run(12, 60, 42);
+        let fig = run(12, 60, 42, crate::exec::available_jobs());
         // errors decay with n
         let firstb = fig.binary.first().unwrap().max_err;
         let lastb = fig.binary.last().unwrap().max_err;

@@ -11,8 +11,8 @@ pub struct Fig5 {
     pub fig1: Fig1,
 }
 
-pub fn run(base: &RunConfig, max_log: u32, reps: usize) -> Fig5 {
-    Fig5 { fig1: fig1::run(base, max_log, reps) }
+pub fn run(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig5 {
+    Fig5 { fig1: fig1::run(base, max_log, reps, jobs) }
 }
 
 impl Fig5 {
@@ -60,7 +60,7 @@ mod tests {
     #[test]
     fn winner_has_ratio_one() {
         let base = RunConfig { p: 1 << 5, ..Default::default() };
-        let fig = run(&base, 3, 1);
+        let fig = run(&base, 3, 1, 2);
         for &d in &[Distribution::Uniform] {
             for &pt in &[NpPoint::Dense(1), NpPoint::Dense(8)] {
                 let w = fig.fig1.winner(d, pt);

@@ -9,7 +9,28 @@ pub mod tuning;
 
 use crate::algorithms::{run, Algorithm, RunReport};
 use crate::config::RunConfig;
+use crate::exec;
 use crate::input::{generate, Distribution};
+
+/// Run a batch of cells across the scoped-thread worker pool
+/// ([`crate::exec::parallel_map`]), returning results **in spec order**.
+///
+/// Every cell is a pure function of its spec (all randomness derives from
+/// per-config seeds), so any `jobs ≥ 1` produces byte-identical figures;
+/// the pool only changes wallclock — and peak transient memory, which
+/// scales with `jobs` because up to that many cells simulate concurrently
+/// (stored cells are lean: [`run_cell`] drops the output payload).
+pub fn run_cells(
+    jobs: usize,
+    base: &RunConfig,
+    specs: &[(Algorithm, Distribution, NpPoint)],
+    reps: usize,
+) -> Vec<CellResult> {
+    exec::parallel_map(jobs, specs.len(), |i| {
+        let (alg, dist, point) = specs[i];
+        run_cell(alg, dist, base, point, reps)
+    })
+}
 
 /// The n/p sweep grid of the paper's Fig. 1: sparse points 3^-5..3^-1 and
 /// dense powers of two up to `max_log`.
@@ -89,7 +110,13 @@ pub fn run_cell(
                 report: None,
             };
         }
-        let report = run(alg, &cfg, generate(&cfg, dist));
+        let mut report = run(alg, &cfg, generate(&cfg, dist));
+        // figures keep every cell alive for the whole sweep, and the
+        // parallel driver keeps up to `jobs` cells in flight on top: drop
+        // the per-PE output payload (Θ(n), or Θ(n·p) for AllGatherM's
+        // replicated output), which no figure consumer reads — the cell
+        // only needs time/stats/validation
+        report.output = Vec::new();
         if report.crashed.is_some() {
             return CellResult {
                 algorithm: alg,

@@ -49,8 +49,10 @@ pub struct Row {
     pub word_growth: f64,
 }
 
-/// Compare footprints at p and 4p (same n/p).
-pub fn run_table(n_per_pe: usize, p_small: usize, seed: u64) -> Vec<Row> {
+/// Compare footprints at p and 4p (same n/p). Every (algorithm, machine
+/// size) measurement is one job on the worker pool; rows keep the fixed
+/// algorithm order regardless of completion order.
+pub fn run_table(n_per_pe: usize, p_small: usize, seed: u64, jobs: usize) -> Vec<Row> {
     let p_large = p_small * 4;
     let algos = [
         Algorithm::GatherM,
@@ -62,12 +64,14 @@ pub fn run_table(n_per_pe: usize, p_small: usize, seed: u64) -> Vec<Row> {
         Algorithm::HykSort,
         Algorithm::SSort,
     ];
+    let foots = crate::exec::parallel_map(jobs, algos.len() * 2, |i| {
+        let alg = algos[i / 2];
+        let p = if i % 2 == 0 { p_small } else { p_large };
+        measure(alg, p, n_per_pe, seed)
+    });
     let mut rows = Vec::new();
-    for alg in algos {
-        let (Some(s), Some(l)) = (
-            measure(alg, p_small, n_per_pe, seed),
-            measure(alg, p_large, n_per_pe, seed),
-        ) else {
+    for (k, &alg) in algos.iter().enumerate() {
+        let (Some(s), Some(l)) = (foots[2 * k], foots[2 * k + 1]) else {
             continue;
         };
         rows.push(Row {
@@ -108,7 +112,7 @@ mod tests {
     fn table1_growth_ranks_algorithms() {
         // n/p must exceed 4·p_small so SSort's per-PE message count is not
         // capped by the element count (Ω(p) needs p distinct targets)
-        let rows = run_table(1 << 9, 1 << 5, 7);
+        let rows = run_table(1 << 9, 1 << 5, 7, crate::exec::available_jobs());
         let get = |a: Algorithm| rows.iter().find(|r| r.algorithm == a);
         // SSort's per-PE message count grows ~linearly with p (Ω(p) row);
         // RQuick's grows only logarithmically (log²p row)

@@ -47,21 +47,39 @@ pub struct Tuning {
     pub rquick_window: Vec<(usize, usize, f64)>,
 }
 
-pub fn run(p: usize, sizes: &[usize]) -> Tuning {
+pub fn run(p: usize, sizes: &[usize], jobs: usize) -> Tuning {
+    #[derive(Clone, Copy)]
+    enum Probe {
+        Rams(usize, usize),
+        Hyk(usize, usize),
+        Quick(usize, usize),
+    }
     let base = RunConfig::default().with_p(p);
+    let mut specs = Vec::with_capacity(sizes.len() * 10);
+    for &m in sizes {
+        for levels in 1..=3 {
+            specs.push(Probe::Rams(m, levels));
+        }
+        for k in [8usize, 16, 32, 64] {
+            specs.push(Probe::Hyk(m, k));
+        }
+        for w in [4usize, 16, 64] {
+            specs.push(Probe::Quick(m, w));
+        }
+    }
+    let times = crate::exec::parallel_map(jobs, specs.len(), |i| match specs[i] {
+        Probe::Rams(m, levels) => rams_time(&base.clone().with_n_per_pe(m), levels),
+        Probe::Hyk(m, k) => hyksort_time(&base.clone().with_n_per_pe(m), k),
+        Probe::Quick(m, w) => rquick_time(&base.clone().with_n_per_pe(m), w),
+    });
     let mut rams_levels = Vec::new();
     let mut hyksort_k = Vec::new();
     let mut rquick_window = Vec::new();
-    for &m in sizes {
-        let cfg = base.clone().with_n_per_pe(m);
-        for levels in 1..=3 {
-            rams_levels.push((m, levels, rams_time(&cfg, levels)));
-        }
-        for k in [8usize, 16, 32, 64] {
-            hyksort_k.push((m, k, hyksort_time(&cfg, k)));
-        }
-        for w in [4usize, 16, 64] {
-            rquick_window.push((m, w, rquick_time(&cfg, w)));
+    for (spec, t) in specs.iter().zip(times) {
+        match *spec {
+            Probe::Rams(m, levels) => rams_levels.push((m, levels, t)),
+            Probe::Hyk(m, k) => hyksort_k.push((m, k, t)),
+            Probe::Quick(m, w) => rquick_window.push((m, w, t)),
         }
     }
     Tuning { p, rams_levels, hyksort_k, rquick_window }
@@ -104,14 +122,14 @@ mod tests {
         // the App. J2 finding: more levels speed up RAMS for small inputs
         // (k ≈ p startups per PE collapse to l·p^(1/l)); with n/p = 256 on
         // p = 256 the 1-level variant pays ~min(p, n/p) startups per PE
-        let t = run(1 << 8, &[256]);
+        let t = run(1 << 8, &[256], crate::exec::available_jobs());
         let small_best = t.best_rams_level(256);
         assert!(small_best >= 2, "small-input best level {small_best}");
     }
 
     #[test]
     fn tuning_grid_is_complete() {
-        let t = run(1 << 6, &[64]);
+        let t = run(1 << 6, &[64], 2);
         assert_eq!(t.rams_levels.len(), 3);
         assert_eq!(t.hyksort_k.len(), 4);
         assert_eq!(t.rquick_window.len(), 3);

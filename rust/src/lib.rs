@@ -52,6 +52,7 @@
 pub mod algorithms;
 pub mod config;
 pub mod elements;
+pub mod exec;
 pub mod experiments;
 pub mod input;
 pub mod localsort;

@@ -60,6 +60,10 @@ MACHINE FLAGS (all commands)
   --alpha A        startup cost (default 4000)
   --beta B         per-word cost (default 13)
   --seed S         RNG seed (default 0xC0FFEE)
+  --jobs N         worker threads for figure/table sweeps
+                   (default: available host parallelism; results are
+                   byte-identical for every N — see README § Parallel
+                   experiment driver)
   --xla-local-sort use the PJRT/XLA batched local sorter
                    (needs artifacts/ and a build with --features xla)
 ";
@@ -153,6 +157,7 @@ fn main() -> Result<()> {
         return Ok(());
     };
     let a = Args::parse(&argv[1..])?;
+    let jobs: usize = a.get("jobs", rmps::exec::available_jobs())?;
 
     match cmd.as_str() {
         "run" => {
@@ -199,7 +204,8 @@ fn main() -> Result<()> {
         }
         "fig1" => {
             let cfg = machine_config(&a)?;
-            let fig = experiments::fig1::run(&cfg, a.get("max-log", 10u32)?, a.get("reps", 1)?);
+            let fig =
+                experiments::fig1::run(&cfg, a.get("max-log", 10u32)?, a.get("reps", 1)?, jobs);
             fig.print();
         }
         "fig2a" | "fig2b" => {
@@ -208,19 +214,19 @@ fn main() -> Result<()> {
                 cfg.p = 1 << 8; // the paper's smaller 8 192-core machine
             }
             let series =
-                experiments::fig2::fig2a(&cfg, &dense_points(a.get("max-log", 10u32)?), 1);
+                experiments::fig2::fig2a(&cfg, &dense_points(a.get("max-log", 10u32)?), 1, jobs);
             experiments::fig2::print_series("Fig.2a/b RQuick vs NTB-Quick", &series);
         }
         "fig2c" => {
             let cfg = machine_config(&a)?;
             let series =
-                experiments::fig2::fig2c(&cfg, &dense_points(a.get("max-log", 10u32)?), 1);
+                experiments::fig2::fig2c(&cfg, &dense_points(a.get("max-log", 10u32)?), 1, jobs);
             experiments::fig2::print_series("Fig.2c RAMS vs NDMA-AMS", &series);
         }
         "fig2d" => {
             let cfg = machine_config(&a)?;
             let series =
-                experiments::fig2::fig2d(&cfg, &dense_points(a.get("max-log", 12u32)?), 1);
+                experiments::fig2::fig2d(&cfg, &dense_points(a.get("max-log", 12u32)?), 1, jobs);
             experiments::fig2::print_series("Fig.2d RAMS vs NS-SSort", &series);
         }
         "fig4" => {
@@ -228,23 +234,25 @@ fn main() -> Result<()> {
                 a.get("max-pow2", 18u32)?,
                 a.get("reps", 500usize)?,
                 a.get("seed", 42u64)?,
+                jobs,
             )
             .print();
         }
         "fig5" => {
             let cfg = machine_config(&a)?;
-            experiments::fig5::run(&cfg, a.get("max-log", 10u32)?, 1).print();
+            experiments::fig5::run(&cfg, a.get("max-log", 10u32)?, 1, jobs).print();
         }
         "table1" => {
             let rows = experiments::table1::run_table(
                 a.get("n-per-pe", 64usize)?,
                 a.get("p-small", 1usize << 6)?,
                 a.get("seed", 7u64)?,
+                jobs,
             );
             experiments::table1::print_rows(&rows);
         }
         "tuning" => {
-            experiments::tuning::run(a.get("p", 1usize << 8)?, &[16, 256, 4096]).print();
+            experiments::tuning::run(a.get("p", 1usize << 8)?, &[16, 256, 4096], jobs).print();
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),

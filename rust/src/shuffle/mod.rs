@@ -46,13 +46,13 @@ pub fn hypercube_shuffle(
             data[pe] = v;
             outgoing[r] = send;
         }
-        // pairwise exchange along dimension j
-        for r in 0..size {
-            let pr = r ^ bit;
-            if r < pr {
-                mach.xchg(base + r, base + pr, outgoing[r].len(), outgoing[pr].len());
-            }
+        // pairwise exchange along dimension j — one batched superstep
+        // (disjoint pairs, so settlement is exact; see Machine::settle)
+        mach.begin_superstep();
+        for (r, pr) in crate::sim::rank_pairs(size, j) {
+            mach.xchg(base + r, base + pr, outgoing[r].len(), outgoing[pr].len());
         }
+        mach.settle();
         for r in 0..size {
             let pr = r ^ bit;
             let incoming = std::mem::take(&mut outgoing[pr]);

@@ -9,9 +9,16 @@
 //! Data-moving collectives really move the elements; scalar collectives
 //! really combine the values — the simulator never "fakes" a result, it
 //! only *prices* it.
+//!
+//! Every dimension round is priced through the batched superstep path
+//! ([`Machine::begin_superstep`]/[`Machine::settle`]): the round's pairwise
+//! exchanges (from [`rank_pairs`]) are buffered and settled in one pass,
+//! which is bit-identical to eager per-call charging because the pairs of
+//! one dimension are disjoint — see the exactness contract on
+//! [`Machine::begin_superstep`].
 
 use crate::elements::{merge, Elem};
-use crate::sim::Machine;
+use crate::sim::{rank_pairs, Machine};
 
 fn assert_pow2(pes: &[usize]) -> u32 {
     assert!(pes.len().is_power_of_two(), "hypercube collective needs 2^d members");
@@ -64,12 +71,11 @@ pub fn all_gather_merge(
         // move the current state out: each member reads its own old run
         // and its partner's — no cloning of the payload (§Perf)
         let old: Vec<Vec<Elem>> = std::mem::take(&mut full);
-        for r in 0..size {
-            let pr = r ^ bit;
-            if r < pr {
-                mach.xchg(pes[r], pes[pr], old[r].len(), old[pr].len());
-            }
+        mach.begin_superstep();
+        for (r, pr) in rank_pairs(size, j) {
+            mach.xchg(pes[r], pes[pr], old[r].len(), old[pr].len());
         }
+        mach.settle();
         full = (0..size)
             .map(|r| {
                 let pr = r ^ bit;
@@ -98,18 +104,27 @@ pub fn gather_merge(mach: &mut Machine, pes: &[usize], local: &[Vec<Elem>]) -> V
         pes.iter().map(|&pe| Some(local[pe].clone())).collect();
     for j in 0..dim {
         let bit = 1usize << j;
+        // senders this round: lowest set bit of r is `bit`; collect the
+        // round's transfers, price them as one batched superstep, merge after
+        let mut moves: Vec<(usize, usize, Vec<Elem>)> = Vec::new();
         for r in 0..size {
-            // senders this round: lowest set bit of r is `bit`
             if r & bit != 0 && r & (bit - 1) == 0 {
                 let dst = r & !bit;
                 let data = cur[r].take().expect("sender already gave data away");
-                mach.send(pes[r], pes[dst], data.len());
-                let acc = cur[dst].as_mut().expect("receiver must hold data");
-                let merged = merge(acc, &data);
-                mach.work_linear(pes[dst], merged.len());
-                mach.note_mem(pes[dst], merged.len(), "gather-merge");
-                *acc = merged;
+                moves.push((r, dst, data));
             }
+        }
+        mach.begin_superstep();
+        for (r, dst, data) in &moves {
+            mach.send(pes[*r], pes[*dst], data.len());
+        }
+        mach.settle();
+        for (_, dst, data) in moves {
+            let acc = cur[dst].as_mut().expect("receiver must hold data");
+            let merged = merge(acc, &data);
+            mach.work_linear(pes[dst], merged.len());
+            mach.note_mem(pes[dst], merged.len(), "gather-merge");
+            *acc = merged;
         }
     }
     cur[0].take().expect("root holds the result")
@@ -128,6 +143,9 @@ pub fn bcast_cost(mach: &mut Machine, pes: &[usize], root_r: usize, l: usize) {
     let mut have: Vec<bool> = (0..size).map(|r| rel(r) == 0).collect();
     for j in (0..dim).rev() {
         let bit = 1usize << j;
+        // one binomial round: holders pass to their dimension-j partners —
+        // sender/receiver sets are disjoint, so the round batches exactly
+        mach.begin_superstep();
         for r in 0..size {
             if have[r] && rel(r) & (bit - 1) == 0 && rel(r) & bit == 0 {
                 let partner = rel(rel(r) | bit); // undo relabel
@@ -137,6 +155,7 @@ pub fn bcast_cost(mach: &mut Machine, pes: &[usize], root_r: usize, l: usize) {
                 }
             }
         }
+        mach.settle();
     }
     debug_assert!(have.iter().all(|&h| h));
 }
@@ -155,12 +174,13 @@ pub fn allreduce_u64(
     for j in 0..dim {
         let bit = 1usize << j;
         let snapshot = cur.clone();
+        mach.begin_superstep();
+        for (r, pr) in rank_pairs(size, j) {
+            mach.xchg(pes[r], pes[pr], 1, 1);
+        }
+        mach.settle();
         for r in 0..size {
-            let pr = r ^ bit;
-            if r < pr {
-                mach.xchg(pes[r], pes[pr], 1, 1);
-            }
-            cur[r] = op(snapshot[r], snapshot[pr]);
+            cur[r] = op(snapshot[r], snapshot[r ^ bit]);
         }
     }
     let v = cur[0];
@@ -184,11 +204,13 @@ pub fn allreduce_vec_u64(
     for j in 0..dim {
         let bit = 1usize << j;
         let snapshot: Vec<Vec<u64>> = pes.iter().map(|&pe| vals[pe].clone()).collect();
+        mach.begin_superstep();
+        for (r, pr) in rank_pairs(size, j) {
+            mach.xchg(pes[r], pes[pr], len, len);
+        }
+        mach.settle();
         for r in 0..size {
             let pr = r ^ bit;
-            if r < pr {
-                mach.xchg(pes[r], pes[pr], len, len);
-            }
             let dst = &mut vals[pes[r]];
             for (d, s) in dst.iter_mut().zip(snapshot[pr].iter()) {
                 *d = op(*d, *s);
@@ -209,11 +231,13 @@ pub fn prefix_sum(mach: &mut Machine, pes: &[usize], vals: &[usize]) -> Vec<(usi
         let bit = 1usize << j;
         let pre_snap = pre.clone();
         let tot_snap = tot.clone();
+        mach.begin_superstep();
+        for (r, pr) in rank_pairs(size, j) {
+            mach.xchg(pes[r], pes[pr], 1, 1);
+        }
+        mach.settle();
         for r in 0..size {
             let pr = r ^ bit;
-            if r < pr {
-                mach.xchg(pes[r], pes[pr], 1, 1);
-            }
             if pr < r {
                 pre[r] = pre_snap[r] + tot_snap[pr];
             }
@@ -241,11 +265,13 @@ pub fn prefix_sum_vec(
         let bit = 1usize << j;
         let pre_snap = pre.clone();
         let tot_snap = tot.clone();
+        mach.begin_superstep();
+        for (r, pr) in rank_pairs(size, j) {
+            mach.xchg(pes[r], pes[pr], len, len);
+        }
+        mach.settle();
         for r in 0..size {
             let pr = r ^ bit;
-            if r < pr {
-                mach.xchg(pes[r], pes[pr], len, len);
-            }
             for i in 0..len {
                 if pr < r {
                     pre[r][i] = pre_snap[r][i] + tot_snap[pr][i];

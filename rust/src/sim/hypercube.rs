@@ -86,6 +86,23 @@ impl Cube {
     }
 }
 
+/// The pairwise exchange pattern of one hypercube dimension, in *group
+/// rank* space: yields each `(r, r | 2^j)` pair once, low rank first, in
+/// increasing order of `r` — for `r` in `0..size` with bit `j` clear.
+///
+/// This is the one communication round of "iterate over dimensions"
+/// (Algorithm 1); the pairs are disjoint by construction, which is exactly
+/// the contract [`crate::sim::Machine::begin_superstep`] needs to settle a
+/// whole dimension in one batched pass. Collectives map ranks to global
+/// PEs through their `pes` slice, so the same pattern serves contiguous
+/// subcubes and strided groups alike.
+pub fn rank_pairs(size: usize, j: u32) -> impl Iterator<Item = (usize, usize)> {
+    debug_assert!(size.is_power_of_two());
+    let bit = 1usize << j;
+    debug_assert!(bit < size.max(1));
+    (0..size).filter(move |r| r & bit == 0).map(move |r| (r, r | bit))
+}
+
 /// Reverse the low `bits` bits of `x` — the Mirrored instance's `m_i` and
 /// the bit-fixing routing analysis both need it.
 #[inline]
@@ -139,6 +156,23 @@ mod tests {
         let c = Cube::whole(8);
         assert_eq!(c.partner(0, 2), 4);
         assert_eq!(c.partner(5, 0), 4);
+    }
+
+    #[test]
+    fn rank_pairs_cover_each_rank_once() {
+        for j in 0..3u32 {
+            let pairs: Vec<_> = rank_pairs(8, j).collect();
+            assert_eq!(pairs.len(), 4, "dim {j}");
+            let mut seen = vec![false; 8];
+            for (lo, hi) in pairs {
+                assert_eq!(lo ^ hi, 1 << j);
+                assert!(lo < hi);
+                assert!(!seen[lo] && !seen[hi]);
+                seen[lo] = true;
+                seen[hi] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
     }
 
     #[test]

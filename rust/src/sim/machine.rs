@@ -23,6 +23,53 @@ impl std::fmt::Display for Crash {
     }
 }
 
+/// Reusable settlement scratch (dense per-PE accumulators + the list of
+/// PEs actually touched this round). Held by the [`Machine`] so irregular
+/// rounds cost O(messages) instead of O(p) allocations per call — the
+/// per-message overhead that used to dominate host wallclock at p ≥ 2^12.
+///
+/// Invariant outside of [`Machine::route_round`]/[`Machine::settle`]: every
+/// slot is zero/false and `touched` is empty (each settlement cleans only
+/// the slots it dirtied).
+#[derive(Clone, Debug, Default)]
+struct RouteScratch {
+    out: Vec<f64>,
+    inc: Vec<f64>,
+    recv_ready: Vec<f64>,
+    indeg: Vec<usize>,
+    outdeg: Vec<usize>,
+    seen: Vec<bool>,
+    touched: Vec<usize>,
+}
+
+impl RouteScratch {
+    fn ensure_capacity(&mut self, p: usize) {
+        if self.out.len() < p {
+            self.out.resize(p, 0.0);
+            self.inc.resize(p, 0.0);
+            self.recv_ready.resize(p, 0.0);
+            self.indeg.resize(p, 0);
+            self.outdeg.resize(p, 0);
+            self.seen.resize(p, false);
+        }
+    }
+}
+
+/// One buffered point-to-point operation of an open superstep.
+#[derive(Clone, Copy, Debug)]
+enum PendingOp {
+    Xchg { i: usize, j: usize, l_ij: usize, l_ji: usize },
+    Send { from: usize, to: usize, l: usize },
+}
+
+/// Transcript of an open superstep: pairwise operations in call order plus
+/// all routed messages, settled together by [`Machine::settle`].
+#[derive(Clone, Debug, Default)]
+struct Transcript {
+    ops: Vec<PendingOp>,
+    route: Vec<(usize, usize, usize)>,
+}
+
 /// The simulated machine: `p` PEs, one virtual clock each.
 #[derive(Clone, Debug)]
 pub struct Machine {
@@ -33,6 +80,10 @@ pub struct Machine {
     /// Per-PE memory budget in elements; `None` disables crash detection.
     pub mem_cap_elems: Option<usize>,
     crash: Option<Crash>,
+    scratch: RouteScratch,
+    transcript: Option<Transcript>,
+    /// Drained transcript kept for buffer reuse across supersteps.
+    spare: Transcript,
 }
 
 impl Machine {
@@ -47,6 +98,9 @@ impl Machine {
             stats: Stats::default(),
             mem_cap_elems: None,
             crash: None,
+            scratch: RouteScratch::default(),
+            transcript: None,
+            spare: Transcript::default(),
         }
     }
 
@@ -143,8 +197,19 @@ impl Machine {
 
     /// Pairwise sendrecv: PE `i` sends `l_ij` words to `j`, receives `l_ji`.
     /// Both finish at `max(c_i, c_j) + α + β·len` (telephone model).
+    /// Inside an open superstep the call is buffered until [`settle`].
+    ///
+    /// [`settle`]: Machine::settle
     pub fn xchg(&mut self, i: usize, j: usize, l_ij: usize, l_ji: usize) {
         debug_assert!(i != j);
+        if let Some(t) = self.transcript.as_mut() {
+            t.ops.push(PendingOp::Xchg { i, j, l_ij, l_ji });
+            return;
+        }
+        self.xchg_now(i, j, l_ij, l_ji);
+    }
+
+    fn xchg_now(&mut self, i: usize, j: usize, l_ij: usize, l_ji: usize) {
         let start = self.clock[i].max(self.clock[j]);
         let t = start + self.cost.xchg(l_ij, l_ji);
         self.clock[i] = t;
@@ -155,8 +220,19 @@ impl Machine {
 
     /// One-way message: sender busy `α + β·l`; receiver resumes no earlier
     /// than the arrival and pays the receive overhead.
+    /// Inside an open superstep the call is buffered until [`settle`].
+    ///
+    /// [`settle`]: Machine::settle
     pub fn send(&mut self, from: usize, to: usize, l: usize) {
         debug_assert!(from != to);
+        if let Some(t) = self.transcript.as_mut() {
+            t.ops.push(PendingOp::Send { from, to, l });
+            return;
+        }
+        self.send_now(from, to, l);
+    }
+
+    fn send_now(&mut self, from: usize, to: usize, l: usize) {
         let c = self.cost.msg(l);
         self.clock[from] += c;
         let arrival = self.clock[from];
@@ -175,44 +251,179 @@ impl Machine {
     /// exact for 1-relations, within a factor ≤ 2 of an optimal schedule
     /// otherwise — fidelity enough for every crossover in the paper, while
     /// keeping the simulator deterministic.
+    ///
+    /// Inside an open superstep the messages are appended to the round
+    /// buffer; all `route_round` calls of the superstep settle as **one**
+    /// combined h-relation (see [`Machine::begin_superstep`]).
     pub fn route_round(&mut self, msgs: &[(usize, usize, usize)]) {
+        if let Some(t) = self.transcript.as_mut() {
+            t.route.extend_from_slice(msgs);
+            return;
+        }
+        self.settle_route(msgs);
+    }
+
+    // ---- batched superstep settlement ----------------------------------
+
+    /// Open a superstep: subsequent [`xchg`]/[`send`]/[`route_round`] calls
+    /// are buffered (costs *not* yet charged) until [`settle`] replays them
+    /// in one batched pass. Clock reads ([`time`], [`clock`]) in between see
+    /// the pre-superstep state.
+    ///
+    /// # Semantics preserved
+    ///
+    /// Settlement is **bit-identical** to issuing the same calls eagerly
+    /// provided the superstep is a genuine communication round, which is
+    /// how every converted call site uses it:
+    ///
+    /// * pairwise ops ([`xchg`]/[`send`]) touch pairwise-disjoint PE pairs
+    ///   (e.g. one hypercube dimension), so their relative order cannot
+    ///   matter — settle applies them in call order;
+    /// * routed messages form a single h-relation; buffering several
+    ///   [`route_round`] calls merges them into one round, which is exactly
+    ///   the superstep approximation the per-call path already used for a
+    ///   round handed over in one slice;
+    /// * a superstep mixing pairwise ops *and* routed messages must keep
+    ///   the two classes on disjoint PE sets (settle applies all pairwise
+    ///   ops before the merged route round, so an overlap would reorder
+    ///   charges on the shared PE). Debug builds assert both disjointness
+    ///   conditions.
+    ///
+    /// [`xchg`]: Machine::xchg
+    /// [`send`]: Machine::send
+    /// [`route_round`]: Machine::route_round
+    /// [`settle`]: Machine::settle
+    /// [`time`]: Machine::time
+    /// [`clock`]: Machine::clock
+    pub fn begin_superstep(&mut self) {
+        assert!(self.transcript.is_none(), "superstep already open");
+        // reuse the drained transcript's buffers: dimension rounds stay
+        // allocation-free after warmup
+        self.transcript = Some(std::mem::take(&mut self.spare));
+    }
+
+    /// Whether a superstep transcript is currently open.
+    pub fn in_superstep(&self) -> bool {
+        self.transcript.is_some()
+    }
+
+    /// Close the open superstep: apply all buffered pairwise ops in call
+    /// order, then settle all buffered routed messages as one h-relation in
+    /// a single pass over per-PE message tallies (radix-accumulated by PE
+    /// index — the sorted-by-PE view without the sort), using the machine's
+    /// reusable scratch buffers. See [`Machine::begin_superstep`] for the
+    /// exactness contract.
+    pub fn settle(&mut self) {
+        let mut t = self.transcript.take().expect("settle() without begin_superstep()");
+        #[cfg(debug_assertions)]
+        {
+            // the exactness contract (see begin_superstep): pairwise ops
+            // of one superstep must touch disjoint PE pairs, and routed
+            // messages must not share a PE with any pairwise op (settle
+            // reorders pairwise-before-route). Checked via the reusable
+            // scratch — no per-superstep allocation even in test builds.
+            self.scratch.ensure_capacity(self.p);
+            let scratch = &mut self.scratch;
+            for op in &t.ops {
+                let (a, b) = match *op {
+                    PendingOp::Xchg { i, j, .. } => (i, j),
+                    PendingOp::Send { from, to, .. } => (from, to),
+                };
+                for pe in [a, b] {
+                    debug_assert!(
+                        !scratch.seen[pe],
+                        "superstep pairwise ops must be disjoint (PE {pe} reused)"
+                    );
+                    scratch.seen[pe] = true;
+                    scratch.touched.push(pe);
+                }
+            }
+            for &(from, to, _) in &t.route {
+                debug_assert!(
+                    !scratch.seen[from] && !scratch.seen[to],
+                    "superstep routed messages must not share PEs with \
+                     pairwise ops (message {from}→{to})"
+                );
+            }
+            for &pe in &scratch.touched {
+                scratch.seen[pe] = false;
+            }
+            scratch.touched.clear();
+        }
+        for op in &t.ops {
+            match *op {
+                PendingOp::Xchg { i, j, l_ij, l_ji } => self.xchg_now(i, j, l_ij, l_ji),
+                PendingOp::Send { from, to, l } => self.send_now(from, to, l),
+            }
+        }
+        self.settle_route(&t.route);
+        t.ops.clear();
+        t.route.clear();
+        self.spare = t;
+    }
+
+    /// Charge one irregular round. One pass over the messages accumulates
+    /// per-PE send/receive tallies into the reusable scratch (only slots of
+    /// PEs that appear in the round are written and re-zeroed), then one
+    /// pass over the touched PEs advances clocks and degree stats — the
+    /// arithmetic is identical, addition order included, to the historical
+    /// per-call implementation that allocated five `vec![…; p]` per round.
+    fn settle_route(&mut self, msgs: &[(usize, usize, usize)]) {
         if msgs.is_empty() {
             return;
         }
-        let mut out = vec![0.0f64; self.p];
-        let mut indeg = vec![0usize; self.p];
-        let mut outdeg = vec![0usize; self.p];
-        for &(from, _, l) in msgs {
-            out[from] += self.cost.msg(l);
-            outdeg[from] += 1;
-        }
-        // a receiver cannot start draining before its senders have started
-        // this round (receive time itself overlaps the transmissions —
-        // the standard superstep approximation)
-        let mut recv_ready = vec![0.0f64; self.p];
-        for &(from, to, _) in msgs {
-            if self.clock[from] > recv_ready[to] {
-                recv_ready[to] = self.clock[from];
-            }
-            indeg[to] += 1;
-        }
-        let mut inc = vec![0.0f64; self.p];
-        for &(_, to, l) in msgs {
-            inc[to] += self.cost.msg(l);
-        }
-        for pe in 0..self.p {
-            let mut t = self.clock[pe] + out[pe];
-            if indeg[pe] > 0 {
-                t = t.max(recv_ready[pe]) + inc[pe];
-            }
-            self.clock[pe] = t;
-            let deg = indeg[pe].max(outdeg[pe]);
-            if deg > self.stats.max_degree {
-                self.stats.max_degree = deg;
+        self.scratch.ensure_capacity(self.p);
+        let scratch = &mut self.scratch;
+        let clock = &mut self.clock;
+        let cost = &self.cost;
+        let stats = &mut self.stats;
+
+        fn mark(seen: &mut [bool], touched: &mut Vec<usize>, pe: usize) {
+            if !seen[pe] {
+                seen[pe] = true;
+                touched.push(pe);
             }
         }
-        self.stats.messages += msgs.len() as u64;
-        self.stats.words += msgs.iter().map(|&(_, _, l)| l as u64).sum::<u64>();
+
+        for &(from, to, l) in msgs {
+            debug_assert!(from != to);
+            let c = cost.msg(l);
+            mark(&mut scratch.seen, &mut scratch.touched, from);
+            mark(&mut scratch.seen, &mut scratch.touched, to);
+            scratch.out[from] += c;
+            scratch.outdeg[from] += 1;
+            scratch.inc[to] += c;
+            scratch.indeg[to] += 1;
+            // a receiver cannot start draining before its senders have
+            // started this round (receive time itself overlaps the
+            // transmissions — the standard superstep approximation)
+            if clock[from] > scratch.recv_ready[to] {
+                scratch.recv_ready[to] = clock[from];
+            }
+        }
+        for &pe in &scratch.touched {
+            let mut t = clock[pe] + scratch.out[pe];
+            if scratch.indeg[pe] > 0 {
+                t = t.max(scratch.recv_ready[pe]) + scratch.inc[pe];
+            }
+            clock[pe] = t;
+            let deg = scratch.indeg[pe].max(scratch.outdeg[pe]);
+            if deg > stats.max_degree {
+                stats.max_degree = deg;
+            }
+        }
+        stats.messages += msgs.len() as u64;
+        stats.words += msgs.iter().map(|&(_, _, l)| l as u64).sum::<u64>();
+        // restore the all-clean invariant, touching only dirtied slots
+        for &pe in &scratch.touched {
+            scratch.out[pe] = 0.0;
+            scratch.inc[pe] = 0.0;
+            scratch.recv_ready[pe] = 0.0;
+            scratch.indeg[pe] = 0;
+            scratch.outdeg[pe] = 0;
+            scratch.seen[pe] = false;
+        }
+        scratch.touched.clear();
     }
 
     /// Barrier over a PE group: clocks advance to the group max (plus a
@@ -325,5 +536,94 @@ mod tests {
         let mut mach = m(1);
         mach.work_sort(0, 1024);
         assert_eq!(mach.clock(0), 1024.0 * 10.0);
+    }
+
+    #[test]
+    fn superstep_xchg_round_matches_eager() {
+        let mut eager = m(8);
+        let mut batched = m(8);
+        for pe in 0..8 {
+            eager.work(pe, (pe * 37) as f64);
+            batched.work(pe, (pe * 37) as f64);
+        }
+        for (i, j, a, b) in [(0, 1, 5, 3), (2, 3, 0, 9), (4, 7, 2, 2)] {
+            eager.xchg(i, j, a, b);
+        }
+        batched.begin_superstep();
+        assert!(batched.in_superstep());
+        for (i, j, a, b) in [(0, 1, 5, 3), (2, 3, 0, 9), (4, 7, 2, 2)] {
+            batched.xchg(i, j, a, b);
+        }
+        // buffered: clocks unchanged until settle
+        assert_eq!(batched.clock(0), 0.0);
+        batched.settle();
+        assert!(!batched.in_superstep());
+        for pe in 0..8 {
+            assert_eq!(eager.clock(pe).to_bits(), batched.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(eager.stats.messages, batched.stats.messages);
+        assert_eq!(eager.stats.words, batched.stats.words);
+    }
+
+    #[test]
+    fn superstep_send_round_matches_eager() {
+        let mut eager = m(4);
+        let mut batched = m(4);
+        eager.work(2, 500.0);
+        batched.work(2, 500.0);
+        eager.send(0, 1, 10);
+        eager.send(3, 2, 4);
+        batched.begin_superstep();
+        batched.send(0, 1, 10);
+        batched.send(3, 2, 4);
+        batched.settle();
+        for pe in 0..4 {
+            assert_eq!(eager.clock(pe).to_bits(), batched.clock(pe).to_bits(), "pe {pe}");
+        }
+    }
+
+    #[test]
+    fn superstep_merges_route_rounds() {
+        // two route_round calls inside one superstep == one eager call on
+        // the concatenation
+        let a = [(1usize, 0usize, 3usize), (2, 0, 1)];
+        let b = [(3usize, 0usize, 2usize), (4, 5, 7)];
+        let merged: Vec<_> = a.iter().chain(b.iter()).copied().collect();
+        let mut eager = m(8);
+        eager.route_round(&merged);
+        let mut batched = m(8);
+        batched.begin_superstep();
+        batched.route_round(&a);
+        batched.route_round(&b);
+        batched.settle();
+        for pe in 0..8 {
+            assert_eq!(eager.clock(pe).to_bits(), batched.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(eager.stats.messages, batched.stats.messages);
+        assert_eq!(eager.stats.max_degree, batched.stats.max_degree);
+    }
+
+    #[test]
+    fn route_scratch_is_clean_across_rounds() {
+        // back-to-back rounds must not leak tallies into each other
+        let mut mach = m(4);
+        mach.route_round(&[(0, 1, 10)]);
+        let after_first = mach.clock(1);
+        mach.route_round(&[(2, 3, 10)]);
+        // round 2 must not re-charge PEs 0/1
+        assert_eq!(mach.clock(1), after_first);
+        assert_eq!(mach.clock(3), 100.0 + 10.0);
+        // and an empty superstep settles as a no-op
+        mach.begin_superstep();
+        mach.settle();
+        assert_eq!(mach.clock(3), 110.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "superstep already open")]
+    fn nested_superstep_panics() {
+        let mut mach = m(2);
+        mach.begin_superstep();
+        mach.begin_superstep();
     }
 }

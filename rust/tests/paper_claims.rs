@@ -138,7 +138,7 @@ fn claim_rams_dominates_ssort() {
 /// least as well as the ternary tree, and both errors decay as n^-γ.
 #[test]
 fn claim_binary_median_tree_quality() {
-    let fig = fig4::run(14, 80, 7);
+    let fig = fig4::run(14, 80, 7, rmps::exec::available_jobs());
     // compare at comparable n: binary 2^12=4096 vs ternary 3^8=6561 —
     // binary must not be wildly worse despite smaller n
     let b = fig.binary.iter().find(|p| p.n == 1 << 12).unwrap();
@@ -153,7 +153,7 @@ fn claim_binary_median_tree_quality() {
 #[test]
 fn claim_full_coverage_of_input_sizes() {
     let base = RunConfig::default().with_p(1 << 6);
-    let fig = fig1::run(&base, 8, 1);
+    let fig = fig1::run(&base, 8, 1, rmps::exec::available_jobs());
     for &pt in &fig.points {
         for &d in &fig.distributions {
             let robust_ok = [Algorithm::GatherM, Algorithm::Rfis, Algorithm::RQuick, Algorithm::Rams]

@@ -1,0 +1,87 @@
+//! The parallel experiment driver's determinism guarantee: any `--jobs`
+//! count produces byte-identical figures, because every cell is a pure
+//! function of its grid spec and results are assembled in grid order.
+
+use rmps::config::RunConfig;
+use rmps::experiments::{fig1, fig2, table1, tuning, NpPoint};
+
+/// `--jobs 1` and `--jobs 8` produce identical Fig. 1 cells (times compared
+/// as raw f64 bits — "byte-identical", not approximately equal).
+#[test]
+fn fig1_cells_identical_across_job_counts() {
+    let base = RunConfig { p: 1 << 5, ..Default::default() };
+    let serial = fig1::run(&base, 3, 1, 1);
+    let parallel = fig1::run(&base, 3, 1, 8);
+    assert_eq!(serial.cells.len(), parallel.cells.len());
+    assert!(!serial.cells.is_empty());
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(a.distribution, b.distribution);
+        assert_eq!(a.point, b.point);
+        assert_eq!(
+            a.time.to_bits(),
+            b.time.to_bits(),
+            "{:?}/{:?}/{:?}: {} vs {}",
+            a.algorithm,
+            a.distribution,
+            a.point,
+            a.time,
+            b.time
+        );
+        assert_eq!(a.crashed, b.crashed);
+        assert_eq!(a.ok, b.ok);
+        let (ra, rb) = (a.report.as_ref(), b.report.as_ref());
+        assert_eq!(ra.is_some(), rb.is_some());
+        if let (Some(ra), Some(rb)) = (ra, rb) {
+            assert_eq!(ra.stats.messages, rb.stats.messages);
+            assert_eq!(ra.stats.words, rb.stats.words);
+        }
+    }
+}
+
+/// The same holds for the ratio panels and the α/β footprint table.
+#[test]
+fn fig2_and_table1_identical_across_job_counts() {
+    let base = RunConfig { p: 1 << 5, ..Default::default() };
+    let points = [NpPoint::Dense(4), NpPoint::Dense(64)];
+    let serial = fig2::fig2a(&base, &points, 1, 1);
+    let parallel = fig2::fig2a(&base, &points, 1, 8);
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.distribution, p.distribution);
+        for (&(ra, ca, na), &(rb, cb, nb)) in s.ratios.iter().zip(&p.ratios) {
+            assert_eq!(ra.to_bits(), rb.to_bits(), "{:?}", s.distribution);
+            assert_eq!((ca, na), (cb, nb));
+        }
+    }
+
+    let t_serial = table1::run_table(1 << 6, 1 << 4, 7, 1);
+    let t_parallel = table1::run_table(1 << 6, 1 << 4, 7, 8);
+    assert_eq!(t_serial.len(), t_parallel.len());
+    for (a, b) in t_serial.iter().zip(&t_parallel) {
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(a.small.messages_per_pe.to_bits(), b.small.messages_per_pe.to_bits());
+        assert_eq!(a.large.words_per_pe.to_bits(), b.large.words_per_pe.to_bits());
+        assert_eq!(a.msg_growth.to_bits(), b.msg_growth.to_bits());
+    }
+}
+
+/// Tuning grids keep their (size, parameter) order under parallel fan-out.
+#[test]
+fn tuning_grid_identical_across_job_counts() {
+    let serial = tuning::run(1 << 5, &[16, 64], 1);
+    let parallel = tuning::run(1 << 5, &[16, 64], 6);
+    assert_eq!(serial.rams_levels.len(), parallel.rams_levels.len());
+    for (a, b) in serial.rams_levels.iter().zip(&parallel.rams_levels) {
+        assert_eq!((a.0, a.1), (b.0, b.1));
+        assert_eq!(a.2.to_bits(), b.2.to_bits());
+    }
+    for (a, b) in serial.hyksort_k.iter().zip(&parallel.hyksort_k) {
+        assert_eq!((a.0, a.1), (b.0, b.1));
+        assert_eq!(a.2.to_bits(), b.2.to_bits());
+    }
+    for (a, b) in serial.rquick_window.iter().zip(&parallel.rquick_window) {
+        assert_eq!((a.0, a.1), (b.0, b.1));
+        assert_eq!(a.2.to_bits(), b.2.to_bits());
+    }
+}

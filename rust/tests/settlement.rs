@@ -1,0 +1,210 @@
+//! Settlement equivalence: the batched superstep path (`begin_superstep`
+//! → buffered `xchg`/`send`/`route_round` → `settle`) and the reusable
+//! scratch buffers inside `route_round` must be **bit-identical** — clocks
+//! and stats — to the historical per-call implementation on randomized
+//! message rounds. The oracle below is a line-for-line copy of the
+//! pre-refactor `route_round` (five fresh `vec![…; p]` per call).
+
+use rmps::model::CostModel;
+use rmps::prelude::Machine;
+use rmps::rng::Rng;
+
+/// Stats the oracle tracks (local_work is untouched by routing).
+#[derive(Default)]
+struct RefStats {
+    messages: u64,
+    words: u64,
+    max_degree: usize,
+}
+
+/// The pre-refactor `Machine::route_round`, verbatim, over plain arrays.
+fn reference_route_round(
+    p: usize,
+    clock: &mut [f64],
+    cost: &CostModel,
+    stats: &mut RefStats,
+    msgs: &[(usize, usize, usize)],
+) {
+    if msgs.is_empty() {
+        return;
+    }
+    let mut out = vec![0.0f64; p];
+    let mut indeg = vec![0usize; p];
+    let mut outdeg = vec![0usize; p];
+    for &(from, _, l) in msgs {
+        out[from] += cost.msg(l);
+        outdeg[from] += 1;
+    }
+    let mut recv_ready = vec![0.0f64; p];
+    for &(from, to, _) in msgs {
+        if clock[from] > recv_ready[to] {
+            recv_ready[to] = clock[from];
+        }
+        indeg[to] += 1;
+    }
+    let mut inc = vec![0.0f64; p];
+    for &(_, to, l) in msgs {
+        inc[to] += cost.msg(l);
+    }
+    for pe in 0..p {
+        let mut t = clock[pe] + out[pe];
+        if indeg[pe] > 0 {
+            t = t.max(recv_ready[pe]) + inc[pe];
+        }
+        clock[pe] = t;
+        let deg = indeg[pe].max(outdeg[pe]);
+        if deg > stats.max_degree {
+            stats.max_degree = deg;
+        }
+    }
+    stats.messages += msgs.len() as u64;
+    stats.words += msgs.iter().map(|&(_, _, l)| l as u64).sum::<u64>();
+}
+
+fn cost() -> CostModel {
+    CostModel { alpha: 4000.0, beta: 13.0, cmp: 2.0, duplex: true }
+}
+
+/// One random irregular round: up to `3p` messages, arbitrary fan-in/out.
+fn random_round(rng: &mut Rng, p: usize) -> Vec<(usize, usize, usize)> {
+    let k = 1 + rng.below(3 * p as u64) as usize;
+    (0..k)
+        .map(|_| {
+            let from = rng.below(p as u64) as usize;
+            let mut to = rng.below(p as u64) as usize;
+            if to == from {
+                to = (to + 1) % p;
+            }
+            (from, to, rng.below(64) as usize)
+        })
+        .collect()
+}
+
+/// Direct `route_round` (scratch-buffer path) vs the allocation-per-call
+/// oracle, over sequences of randomized rounds interleaved with local work.
+#[test]
+fn route_round_matches_reference_bit_for_bit() {
+    let mut meta = Rng::seeded(0x5E77, 0);
+    for case in 0..40 {
+        let p = 1usize << (2 + meta.below(5)); // 4..64
+        let mut mach = Machine::new(p, cost());
+        let mut clock = vec![0.0f64; p];
+        let mut stats = RefStats::default();
+        for round in 0..4 {
+            // random head start for a few PEs (identical on both sides)
+            for _ in 0..meta.below(p as u64) {
+                let pe = meta.below(p as u64) as usize;
+                let w = meta.below(10_000) as f64;
+                mach.work(pe, w);
+                clock[pe] += w;
+            }
+            let msgs = random_round(&mut meta, p);
+            mach.route_round(&msgs);
+            reference_route_round(p, &mut clock, &cost(), &mut stats, &msgs);
+            for pe in 0..p {
+                assert_eq!(
+                    mach.clock(pe).to_bits(),
+                    clock[pe].to_bits(),
+                    "case {case} round {round} pe {pe}: {} vs {}",
+                    mach.clock(pe),
+                    clock[pe]
+                );
+            }
+            assert_eq!(mach.stats.messages, stats.messages, "case {case} round {round}");
+            assert_eq!(mach.stats.words, stats.words, "case {case} round {round}");
+            assert_eq!(mach.stats.max_degree, stats.max_degree, "case {case} round {round}");
+        }
+    }
+}
+
+/// Transcript mode: the same round delivered through `begin_superstep` +
+/// several partial `route_round` calls + one `settle` must equal both the
+/// eager path and the oracle, bit for bit.
+#[test]
+fn transcript_settle_matches_eager_and_reference() {
+    let mut meta = Rng::seeded(0xBA7C, 1);
+    for case in 0..40 {
+        let p = 1usize << (2 + meta.below(5));
+        let mut eager = Machine::new(p, cost());
+        let mut batched = Machine::new(p, cost());
+        let mut clock = vec![0.0f64; p];
+        let mut stats = RefStats::default();
+        for _ in 0..3 {
+            let msgs = random_round(&mut meta, p);
+            eager.route_round(&msgs);
+            reference_route_round(p, &mut clock, &cost(), &mut stats, &msgs);
+            // deliver the identical round in random-sized chunks
+            batched.begin_superstep();
+            let mut rest: &[(usize, usize, usize)] = &msgs;
+            while !rest.is_empty() {
+                let cut = 1 + meta.below(rest.len() as u64) as usize;
+                batched.route_round(&rest[..cut]);
+                rest = &rest[cut..];
+            }
+            batched.settle();
+        }
+        for pe in 0..p {
+            assert_eq!(eager.clock(pe).to_bits(), batched.clock(pe).to_bits(), "case {case}");
+            assert_eq!(batched.clock(pe).to_bits(), clock[pe].to_bits(), "case {case}");
+        }
+        assert_eq!(eager.stats.messages, batched.stats.messages);
+        assert_eq!(batched.stats.messages, stats.messages);
+        assert_eq!(batched.stats.words, stats.words);
+        assert_eq!(batched.stats.max_degree, stats.max_degree);
+    }
+}
+
+/// Pairwise rounds (one hypercube dimension: disjoint pairs, random mix of
+/// `xchg` and `send`): buffered settlement == eager calls, bit for bit.
+#[test]
+fn transcript_pairwise_round_matches_eager() {
+    let mut meta = Rng::seeded(0xD15C, 2);
+    for case in 0..40 {
+        let p = 1usize << (2 + meta.below(5));
+        let mut eager = Machine::new(p, cost());
+        let mut batched = Machine::new(p, cost());
+        for _ in 0..4 {
+            // random head starts, identical on both machines
+            for pe in 0..p {
+                let w = meta.below(5_000) as f64;
+                eager.work(pe, w);
+                batched.work(pe, w);
+            }
+            // random disjoint pairing: shuffle PEs, take adjacent pairs
+            let mut pes: Vec<usize> = (0..p).collect();
+            meta.shuffle(&mut pes);
+            let ops: Vec<(usize, usize, usize, usize, bool)> = pes
+                .chunks_exact(2)
+                .map(|c| {
+                    (
+                        c[0],
+                        c[1],
+                        meta.below(64) as usize,
+                        meta.below(64) as usize,
+                        meta.coin(),
+                    )
+                })
+                .collect();
+            batched.begin_superstep();
+            for &(a, b, l1, l2, is_xchg) in &ops {
+                if is_xchg {
+                    eager.xchg(a, b, l1, l2);
+                    batched.xchg(a, b, l1, l2);
+                } else {
+                    eager.send(a, b, l1);
+                    batched.send(a, b, l1);
+                }
+            }
+            batched.settle();
+        }
+        for pe in 0..p {
+            assert_eq!(
+                eager.clock(pe).to_bits(),
+                batched.clock(pe).to_bits(),
+                "case {case} pe {pe}"
+            );
+        }
+        assert_eq!(eager.stats.messages, batched.stats.messages, "case {case}");
+        assert_eq!(eager.stats.words, batched.stats.words, "case {case}");
+    }
+}
