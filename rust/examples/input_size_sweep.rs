@@ -25,14 +25,12 @@ fn main() {
         let w = fig.winner(Distribution::Uniform, pt);
         let t = fig.cell(Distribution::Uniform, pt, w).time;
         let choice = selector::choose(pt.n_over_p());
-        let mark = if w.name() == choice
-            || matches!(pt, NpPoint::Sparse(_)) && choice == "GatherM"
-        {
+        let mark = if w == choice || matches!(pt, NpPoint::Sparse(_)) && choice == "GatherM" {
             "✓"
         } else {
             " "
         };
-        println!("{:>8} {:>12} {:>14.3e} {:>10}{mark}", pt.label(), w.name(), t, choice);
+        println!("{:>8} {:>12} {:>14.3e} {:>10}{mark}", pt.label(), w, t, choice);
     }
     println!("\nselector column = what rmps::algorithms::selector would pick;");
     println!("✓ = matches the measured winner.");

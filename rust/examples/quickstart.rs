@@ -1,11 +1,11 @@
 //! Quickstart: sort a skewed, duplicate-heavy input with the robust
-//! selector and inspect the report.
+//! selector through the builder-style `Runner`, and inspect the report.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use rmps::algorithms::{run, Algorithm};
+use rmps::algorithms::{Algorithm, Runner};
 use rmps::config::RunConfig;
 use rmps::input::{generate, Distribution};
 
@@ -13,11 +13,15 @@ fn main() {
     // a 256-PE simulated machine, 1024 elements per PE
     let cfg = RunConfig::default().with_p(1 << 8).with_n_per_pe(1 << 10);
 
+    // one runner owns the simulated machine; batched runs below reuse its
+    // scratch instead of reallocating per run
+    let mut runner = Runner::new(cfg.clone());
+
     // a deliberately nasty input: only log(n) distinct keys
     let input = generate(&cfg, Distribution::DeterDupl);
 
     // the paper's headline component: GatherM/RFIS/RQuick/RAMS by n/p
-    let report = run(Algorithm::Robust, &cfg, input);
+    let report = runner.run_algorithm(Algorithm::Robust, input);
 
     println!("robust selector on {} PEs, n/p = {}", cfg.p, cfg.n_per_pe);
     println!("  simulated time : {:.3e} model units", report.time);
@@ -30,9 +34,9 @@ fn main() {
     );
     assert!(report.succeeded(), "the robust stack must survive DeterDupl");
 
-    // compare: a nonrobust classic on the same input
+    // compare: a nonrobust classic on the same input, same runner
     let input = generate(&cfg, Distribution::DeterDupl);
-    let naive = run(Algorithm::NtbQuick, &cfg, input);
+    let naive = runner.run_algorithm(Algorithm::NtbQuick, input);
     match &naive.crashed {
         Some(c) => println!("NTB-Quick on the same input: CRASH ({c})"),
         None => println!(

@@ -1,12 +1,13 @@
 //! Robustness demo (§VII-B in miniature): run every algorithm against the
 //! adversarial instances and print a survival/slowdown matrix — the
-//! qualitative content of Fig. 2 at a glance.
+//! qualitative content of Fig. 2 at a glance. Rows come from the sorter
+//! registry; the `*` marker is each sorter's own `is_robust()` metadata.
 //!
 //! ```sh
 //! cargo run --release --example robustness
 //! ```
 
-use rmps::algorithms::{run, Algorithm};
+use rmps::algorithms::{Algorithm, Runner};
 use rmps::config::RunConfig;
 use rmps::input::{generate, Distribution};
 
@@ -34,22 +35,30 @@ fn main() {
         Distribution::AllToOne,
     ];
 
+    // one runner, reused across the whole matrix; no figure reads the
+    // sorted payload, so don't keep it
+    let mut runner = Runner::new(cfg.clone()).keep_output(false);
+
     // baseline: RQuick on Uniform
-    let base = run(Algorithm::RQuick, &cfg, generate(&cfg, Distribution::Uniform)).time;
+    let base = runner
+        .run_algorithm(Algorithm::RQuick, generate(&cfg, Distribution::Uniform))
+        .time;
 
     println!(
-        "slowdown vs RQuick/Uniform on p={} n/p={} (✗ = crash/OOM, ! = unbalanced)",
+        "slowdown vs RQuick/Uniform on p={} n/p={} (✗ = crash/OOM, ! = unbalanced, * = robust)",
         cfg.p, cfg.n_per_pe
     );
-    print!("{:>12}", "");
+    print!("{:>13}", "");
     for d in &instances {
         print!("{:>14}", d.name());
     }
     println!();
     for alg in algos {
-        print!("{:>12}", alg.name());
+        let sorter = alg.sorter();
+        let marker = if sorter.is_robust() { "*" } else { " " };
+        print!("{:>12}{marker}", sorter.name());
         for &d in &instances {
-            let r = run(alg, &cfg, generate(&cfg, d));
+            let r = runner.run(sorter.as_ref(), generate(&cfg, d));
             let cell = if r.crashed.is_some() {
                 "✗".to_string()
             } else if !r.validation.ok() {
@@ -63,6 +72,6 @@ fn main() {
         }
         println!();
     }
-    println!("\nreading: the R-prefixed (robust) rows survive every column;");
+    println!("\nreading: the robust (*) rows survive every column;");
     println!("the nonrobust rows crash (✗) or unbalance (!) on the right half.");
 }

@@ -16,7 +16,7 @@
 //! cargo run --release --example sfc_rebalance [steps] [--xla]
 //! ```
 
-use rmps::algorithms::{run_with_backend, Algorithm};
+use rmps::algorithms::{Algorithm, Runner};
 use rmps::config::RunConfig;
 use rmps::elements::Elem;
 use rmps::localsort::{RustSort, SortBackend};
@@ -80,7 +80,10 @@ fn main() {
     let p = 1 << 8;
     let per_pe = 1 << 9;
     let cfg = RunConfig::default().with_p(p).with_n_per_pe(per_pe);
-    let mut backend: Box<dyn SortBackend> = make_backend(use_xla);
+    // one runner drives every rebalancing step: the simulated machine (and
+    // its scratch) is reused across the whole loop; validation stays on
+    // (the default) because each step asserts the sort succeeded
+    let mut runner = Runner::new(cfg.clone()).backend(make_backend(use_xla));
 
     // initial particles: a hot cluster near the origin → heavy skew, the
     // case SFC rebalancing exists for
@@ -138,7 +141,7 @@ fn main() {
             .collect();
         let eps_before = imbalance_by_curve(&input, p);
 
-        let report = run_with_backend(Algorithm::Robust, &cfg, input, backend.as_mut());
+        let report = runner.run_algorithm(Algorithm::Robust, input);
         assert!(report.succeeded(), "sort failed at step {step}: {:?}", report.crashed);
         total_time += report.time;
 

@@ -9,6 +9,8 @@ use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
 use crate::sim::{all_gather_merge, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 pub fn sort(
     mach: &mut Machine,
     data: &mut Vec<Vec<Elem>>,
@@ -20,6 +22,36 @@ pub fn sort(
     let runs = all_gather_merge(mach, &pes, data);
     for (pe, r) in runs.into_iter().enumerate() {
         data[pe] = r.merged();
+    }
+}
+
+/// [`Sorter`]: AllGatherM — every PE ends with the complete sorted input
+/// ([`OutputShape::Replicated`]); the paper's "not competitive" baseline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AllGatherMSorter;
+
+impl Sorter for AllGatherMSorter {
+    fn name(&self) -> &'static str {
+        "AllGatherM"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Replicated
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend);
+        OutputShape::Replicated
     }
 }
 

@@ -12,6 +12,8 @@ use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
 use crate::sim::Machine;
 
+use super::{OutputShape, Sorter};
+
 /// Compare-split: keep the lower/upper `keep` elements of two sorted runs.
 fn compare_split(mine: &[Elem], theirs: &[Elem], keep_low: bool) -> Vec<Elem> {
     let keep = mine.len();
@@ -84,6 +86,42 @@ pub fn sort(
     // final intra-PE order is ascending per PE already; ensure ascending
     // globally: with the (i+1)-bit direction rule the top phase (i = d-1)
     // uses bit d → all ascending. Runs stay sorted by construction.
+}
+
+/// [`Sorter`]: Bitonic — the deterministic baseline. Oblivious to
+/// duplicates and skew, but only defined on dense, perfectly balanced
+/// inputs (its [`Sorter::valid_range`] excludes n/p < 1; out of range it
+/// reports a crash, like the paper's implementation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BitonicSorter;
+
+impl Sorter for BitonicSorter {
+    fn name(&self) -> &'static str {
+        "Bitonic"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn valid_range(&self, n_per_pe: f64, _p: usize) -> bool {
+        n_per_pe >= 1.0
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend);
+        OutputShape::Balanced
+    }
 }
 
 #[cfg(test)]

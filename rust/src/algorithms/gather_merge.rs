@@ -9,6 +9,8 @@ use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
 use crate::sim::{gather_merge, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 pub fn sort(
     mach: &mut Machine,
     data: &mut Vec<Vec<Elem>>,
@@ -22,6 +24,36 @@ pub fn sort(
         v.clear();
     }
     data[0] = merged;
+}
+
+/// [`Sorter`]: GatherM — sort-while-gathering onto PE 0; the winner for
+/// very sparse inputs, with a [`OutputShape::RootOnly`] contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatherMSorter;
+
+impl Sorter for GatherMSorter {
+    fn name(&self) -> &'static str {
+        "GatherM"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::RootOnly
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend);
+        OutputShape::RootOnly
+    }
 }
 
 #[cfg(test)]

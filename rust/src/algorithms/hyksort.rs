@@ -16,6 +16,8 @@ use crate::localsort::{sort_all, SortBackend};
 use crate::rng::Rng;
 use crate::sim::{all_gather_merge, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 #[derive(Clone, Copy, Debug)]
 pub struct HykConfig {
     /// way-ness per level (the paper tunes k = 32 on JUQUEEN).
@@ -150,6 +152,45 @@ fn level(
         mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (runs.len().max(2) as f64).log2());
         mach.note_mem(pe, merged.len(), "HykSort k-way exchange");
         data[pe] = merged;
+    }
+}
+
+/// [`Sorter`]: HykSort — k-way hypercube quicksort with key-only sample
+/// splitters; nonrobust on duplicate-heavy instances by design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HykSorter {
+    pub config: HykConfig,
+}
+
+impl HykSorter {
+    /// A custom (k, sample rate) configuration (tuning sweeps).
+    pub fn with_config(config: HykConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl Sorter for HykSorter {
+    fn name(&self) -> &'static str {
+        "HykSort"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        false
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend, &self.config);
+        OutputShape::Balanced
     }
 }
 

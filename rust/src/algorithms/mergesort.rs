@@ -18,6 +18,8 @@ use crate::input::KEY_RANGE;
 use crate::localsort::{sort_all, SortBackend};
 use crate::sim::{allreduce_vec_u64, alltoallv, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 /// 128-bit (key, id) point for the binary search domain: key·2^64 + id.
 #[inline]
 fn point(e: &Elem) -> u128 {
@@ -100,6 +102,38 @@ pub fn sort(
         mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
         mach.note_mem(pe, merged.len(), "multiway mergesort receive");
         data[pe] = merged;
+    }
+}
+
+/// [`Sorter`]: Mways — single-level multiway mergesort with exact
+/// `(key, id)` splitters. Duplicate-safe by construction, but pays the
+/// Θ(β·p·log K) splitter selection that keeps it uncompetitive below
+/// n = Ω(p² log p).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MwaysSorter;
+
+impl Sorter for MwaysSorter {
+    fn name(&self) -> &'static str {
+        "Mways"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend);
+        OutputShape::Balanced
     }
 }
 

@@ -13,6 +13,7 @@ use crate::localsort::SortBackend;
 use crate::sim::Machine;
 
 use super::quick::{self, Pivot, QuickConfig};
+use super::{OutputShape, Sorter};
 
 pub fn sort(
     mach: &mut Machine,
@@ -33,6 +34,40 @@ pub fn sort(
         window_k: 2,
     };
     quick::sort(mach, data, cfg, backend, &qc);
+}
+
+/// [`Sorter`]: Minisort — sorting with minimal data, defined only for
+/// exactly one element per PE (n = p); anything else reports a crash.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinisortSorter;
+
+impl Sorter for MinisortSorter {
+    fn name(&self) -> &'static str {
+        "Minisort"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn valid_range(&self, n_per_pe: f64, _p: usize) -> bool {
+        n_per_pe == 1.0
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend);
+        OutputShape::Balanced
+    }
 }
 
 #[cfg(test)]

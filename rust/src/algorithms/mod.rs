@@ -1,6 +1,14 @@
 //! The sorting algorithms: the paper's four robust algorithms spanning the
 //! input-size spectrum, every baseline of the evaluation, and the
 //! nonrobust ablation variants of §VII-B.
+//!
+//! Algorithms are first-class values implementing the [`Sorter`] trait
+//! (defined in [`sorter`], one implementation per algorithm file) and are
+//! enumerated through the [`registry`]; runs are built and batched through
+//! the [`Runner`]. The [`Algorithm`] enum remains as a compact tag for the
+//! paper's fixed evaluation set, and the [`run`]/[`run_with_backend`] free
+//! functions remain as thin shims over the `Runner` core — byte-identical
+//! reports, asserted in `rust/tests/runner_equivalence.rs`.
 
 pub mod all_gather_merge;
 pub mod bitonic;
@@ -11,17 +19,29 @@ pub mod minisort;
 pub mod quick;
 pub mod rams;
 pub mod rfis;
+pub mod runner;
 pub mod selector;
+pub mod sorter;
 pub mod ssort;
+
+pub use runner::Runner;
+pub use sorter::{
+    builtin_sorters, find_sorter, normalize, register, registry, RegisterError, Sorter,
+};
 
 use crate::config::RunConfig;
 use crate::elements::Elem;
 use crate::localsort::{RustSort, SortBackend};
 use crate::metrics::Stats;
 use crate::sim::Machine;
-use crate::verify::{validate, Validation};
+use crate::verify::Validation;
 
 /// Every algorithm of the evaluation (§VII).
+///
+/// A tag for the fixed built-in set — each variant's behaviour (and its
+/// name, shape, and robustness metadata) lives in the [`Sorter`] value
+/// behind [`Algorithm::sorter`]. New algorithms implement [`Sorter`] and
+/// go through [`register`]/[`find_sorter`]; they do not get enum variants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Binomial-tree gather-merge to PE 0 — fastest for very sparse inputs.
@@ -77,7 +97,7 @@ impl Algorithm {
         Algorithm::Robust,
     ];
 
-    /// The eight algorithms Figure 1 compares.
+    /// The eight algorithms Figure 1 (and the empirical Table I) compares.
     pub const FIG1: [Algorithm; 8] = [
         Algorithm::GatherM,
         Algorithm::AllGatherM,
@@ -89,6 +109,10 @@ impl Algorithm {
         Algorithm::SSort,
     ];
 
+    /// Display name. Kept as a literal match (no allocation — this sits in
+    /// bench labels and parse loops); agreement with each sorter's own
+    /// [`Sorter::name`] is pinned by `sorter::tests::
+    /// builtin_sorter_names_match_enum`.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::GatherM => "GatherM",
@@ -109,11 +133,12 @@ impl Algorithm {
         }
     }
 
+    /// Resolve a name to a built-in tag, insensitive to ASCII case and to
+    /// `-`/`_` separators. For external (registered) sorters use
+    /// [`find_sorter`], which the CLI resolves `--algo` through.
     pub fn parse(s: &str) -> Option<Algorithm> {
-        Self::ALL.iter().copied().find(|a| {
-            a.name().eq_ignore_ascii_case(s)
-                || a.name().replace('-', "").eq_ignore_ascii_case(&s.replace(['-', '_'], ""))
-        })
+        let key = sorter::normalize(s);
+        Self::ALL.iter().copied().find(|a| sorter::normalize(a.name()) == key)
     }
 }
 
@@ -131,19 +156,25 @@ pub enum OutputShape {
 /// Everything a single run reports (one point of a paper figure).
 #[derive(Clone, Debug)]
 pub struct RunReport {
-    pub algorithm: Algorithm,
+    /// Registry name of the sorter that produced this report
+    /// ([`Sorter::name`]).
+    pub algorithm: &'static str,
     /// Simulated makespan in model units (the paper's time axis).
     pub time: f64,
     pub stats: Stats,
+    /// All-false `Validation::default()` when the run was executed with
+    /// [`Runner::validate`]`(false)` — "not validated", not "invalid".
     pub validation: Validation,
     pub output_shape: OutputShape,
     /// Crash description for nonrobust algorithms on hard instances.
     pub crashed: Option<String>,
-    /// Host wallclock of the simulation (perf pass metric, ms).
+    /// Host wallclock of the simulation alone (perf pass metric, ms) —
+    /// validation and the reference clone are outside the timed window.
     pub wall_ms: f64,
     pub is_globally_sorted: bool,
     /// The sorted output (per PE) — callers that permute satellite data
-    /// (e.g. the SFC rebalancing example) consume this.
+    /// (e.g. the SFC rebalancing example) consume this. Empty when the run
+    /// was executed with [`Runner::keep_output`]`(false)`.
     pub output: Vec<Vec<Elem>>,
 }
 
@@ -155,122 +186,38 @@ impl RunReport {
 }
 
 /// Run `alg` on `input` under `cfg` with the pure-Rust local sorter.
+///
+/// Legacy shim over [`Runner`] (validation on, output kept — the historic
+/// defaults); byte-identical to `Runner::new(cfg.clone()).run_algorithm()`.
 pub fn run(alg: Algorithm, cfg: &RunConfig, input: Vec<Vec<Elem>>) -> RunReport {
     run_with_backend(alg, cfg, input, &mut RustSort)
 }
 
 /// Run `alg` with an explicit local-sort backend (e.g. the PJRT `XlaSort`
 /// in [`crate::runtime`], available with the `xla` cargo feature).
+///
+/// Legacy shim over the [`Runner`] core — see [`run`].
 pub fn run_with_backend(
     alg: Algorithm,
     cfg: &RunConfig,
     input: Vec<Vec<Elem>>,
     backend: &mut dyn SortBackend,
 ) -> RunReport {
+    run_sorter_with_backend(alg.sorter().as_ref(), cfg, input, backend)
+}
+
+/// One-shot run of any [`Sorter`] with an explicit backend (the borrow-y
+/// sibling of [`Runner::run`] for callers that own neither a runner nor a
+/// boxed backend).
+pub fn run_sorter_with_backend(
+    sorter: &dyn Sorter,
+    cfg: &RunConfig,
+    input: Vec<Vec<Elem>>,
+    backend: &mut dyn SortBackend,
+) -> RunReport {
     let mut mach = Machine::new(cfg.p, cfg.cost);
     mach.mem_cap_elems = cfg.mem_cap_elems();
-    let reference = input.clone();
-    let mut data = input;
-    let start = std::time::Instant::now();
-
-    let shape = match alg {
-        Algorithm::GatherM => {
-            gather_merge::sort(&mut mach, &mut data, cfg, backend);
-            OutputShape::RootOnly
-        }
-        Algorithm::AllGatherM => {
-            all_gather_merge::sort(&mut mach, &mut data, cfg, backend);
-            OutputShape::Replicated
-        }
-        Algorithm::Rfis => {
-            rfis::sort(&mut mach, &mut data, cfg, backend);
-            OutputShape::Balanced
-        }
-        Algorithm::RQuick => {
-            quick::sort(&mut mach, &mut data, cfg, backend, &quick::QuickConfig::robust());
-            OutputShape::Balanced
-        }
-        Algorithm::NtbQuick => {
-            quick::sort(&mut mach, &mut data, cfg, backend, &quick::QuickConfig::nonrobust());
-            OutputShape::Balanced
-        }
-        Algorithm::Bitonic => {
-            bitonic::sort(&mut mach, &mut data, cfg, backend);
-            OutputShape::Balanced
-        }
-        Algorithm::Rams => {
-            rams::sort(&mut mach, &mut data, cfg, backend, &rams::AmsConfig::robust(cfg));
-            OutputShape::Balanced
-        }
-        Algorithm::NtbAms => {
-            let c = rams::AmsConfig { tie_break: false, ..rams::AmsConfig::robust(cfg) };
-            rams::sort(&mut mach, &mut data, cfg, backend, &c);
-            OutputShape::Balanced
-        }
-        Algorithm::NdmaAms => {
-            let c = rams::AmsConfig { dma: rams::Dma::Never, ..rams::AmsConfig::robust(cfg) };
-            rams::sort(&mut mach, &mut data, cfg, backend, &c);
-            OutputShape::Balanced
-        }
-        Algorithm::HykSort => {
-            hyksort::sort(&mut mach, &mut data, cfg, backend, &hyksort::HykConfig::default());
-            OutputShape::Balanced
-        }
-        Algorithm::SSort => {
-            ssort::sort(&mut mach, &mut data, cfg, backend, true);
-            OutputShape::Balanced
-        }
-        Algorithm::NsSSort => {
-            ssort::sort(&mut mach, &mut data, cfg, backend, false);
-            OutputShape::Balanced
-        }
-        Algorithm::Minisort => {
-            minisort::sort(&mut mach, &mut data, cfg, backend);
-            OutputShape::Balanced
-        }
-        Algorithm::Mways => {
-            mergesort::sort(&mut mach, &mut data, cfg, backend);
-            OutputShape::Balanced
-        }
-        Algorithm::Robust => selector::sort(&mut mach, &mut data, cfg, backend),
-    };
-
-    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
-    let crashed = mach.crash().map(|c| c.to_string());
-
-    // validate according to the output shape
-    let validation = match shape {
-        OutputShape::Balanced => validate(&reference, &data, cfg.epsilon),
-        OutputShape::RootOnly => {
-            let mut proj = vec![Vec::new(); cfg.p];
-            proj[0] = data[0].clone();
-            let mut v = validate(&reference, &proj, f64::INFINITY);
-            v.balanced = false; // by construction
-            v
-        }
-        OutputShape::Replicated => {
-            // every PE must hold the identical full sorted input
-            let mut proj = vec![Vec::new(); cfg.p];
-            proj[0] = data[0].clone();
-            let mut v = validate(&reference, &proj, f64::INFINITY);
-            v.balanced = false;
-            let all_equal = data.iter().all(|d| d == &data[0]);
-            v.globally_sorted &= all_equal;
-            v
-        }
-    };
-
-    RunReport {
-        algorithm: alg,
-        time: mach.time(),
-        stats: mach.stats,
-        is_globally_sorted: validation.globally_sorted && crashed.is_none(),
-        validation,
-        output_shape: shape,
-        crashed,
-        wall_ms,
-        output: data,
-    }
+    runner::execute(&mut mach, cfg, sorter, backend, input, true, true)
 }
 
 #[cfg(test)]
@@ -314,10 +261,8 @@ mod tests {
     /// match for an ambiguous input.
     #[test]
     fn algorithm_names_are_unique_after_normalization() {
-        let mut names: Vec<String> = Algorithm::ALL
-            .iter()
-            .map(|a| a.name().to_ascii_lowercase().replace(['-', '_'], ""))
-            .collect();
+        let mut names: Vec<String> =
+            Algorithm::ALL.iter().map(|a| sorter::normalize(a.name())).collect();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), Algorithm::ALL.len());

@@ -18,6 +18,8 @@ use crate::rng::Rng;
 use crate::shuffle::hypercube_shuffle;
 use crate::sim::{bcast_cost, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 /// Pivot selection strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pivot {
@@ -211,6 +213,57 @@ fn exchange_level(
         std::mem::swap(&mut data[pe], merge_buf);
         mach.work_linear(pe, data[pe].len());
         mach.note_mem(pe, data[pe].len(), "quicksort exchange");
+    }
+}
+
+/// [`Sorter`] for the hypercube-quicksort family: the robust **RQuick**
+/// (§VI, Algorithm 2) and the **NTB-Quick** ablation are two values of
+/// this type, distinguished by the [`QuickConfig`] they carry.
+#[derive(Clone, Copy, Debug)]
+pub struct RQuickSorter {
+    pub config: QuickConfig,
+    name: &'static str,
+}
+
+impl RQuickSorter {
+    /// The paper's RQuick: shuffle + window median + duplicate split.
+    pub fn robust() -> Self {
+        Self { config: QuickConfig::robust(), name: "RQuick" }
+    }
+
+    /// NTB-Quick: no shuffle, no tie-breaking (Fig. 2a/2b).
+    pub fn nonrobust() -> Self {
+        Self { config: QuickConfig::nonrobust(), name: "NTB-Quick" }
+    }
+
+    /// A custom configuration under the RQuick name (tuning sweeps).
+    pub fn with_config(config: QuickConfig) -> Self {
+        Self { config, name: "RQuick" }
+    }
+}
+
+impl Sorter for RQuickSorter {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        self.config.shuffle && self.config.tie_break
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend, &self.config);
+        OutputShape::Balanced
     }
 }
 

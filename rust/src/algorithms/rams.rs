@@ -27,6 +27,8 @@ use crate::partition::{partition, pick_splitters, SplitterTree};
 use crate::rng::Rng;
 use crate::sim::{all_gather_merge, prefix_sum_vec, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 /// Deterministic-message-assignment policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dma {
@@ -341,6 +343,79 @@ fn level(
     }
 
     subgroups
+}
+
+/// [`Sorter`] for the multi-level AMS family: the robust **RAMS** plus the
+/// **NTB-AMS** / **NDMA-AMS** ablations of Fig. 2 — three values of one
+/// type, distinguished by the robustness knobs they carry. The level count
+/// is derived from the run config at sort time ([`AmsConfig::robust`],
+/// which needs n/p) unless overridden with [`RamsSorter::with_levels`].
+#[derive(Clone, Copy, Debug)]
+pub struct RamsSorter {
+    /// Level-count override; `None` = the paper's tuned count by n/p.
+    pub levels: Option<usize>,
+    pub tie_break: bool,
+    pub dma: Dma,
+    name: &'static str,
+}
+
+impl RamsSorter {
+    /// The paper's RAMS (App. G).
+    pub fn robust() -> Self {
+        Self { levels: None, tie_break: true, dma: Dma::Auto, name: "RAMS" }
+    }
+
+    /// NTB-AMS: no splitter tie-breaking (Fig. 2b).
+    pub fn ntb() -> Self {
+        Self { tie_break: false, name: "NTB-AMS", ..Self::robust() }
+    }
+
+    /// NDMA-AMS: no deterministic message assignment (Fig. 2c).
+    pub fn ndma() -> Self {
+        Self { dma: Dma::Never, name: "NDMA-AMS", ..Self::robust() }
+    }
+
+    /// Fix the level count (App. J2 tuning sweeps).
+    pub fn with_levels(mut self, levels: usize) -> Self {
+        self.levels = Some(levels.max(1));
+        self
+    }
+
+    fn ams_config(&self, cfg: &RunConfig) -> AmsConfig {
+        let mut ac = AmsConfig::robust(cfg);
+        ac.tie_break = self.tie_break;
+        ac.dma = self.dma;
+        if let Some(levels) = self.levels {
+            ac.levels = levels;
+        }
+        ac
+    }
+}
+
+impl Sorter for RamsSorter {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        self.tie_break && self.dma != Dma::Never
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        let ac = self.ams_config(cfg);
+        self::sort(mach, data, cfg, backend, &ac);
+        OutputShape::Balanced
+    }
 }
 
 #[cfg(test)]

@@ -22,6 +22,8 @@ use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
 use crate::sim::{all_gather_merge, allreduce_vec_u64, Machine};
 
+use super::{OutputShape, Sorter};
+
 /// Provenance of a row-gathered element relative to this PE's column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum RowClass {
@@ -200,6 +202,36 @@ pub fn sort(
         mach.work_sort(pe, v.len());
         v.sort_unstable();
         data[pe] = v;
+    }
+}
+
+/// [`Sorter`]: RFIS — the robust fast work-inefficient sort of §V, the
+/// paper's pick for sparse/tiny inputs (n/p below the RQuick crossover).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RfisSorter;
+
+impl Sorter for RfisSorter {
+    fn name(&self) -> &'static str {
+        "RFIS"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend);
+        OutputShape::Balanced
     }
 }
 

@@ -1,0 +1,234 @@
+//! Builder-style run harness: [`Runner`] owns the simulated [`Machine`],
+//! reuses its scratch across batched runs, and makes the two Θ(n) side
+//! costs of the legacy free functions opt-out — the reference clone for
+//! validation ([`Runner::validate`]) and the `RunReport.output` payload
+//! ([`Runner::keep_output`]).
+//!
+//! The legacy [`super::run`]/[`super::run_with_backend`] free functions
+//! are thin shims over the same [`execute`] core, so both paths produce
+//! byte-identical reports (asserted for all 15 algorithms in
+//! `rust/tests/runner_equivalence.rs`).
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::{RustSort, SortBackend};
+use crate::sim::Machine;
+use crate::verify::{validate, validate_replicated, Validation};
+
+use super::{Algorithm, OutputShape, RunReport, Sorter};
+
+/// Reusable run harness for one machine configuration.
+///
+/// ```no_run
+/// use rmps::prelude::*;
+///
+/// let cfg = RunConfig::default().with_p(1 << 6).with_n_per_pe(1 << 8);
+/// let mut runner = Runner::new(cfg.clone())
+///     .validate(false)      // skip the Θ(n) reference clone
+///     .keep_output(false);  // drop the sorted payload from the report
+/// let input = rmps::input::generate(&cfg, Distribution::Uniform);
+/// let report = runner.run_algorithm(Algorithm::RQuick, input);
+/// assert!(report.crashed.is_none());
+/// ```
+pub struct Runner {
+    cfg: RunConfig,
+    backend: Box<dyn SortBackend>,
+    validate: bool,
+    keep_output: bool,
+    mach: Machine,
+}
+
+impl Runner {
+    /// A runner for `cfg` with the pure-Rust local-sort backend,
+    /// validation on, and output retention on — the legacy `run` defaults.
+    pub fn new(cfg: RunConfig) -> Self {
+        let mach = Machine::new(cfg.p, cfg.cost);
+        Self { cfg, backend: Box::new(RustSort), validate: true, keep_output: true, mach }
+    }
+
+    /// Replace the node-local sort backend (e.g. the PJRT `XlaSort` from
+    /// [`crate::runtime`], available with the `xla` cargo feature).
+    pub fn backend(mut self, backend: Box<dyn SortBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Toggle output validation. `false` skips the Θ(n) reference clone
+    /// entirely (halving peak memory); the report's `validation` is then
+    /// `Validation::default()` (all checks false) and `is_globally_sorted`
+    /// is false — "not validated", not "invalid".
+    pub fn validate(mut self, validate: bool) -> Self {
+        self.validate = validate;
+        self
+    }
+
+    /// Toggle retention of the sorted per-PE output in `RunReport.output`.
+    /// `false` drops the Θ(n) payload (Θ(n·p) for replicated shapes) —
+    /// what figure sweeps want, since no figure reads it.
+    pub fn keep_output(mut self, keep: bool) -> Self {
+        self.keep_output = keep;
+        self
+    }
+
+    /// The configuration the next [`Runner::run`] will use.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Swap the run configuration (e.g. a new seed between repetitions).
+    /// The owned machine is re-dimensioned on the next run; its scratch
+    /// allocations are kept.
+    pub fn set_config(&mut self, cfg: RunConfig) {
+        self.cfg = cfg;
+    }
+
+    /// Run `sorter` on `input` under the current configuration. The owned
+    /// [`Machine`] is reset — not reallocated — so batched runs reuse its
+    /// route scratch and superstep buffers.
+    pub fn run(&mut self, sorter: &dyn Sorter, input: Vec<Vec<Elem>>) -> RunReport {
+        self.mach.reset(self.cfg.p, self.cfg.cost);
+        self.mach.mem_cap_elems = self.cfg.mem_cap_elems();
+        execute(
+            &mut self.mach,
+            &self.cfg,
+            sorter,
+            self.backend.as_mut(),
+            input,
+            self.validate,
+            self.keep_output,
+        )
+    }
+
+    /// [`Runner::run`] addressed by the legacy enum tag.
+    pub fn run_algorithm(&mut self, alg: Algorithm, input: Vec<Vec<Elem>>) -> RunReport {
+        self.run(alg.sorter().as_ref(), input)
+    }
+
+    /// Batch entry point: run `sorter` once per `(config, input)` pair,
+    /// reusing the machine throughout. The iterator is consumed lazily, so
+    /// callers can generate each input on demand instead of materializing
+    /// the whole batch. (Callers that must stop mid-batch — e.g. the
+    /// experiment cells, which short-circuit on a crash — loop over
+    /// [`Runner::run`] themselves; the two are equivalent per item.)
+    pub fn run_many(
+        &mut self,
+        sorter: &dyn Sorter,
+        batch: impl IntoIterator<Item = (RunConfig, Vec<Vec<Elem>>)>,
+    ) -> Vec<RunReport> {
+        batch
+            .into_iter()
+            .map(|(cfg, input)| {
+                self.set_config(cfg);
+                self.run(sorter, input)
+            })
+            .collect()
+    }
+}
+
+/// The shared run core behind [`Runner`] and the legacy shims: time the
+/// simulation (and only the simulation — the reference clone for
+/// validation happens before the wallclock window opens), then validate
+/// according to the output shape the sorter reports.
+pub(super) fn execute(
+    mach: &mut Machine,
+    cfg: &RunConfig,
+    sorter: &dyn Sorter,
+    backend: &mut dyn SortBackend,
+    input: Vec<Vec<Elem>>,
+    validate_output: bool,
+    keep_output: bool,
+) -> RunReport {
+    let reference = if validate_output { Some(input.clone()) } else { None };
+    let mut data = input;
+    let start = std::time::Instant::now();
+
+    let shape = sorter.sort(mach, &mut data, cfg, backend);
+
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let crashed = mach.crash().map(|c| c.to_string());
+
+    let validation = match &reference {
+        None => Validation::default(),
+        Some(reference) => match shape {
+            OutputShape::Balanced => validate(reference, &data, cfg.epsilon),
+            OutputShape::RootOnly => {
+                // everything must land on PE 0, sorted; balance is broken
+                // by construction
+                let mut proj = vec![Vec::new(); cfg.p];
+                proj[0] = data[0].clone();
+                let mut v = validate(reference, &proj, f64::INFINITY);
+                v.balanced = false;
+                v
+            }
+            OutputShape::Replicated => validate_replicated(reference, &data),
+        },
+    };
+
+    RunReport {
+        algorithm: sorter.name(),
+        time: mach.time(),
+        stats: mach.stats,
+        is_globally_sorted: validation.globally_sorted && crashed.is_none(),
+        validation,
+        output_shape: shape,
+        crashed,
+        wall_ms,
+        output: if keep_output { data } else { Vec::new() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::input::{generate, Distribution};
+
+    #[test]
+    fn opt_outs_change_payloads_not_simulation() {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(32);
+        let input = generate(&cfg, Distribution::Staggered);
+
+        let full = Runner::new(cfg.clone()).run_algorithm(Algorithm::RQuick, input.clone());
+        let mut lean_runner =
+            Runner::new(cfg.clone()).validate(false).keep_output(false);
+        let lean = lean_runner.run_algorithm(Algorithm::RQuick, input);
+
+        assert_eq!(full.time.to_bits(), lean.time.to_bits());
+        assert_eq!(full.stats.messages, lean.stats.messages);
+        assert_eq!(full.stats.words, lean.stats.words);
+        assert!(full.validation.ok() && full.is_globally_sorted);
+        assert!(!lean.validation.ok() && !lean.is_globally_sorted, "unvalidated, not invalid");
+        assert!(lean.output.is_empty() && !full.output.is_empty());
+    }
+
+    #[test]
+    fn machine_is_reused_across_runs() {
+        let cfg = RunConfig::default().with_p(8).with_n_per_pe(16);
+        let mut runner = Runner::new(cfg.clone());
+        let a = runner.run_algorithm(Algorithm::Rfis, generate(&cfg, Distribution::Uniform));
+        let b = runner.run_algorithm(Algorithm::Rfis, generate(&cfg, Distribution::Uniform));
+        assert_eq!(a.time.to_bits(), b.time.to_bits(), "reset must be complete");
+        assert_eq!(a.stats.messages, b.stats.messages);
+        assert_eq!(a.output, b.output);
+    }
+
+    #[test]
+    fn run_many_swaps_configs_per_item() {
+        let base = RunConfig::default().with_p(8).with_n_per_pe(16);
+        let mut runner = Runner::new(base.clone());
+        let batch: Vec<_> = [1u64, 2, 3]
+            .iter()
+            .map(|&s| {
+                let cfg = base.clone().with_seed(s);
+                let input = generate(&cfg, Distribution::Uniform);
+                (cfg, input)
+            })
+            .collect();
+        let reports = runner.run_many(Algorithm::RQuick.sorter().as_ref(), batch.clone());
+        assert_eq!(reports.len(), 3);
+        for ((cfg, input), got) in batch.into_iter().zip(&reports) {
+            let fresh = super::super::run(Algorithm::RQuick, &cfg, input);
+            assert_eq!(fresh.time.to_bits(), got.time.to_bits());
+            assert_eq!(fresh.output, got.output);
+        }
+    }
+}

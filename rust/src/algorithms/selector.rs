@@ -1,43 +1,90 @@
 //! The paper's headline result as a component: *four algorithms cover the
 //! entire range of possible input sizes* (§I, §VIII). The selector routes
-//! a sort request to GatherM / RFIS / RQuick / RAMS by n/p, with the
-//! thresholds the evaluation establishes (Fig. 1):
+//! a sort request to GatherM / RFIS / RQuick / RAMS by n/p.
+//!
+//! The crossover points live in a [`CrossoverTable`]. The default table is
+//! the one the evaluation establishes on JUQUEEN (Fig. 1):
 //!
 //! * n/p ≤ 1/8      → GatherM  (very sparse: "sorts" while gathering)
 //! * n/p < 4        → RFIS     (sparse / tiny)
 //! * n/p ≤ 2^14     → RQuick   (small)
 //! * otherwise      → RAMS     (large; level count by n/p)
 //!
-//! Thresholds are machine-ratio-dependent; `-- tuning` regenerates them.
+//! Thresholds are machine-ratio-dependent: for a different α/β, derive a
+//! table with [`crate::experiments::tuning::crossover_table`] and hand it
+//! to [`RobustSorter::with_table`] (the CLI: `rmps run --algo Robust
+//! --tuned-crossovers`).
 
-use crate::algorithms::{gather_merge, quick, rams, rfis, OutputShape};
+use crate::algorithms::{gather_merge, quick, rams, rfis, OutputShape, Sorter};
 use crate::config::RunConfig;
 use crate::elements::Elem;
 use crate::localsort::SortBackend;
 use crate::sim::Machine;
 
-/// Which algorithm the selector picks for a given n/p.
-pub fn choose(n_over_p: f64) -> &'static str {
-    if n_over_p <= 0.125 {
-        "GatherM"
-    } else if n_over_p < 4.0 {
-        "RFIS"
-    } else if n_over_p <= (1 << 14) as f64 {
-        "RQuick"
-    } else {
-        "RAMS"
+/// The selector's n/p crossover thresholds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrossoverTable {
+    /// n/p ≤ `gather_max` → GatherM.
+    pub gather_max: f64,
+    /// n/p < `rfis_max` → RFIS.
+    pub rfis_max: f64,
+    /// n/p ≤ `rquick_max` → RQuick; above → RAMS.
+    pub rquick_max: f64,
+}
+
+impl CrossoverTable {
+    /// The crossovers the paper's evaluation establishes on JUQUEEN
+    /// (Fig. 1): 1/8, 4, and 2^14.
+    pub const JUQUEEN: CrossoverTable =
+        CrossoverTable { gather_max: 0.125, rfis_max: 4.0, rquick_max: 16384.0 };
+
+    /// Which of the four robust algorithms this table picks for `n_over_p`.
+    pub fn choose(&self, n_over_p: f64) -> &'static str {
+        if n_over_p <= self.gather_max {
+            "GatherM"
+        } else if n_over_p < self.rfis_max {
+            "RFIS"
+        } else if n_over_p <= self.rquick_max {
+            "RQuick"
+        } else {
+            "RAMS"
+        }
     }
 }
 
+impl Default for CrossoverTable {
+    fn default() -> Self {
+        Self::JUQUEEN
+    }
+}
+
+/// Which algorithm the selector picks for a given n/p under the paper's
+/// JUQUEEN thresholds (shorthand for `CrossoverTable::JUQUEEN.choose`).
+pub fn choose(n_over_p: f64) -> &'static str {
+    CrossoverTable::JUQUEEN.choose(n_over_p)
+}
+
+/// Selector dispatch under the paper's JUQUEEN table.
 pub fn sort(
     mach: &mut Machine,
     data: &mut Vec<Vec<Elem>>,
     cfg: &RunConfig,
     backend: &mut dyn SortBackend,
 ) -> OutputShape {
+    sort_with_table(mach, data, cfg, backend, &CrossoverTable::JUQUEEN)
+}
+
+/// Selector dispatch under an explicit crossover table.
+pub fn sort_with_table(
+    mach: &mut Machine,
+    data: &mut Vec<Vec<Elem>>,
+    cfg: &RunConfig,
+    backend: &mut dyn SortBackend,
+    table: &CrossoverTable,
+) -> OutputShape {
     let n: usize = data.iter().map(Vec::len).sum();
     let npp = n as f64 / cfg.p as f64;
-    match choose(npp) {
+    match table.choose(npp) {
         "GatherM" => {
             gather_merge::sort(mach, data, cfg, backend);
             OutputShape::RootOnly
@@ -54,6 +101,53 @@ pub fn sort(
             rams::sort(mach, data, cfg, backend, &rams::AmsConfig::robust(cfg));
             OutputShape::Balanced
         }
+    }
+}
+
+/// [`Sorter`]: Robust — the composed headline algorithm, routing by n/p
+/// through its [`CrossoverTable`] (paper table by default).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RobustSorter {
+    pub table: CrossoverTable,
+}
+
+impl RobustSorter {
+    /// The selector with the paper's JUQUEEN crossovers.
+    pub fn new() -> Self {
+        Self { table: CrossoverTable::JUQUEEN }
+    }
+
+    /// The selector with machine-specific crossovers (e.g. from
+    /// [`crate::experiments::tuning::crossover_table`]).
+    pub fn with_table(table: CrossoverTable) -> Self {
+        Self { table }
+    }
+}
+
+impl Sorter for RobustSorter {
+    fn name(&self) -> &'static str {
+        "Robust"
+    }
+
+    /// The §II contract for dense inputs; a sparse run hands off to
+    /// GatherM and *returns* [`OutputShape::RootOnly`] from
+    /// [`Sorter::sort`].
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        sort_with_table(mach, data, cfg, backend, &self.table)
     }
 }
 
@@ -84,6 +178,23 @@ mod tests {
         // n/p ≤ 2^14 → RQuick; above → RAMS
         assert_eq!(choose((1 << 14) as f64), "RQuick");
         assert_eq!(choose((1 << 14) as f64 + 1.0), "RAMS");
+    }
+
+    /// A custom table really moves the crossovers.
+    #[test]
+    fn custom_table_shifts_crossovers() {
+        let t = CrossoverTable { gather_max: 1.0, rfis_max: 32.0, rquick_max: 256.0 };
+        assert_eq!(t.choose(1.0), "GatherM");
+        assert_eq!(t.choose(8.0), "RFIS");
+        assert_eq!(t.choose(256.0), "RQuick");
+        assert_eq!(t.choose(257.0), "RAMS");
+        // and the sorter built on it still sorts correctly
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(64);
+        let input = generate(&cfg, Distribution::Staggered);
+        let mut runner = crate::algorithms::Runner::new(cfg.clone());
+        let r = runner.run(&RobustSorter::with_table(t), input);
+        assert!(r.succeeded(), "{:?}", r.validation);
+        assert_eq!(r.output_shape, OutputShape::Balanced);
     }
 
     /// `Algorithm::Robust` really dispatches on n/p: the chosen algorithm's

@@ -1,0 +1,229 @@
+//! The open sorter interface: the [`Sorter`] trait every algorithm
+//! implements, plus the name-keyed **registry** the CLI, experiments, and
+//! external crates share.
+//!
+//! Algorithms are first-class values here: a sorter carries its own
+//! configuration as struct fields (`RQuickSorter::robust()` vs
+//! `RQuickSorter::nonrobust()` are two values of one type) and describes
+//! itself through metadata (`name`, `output_shape`, `is_robust`,
+//! `valid_range`). The built-in registry yields the 15 sorters of the
+//! paper's evaluation; [`register`] adds external implementations so they
+//! appear in CLI parsing ([`find_sorter`]) and experiment enumeration
+//! (e.g. [`crate::experiments::fig1::run_with`]) without touching any
+//! dispatch table in this crate.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::config::RunConfig;
+use crate::elements::Elem;
+use crate::localsort::SortBackend;
+use crate::sim::Machine;
+
+use super::all_gather_merge::AllGatherMSorter;
+use super::bitonic::BitonicSorter;
+use super::gather_merge::GatherMSorter;
+use super::hyksort::HykSorter;
+use super::mergesort::MwaysSorter;
+use super::minisort::MinisortSorter;
+use super::quick::RQuickSorter;
+use super::rams::RamsSorter;
+use super::rfis::RfisSorter;
+use super::selector::RobustSorter;
+use super::ssort::SSortSorter;
+use super::{Algorithm, OutputShape};
+
+/// A massively parallel sorting algorithm as a first-class value.
+///
+/// Implementations are immutable (all per-run state lives in the
+/// [`Machine`] and the data), so one sorter value can be shared across
+/// threads and reused for any number of runs — the experiment driver runs
+/// `Arc<dyn Sorter>`s on its worker pool.
+///
+/// Run a sorter through [`super::Runner`] (or the legacy
+/// [`super::run`]/[`super::run_with_backend`] shims); call
+/// [`Sorter::sort`] directly only when driving a [`Machine`] by hand.
+pub trait Sorter: Send + Sync {
+    /// Display/CLI name. Must be unique in the registry after
+    /// [`normalize`] (case and `-`/`_` separators are ignored on lookup).
+    fn name(&self) -> &'static str;
+
+    /// The output shape the sorter's contract promises for dense inputs.
+    /// [`Sorter::sort`] returns the *actual* shape of a run, which may
+    /// differ for composite sorters (the robust selector hands sparse
+    /// inputs to GatherM and reports [`OutputShape::RootOnly`]).
+    fn output_shape(&self) -> OutputShape;
+
+    /// Whether the sorter survives the paper's adversarial instances
+    /// (duplicates, skew, AllToOne) inside its valid range — §VII-B's
+    /// robust/nonrobust split.
+    fn is_robust(&self) -> bool;
+
+    /// Whether the sorter accepts inputs of `n_per_pe` elements per PE on
+    /// `p` PEs at all. Outside this range a run reports a crash instead of
+    /// sorting (Bitonic on sparse inputs, Minisort when n ≠ p). Advisory
+    /// metadata — nothing enforces it before running.
+    fn valid_range(&self, _n_per_pe: f64, _p: usize) -> bool {
+        true
+    }
+
+    /// Sort `data` (indexed by global PE) on the virtual machine, charging
+    /// all costs to `mach`, and report the shape the output was left in.
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape;
+}
+
+impl Algorithm {
+    /// The sorter value behind this legacy enum tag.
+    ///
+    /// This bridge (and the enum itself) exists for the paper's fixed
+    /// evaluation set; new algorithms implement [`Sorter`] and go through
+    /// [`register`] / [`find_sorter`] instead of gaining an enum variant.
+    pub fn sorter(self) -> Arc<dyn Sorter> {
+        match self {
+            Algorithm::GatherM => Arc::new(GatherMSorter),
+            Algorithm::AllGatherM => Arc::new(AllGatherMSorter),
+            Algorithm::Rfis => Arc::new(RfisSorter),
+            Algorithm::RQuick => Arc::new(RQuickSorter::robust()),
+            Algorithm::NtbQuick => Arc::new(RQuickSorter::nonrobust()),
+            Algorithm::Bitonic => Arc::new(BitonicSorter),
+            Algorithm::Rams => Arc::new(RamsSorter::robust()),
+            Algorithm::NtbAms => Arc::new(RamsSorter::ntb()),
+            Algorithm::NdmaAms => Arc::new(RamsSorter::ndma()),
+            Algorithm::HykSort => Arc::new(HykSorter::default()),
+            Algorithm::SSort => Arc::new(SSortSorter::charged()),
+            Algorithm::NsSSort => Arc::new(SSortSorter::free_splitters()),
+            Algorithm::Minisort => Arc::new(MinisortSorter),
+            Algorithm::Mways => Arc::new(MwaysSorter),
+            Algorithm::Robust => Arc::new(RobustSorter::default()),
+        }
+    }
+}
+
+/// Registry lookup key: ASCII-lowercased with `-`/`_` stripped, so
+/// `ntb_quick`, `NTB-Quick`, and `ntbquick` all address the same sorter.
+pub fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace(['-', '_'], "")
+}
+
+/// Externally registered sorters (process-global, append-only).
+fn extras() -> &'static RwLock<Vec<Arc<dyn Sorter>>> {
+    static EXTRAS: OnceLock<RwLock<Vec<Arc<dyn Sorter>>>> = OnceLock::new();
+    EXTRAS.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// The 15 built-in sorters of the paper's evaluation, in
+/// [`Algorithm::ALL`] order. Built once and cached — repeated registry
+/// lookups clone `Arc`s, not sorters.
+pub fn builtin_sorters() -> Vec<Arc<dyn Sorter>> {
+    static BUILTINS: OnceLock<Vec<Arc<dyn Sorter>>> = OnceLock::new();
+    BUILTINS
+        .get_or_init(|| Algorithm::ALL.iter().map(|a| a.sorter()).collect())
+        .clone()
+}
+
+/// Every known sorter: the built-ins followed by everything added with
+/// [`register`], in registration order.
+pub fn registry() -> Vec<Arc<dyn Sorter>> {
+    let mut all = builtin_sorters();
+    all.extend(extras().read().unwrap().iter().cloned());
+    all
+}
+
+/// A [`register`] rejection: the sorter's normalized name is already taken.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegisterError {
+    pub name: String,
+}
+
+impl std::fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a sorter named {:?} is already registered", self.name)
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
+/// Add an external sorter to the process-global registry, making it
+/// visible to [`registry`] enumeration and [`find_sorter`] (which the CLI
+/// `--algo` flag resolves through). Fails if the normalized name collides
+/// with a built-in or a previously registered sorter.
+pub fn register(sorter: Arc<dyn Sorter>) -> Result<(), RegisterError> {
+    let key = normalize(sorter.name());
+    let mut extras = extras().write().unwrap();
+    let taken = builtin_sorters()
+        .iter()
+        .chain(extras.iter())
+        .any(|s| normalize(s.name()) == key);
+    if taken {
+        return Err(RegisterError { name: sorter.name().to_string() });
+    }
+    extras.push(sorter);
+    Ok(())
+}
+
+/// Case- and separator-insensitive name lookup over the whole registry
+/// (built-ins plus [`register`]ed sorters).
+pub fn find_sorter(name: &str) -> Option<Arc<dyn Sorter>> {
+    let key = normalize(name);
+    registry().into_iter().find(|s| normalize(s.name()) == key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every enum tag's sorter reports the same name the enum does, so the
+    /// two addressing schemes (enum, registry name) can never diverge.
+    #[test]
+    fn builtin_sorter_names_match_enum() {
+        for a in Algorithm::ALL {
+            assert_eq!(a.sorter().name(), a.name(), "{a:?}");
+        }
+    }
+
+    #[test]
+    fn builtins_cover_all_fifteen() {
+        assert_eq!(builtin_sorters().len(), Algorithm::ALL.len());
+    }
+
+    #[test]
+    fn find_sorter_is_separator_insensitive() {
+        assert_eq!(find_sorter("ntb_quick").unwrap().name(), "NTB-Quick");
+        assert_eq!(find_sorter("RQUICK").unwrap().name(), "RQuick");
+        assert!(find_sorter("nonexistent").is_none());
+    }
+
+    /// Metadata spot checks: the §VII-B robust/nonrobust split and the
+    /// declared output shapes.
+    #[test]
+    fn builtin_metadata_is_faithful() {
+        let meta = |a: Algorithm| {
+            let s = a.sorter();
+            (s.is_robust(), s.output_shape())
+        };
+        assert_eq!(meta(Algorithm::GatherM), (true, OutputShape::RootOnly));
+        assert_eq!(meta(Algorithm::AllGatherM), (true, OutputShape::Replicated));
+        assert_eq!(meta(Algorithm::RQuick), (true, OutputShape::Balanced));
+        for nonrobust in [
+            Algorithm::NtbQuick,
+            Algorithm::NtbAms,
+            Algorithm::NdmaAms,
+            Algorithm::HykSort,
+            Algorithm::SSort,
+            Algorithm::NsSSort,
+        ] {
+            assert!(!meta(nonrobust).0, "{nonrobust:?} must not claim robustness");
+        }
+        assert_eq!(meta(Algorithm::Robust), (true, OutputShape::Balanced));
+        // range metadata: the two shape-restricted baselines
+        assert!(!Algorithm::Bitonic.sorter().valid_range(0.5, 64));
+        assert!(Algorithm::Bitonic.sorter().valid_range(8.0, 64));
+        assert!(Algorithm::Minisort.sorter().valid_range(1.0, 64));
+        assert!(!Algorithm::Minisort.sorter().valid_range(2.0, 64));
+    }
+}

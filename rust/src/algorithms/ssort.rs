@@ -15,6 +15,8 @@ use crate::localsort::{sort_all, SortBackend};
 use crate::rng::Rng;
 use crate::sim::{alltoallv, bcast_cost, Cube, Machine};
 
+use super::{OutputShape, Sorter};
+
 /// Gather `counts[r]` words from every rank to rank 0 along a binomial
 /// tree with doubling message sizes (the β·p gather term).
 fn gather_words_cost(mach: &mut Machine, pes: &[usize], counts: &mut [usize]) {
@@ -96,6 +98,57 @@ pub fn sort(
         mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
         mach.note_mem(pe, merged.len(), "sample sort receive");
         data[pe] = merged;
+    }
+}
+
+/// [`Sorter`] for single-level p-way sample sort: **SSort** charges the
+/// splitter phase, **NS-SSort** runs it free — the Fig. 2d lower bound
+/// for single-delivery algorithms. Key-only sampling (no tie-breaking)
+/// makes both nonrobust on duplicate-heavy instances.
+#[derive(Clone, Copy, Debug)]
+pub struct SSortSorter {
+    /// Whether the splitter-selection phase is charged to the clocks.
+    pub charge_splitters: bool,
+}
+
+impl SSortSorter {
+    /// SSort: the full algorithm, splitter phase included.
+    pub fn charged() -> Self {
+        Self { charge_splitters: true }
+    }
+
+    /// NS-SSort: splitters for free (Fig. 2d's lower bound).
+    pub fn free_splitters() -> Self {
+        Self { charge_splitters: false }
+    }
+}
+
+impl Sorter for SSortSorter {
+    fn name(&self) -> &'static str {
+        if self.charge_splitters {
+            "SSort"
+        } else {
+            "NS-SSort"
+        }
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        false
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        self::sort(mach, data, cfg, backend, self.charge_splitters);
+        OutputShape::Balanced
     }
 }
 

@@ -3,7 +3,9 @@
 //! central comparison on 262 144 cores, here on a configurable simulated
 //! machine.
 
-use crate::algorithms::Algorithm;
+use std::sync::Arc;
+
+use crate::algorithms::{Algorithm, Sorter};
 use crate::config::RunConfig;
 use crate::experiments::{np_sweep, run_cells, CellResult, NpPoint};
 use crate::input::Distribution;
@@ -13,22 +15,56 @@ use crate::input::Distribution;
 /// computation, not a scan.
 pub struct Fig1 {
     pub points: Vec<NpPoint>,
-    pub algorithms: Vec<Algorithm>,
+    pub algorithms: Vec<Arc<dyn Sorter>>,
     pub distributions: Vec<Distribution>,
     pub cells: Vec<CellResult>,
 }
 
-/// Regenerate Figure 1 on `jobs` worker threads (`1` = fully serial; the
-/// result is byte-identical for every job count).
+/// Regenerate Figure 1 over the paper's eight algorithms on `jobs` worker
+/// threads (`1` = fully serial; the result is byte-identical for every job
+/// count).
 pub fn run(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig1 {
+    run_with(
+        base,
+        Algorithm::FIG1.iter().map(|a| a.sorter()).collect(),
+        max_log,
+        reps,
+        jobs,
+    )
+}
+
+/// The same sweep over an arbitrary sorter set — e.g. (a subset of) the
+/// [`crate::algorithms::registry`], which includes externally registered
+/// sorters.
+///
+/// Cells are keyed by sorter name, so names must be unique within the set
+/// (asserted — two config variants of one algorithm would otherwise
+/// silently address each other's cells).
+pub fn run_with(
+    base: &RunConfig,
+    algorithms: Vec<Arc<dyn Sorter>>,
+    max_log: u32,
+    reps: usize,
+    jobs: usize,
+) -> Fig1 {
+    let mut names: Vec<String> = algorithms
+        .iter()
+        .map(|s| crate::algorithms::normalize(s.name()))
+        .collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(
+        names.len(),
+        algorithms.len(),
+        "fig1 sweep requires unique sorter names (cells are name-keyed)"
+    );
     let points = np_sweep(max_log);
-    let algorithms: Vec<Algorithm> = Algorithm::FIG1.to_vec();
     let distributions: Vec<Distribution> = Distribution::FIG1.to_vec();
     let mut specs = Vec::with_capacity(distributions.len() * points.len() * algorithms.len());
     for &dist in &distributions {
         for &point in &points {
-            for &alg in &algorithms {
-                specs.push((alg, dist, point));
+            for alg in &algorithms {
+                specs.push((alg.clone(), dist, point));
             }
         }
     }
@@ -37,33 +73,37 @@ pub fn run(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig1 {
 }
 
 impl Fig1 {
-    /// Dense grid index of `(dist, point, alg)`; panics (like the old
-    /// linear scan) if the coordinate is not part of the sweep.
-    fn index_of(&self, dist: Distribution, point: NpPoint, alg: Algorithm) -> usize {
+    /// Dense grid index of `(dist, point, algorithm-name)`; panics (like
+    /// the old linear scan) if the coordinate is not part of the sweep.
+    fn index_of(&self, dist: Distribution, point: NpPoint, algorithm: &str) -> usize {
         let d = self
             .distributions
             .iter()
             .position(|&x| x == dist)
             .expect("distribution in sweep");
         let pt = self.points.iter().position(|&x| x == point).expect("point in sweep");
-        let a = self.algorithms.iter().position(|&x| x == alg).expect("algorithm in sweep");
+        let a = self
+            .algorithms
+            .iter()
+            .position(|s| s.name() == algorithm)
+            .expect("algorithm in sweep");
         (d * self.points.len() + pt) * self.algorithms.len() + a
     }
 
-    pub fn cell(&self, dist: Distribution, point: NpPoint, alg: Algorithm) -> &CellResult {
-        let c = &self.cells[self.index_of(dist, point, alg)];
+    pub fn cell(&self, dist: Distribution, point: NpPoint, algorithm: &str) -> &CellResult {
+        let c = &self.cells[self.index_of(dist, point, algorithm)];
         debug_assert!(
-            c.distribution == dist && c.point == point && c.algorithm == alg,
+            c.distribution == dist && c.point == point && c.algorithm == algorithm,
             "cell grid out of order"
         );
         c
     }
 
-    /// Fastest algorithm at a point (ignoring crashes).
-    pub fn winner(&self, dist: Distribution, point: NpPoint) -> Algorithm {
+    /// Fastest algorithm at a point (ignoring crashes), by registry name.
+    pub fn winner(&self, dist: Distribution, point: NpPoint) -> &'static str {
         self.algorithms
             .iter()
-            .copied()
+            .map(|s| s.name())
             .filter(|&a| !self.cell(dist, point, a).crashed)
             .min_by(|&a, &b| {
                 self.cell(dist, point, a)
@@ -84,10 +124,10 @@ impl Fig1 {
             println!("  winner");
             for &pt in &self.points {
                 print!("{:>8}", pt.label());
-                for &a in &self.algorithms {
-                    print!("{:>12}", self.cell(dist, pt, a).display_time());
+                for a in &self.algorithms {
+                    print!("{:>12}", self.cell(dist, pt, a.name()).display_time());
                 }
-                println!("  {}", self.winner(dist, pt).name());
+                println!("  {}", self.winner(dist, pt));
             }
         }
     }
@@ -107,18 +147,18 @@ mod tests {
         // every cell either crashed (allowed for nonrobust algos on hard
         // instances) or produced a correct result
         for c in &fig.cells {
-            assert!(c.crashed || c.ok, "{:?} {:?} {:?}", c.algorithm, c.distribution, c.point);
+            assert!(c.crashed || c.ok, "{} {:?} {:?}", c.algorithm, c.distribution, c.point);
         }
         // sparse end: gather-style algorithms win
         let sparse_winner = fig.winner(Distribution::Uniform, NpPoint::Sparse(243));
         assert!(
-            matches!(sparse_winner, Algorithm::GatherM | Algorithm::Rfis),
+            ["GatherM", "RFIS"].contains(&sparse_winner),
             "sparse winner {sparse_winner:?}"
         );
         // the one-element-per-PE point goes to RFIS (paper: >2× faster)
         let tiny_winner = fig.winner(Distribution::Uniform, NpPoint::Dense(1));
         assert!(
-            matches!(tiny_winner, Algorithm::Rfis | Algorithm::GatherM),
+            ["RFIS", "GatherM"].contains(&tiny_winner),
             "tiny winner {tiny_winner:?}"
         );
     }
@@ -130,13 +170,13 @@ mod tests {
         let fig = run(&base, 2, 1, 2);
         for &dist in &fig.distributions {
             for &pt in &fig.points {
-                for &alg in &fig.algorithms {
-                    let indexed = fig.cell(dist, pt, alg);
+                for alg in &fig.algorithms {
+                    let indexed = fig.cell(dist, pt, alg.name());
                     let scanned = fig
                         .cells
                         .iter()
                         .find(|c| {
-                            c.distribution == dist && c.point == pt && c.algorithm == alg
+                            c.distribution == dist && c.point == pt && c.algorithm == alg.name()
                         })
                         .expect("cell exists");
                     assert!(std::ptr::eq(indexed, scanned));

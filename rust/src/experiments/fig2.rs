@@ -33,11 +33,12 @@ fn ratio_figure(
     reps: usize,
     jobs: usize,
 ) -> Vec<RatioSeries> {
+    let (robust, nonrobust) = (robust.sorter(), nonrobust.sorter());
     let mut specs = Vec::with_capacity(dists.len() * points.len() * 2);
     for &d in dists {
         for &pt in points {
-            specs.push((robust, d, pt));
-            specs.push((nonrobust, d, pt));
+            specs.push((robust.clone(), d, pt));
+            specs.push((nonrobust.clone(), d, pt));
         }
     }
     let mut cells = run_cells(jobs, base, &specs, reps).into_iter();
@@ -50,11 +51,11 @@ fn ratio_figure(
                     let r = cells.next().expect("robust cell");
                     let n = cells.next().expect("nonrobust cell");
                     debug_assert!(
-                        r.algorithm == robust && r.distribution == d && r.point == pt,
+                        r.algorithm == robust.name() && r.distribution == d && r.point == pt,
                         "ratio grid out of order"
                     );
                     debug_assert!(
-                        n.algorithm == nonrobust && n.distribution == d && n.point == pt,
+                        n.algorithm == nonrobust.name() && n.distribution == d && n.point == pt,
                         "ratio grid out of order"
                     );
                     let ratio = if n.crashed {

@@ -2,7 +2,6 @@
 //! fastest algorithm per (instance, n/p) — the paper's normalized view of
 //! Fig. 1.
 
-use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::experiments::fig1::{self, Fig1};
 use crate::input::Distribution;
@@ -16,8 +15,8 @@ pub fn run(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig5 {
 }
 
 impl Fig5 {
-    /// ratio of `alg` to the per-point winner (∞ for crashes).
-    pub fn ratio(&self, dist: Distribution, pt: crate::experiments::NpPoint, alg: Algorithm) -> f64 {
+    /// ratio of the named algorithm to the per-point winner (∞ for crashes).
+    pub fn ratio(&self, dist: Distribution, pt: crate::experiments::NpPoint, alg: &str) -> f64 {
         let best = self.fig1.winner(dist, pt);
         let b = self.fig1.cell(dist, pt, best).time;
         let c = self.fig1.cell(dist, pt, alg);
@@ -38,8 +37,8 @@ impl Fig5 {
             println!();
             for &pt in &self.fig1.points {
                 print!("{:>8}", pt.label());
-                for &a in &self.fig1.algorithms {
-                    let r = self.ratio(dist, pt, a);
+                for a in &self.fig1.algorithms {
+                    let r = self.ratio(dist, pt, a.name());
                     if r.is_finite() {
                         print!("{r:>12.2}");
                     } else {

@@ -1,4 +1,9 @@
 //! Experiment harness: one module per paper table/figure (see DESIGN.md §4).
+//!
+//! Cells are keyed by *sorter* ([`crate::algorithms::Sorter`]), so sweeps
+//! enumerate the registry — including externally
+//! [`crate::algorithms::register`]ed sorters — instead of a closed enum;
+//! [`run_cell`] remains as an [`Algorithm`]-tagged convenience shim.
 
 pub mod fig1;
 pub mod fig2;
@@ -7,10 +12,16 @@ pub mod fig5;
 pub mod table1;
 pub mod tuning;
 
-use crate::algorithms::{run, Algorithm, RunReport};
+use std::sync::Arc;
+
+use crate::algorithms::{Algorithm, OutputShape, Runner, RunReport, Sorter};
 use crate::config::RunConfig;
 use crate::exec;
 use crate::input::{generate, Distribution};
+
+/// One cell spec of a sweep grid: which sorter, on which instance, at
+/// which point of the n/p axis.
+pub type SorterSpec = (Arc<dyn Sorter>, Distribution, NpPoint);
 
 /// Run a batch of cells across the scoped-thread worker pool
 /// ([`crate::exec::parallel_map`]), returning results **in spec order**.
@@ -19,16 +30,16 @@ use crate::input::{generate, Distribution};
 /// per-config seeds), so any `jobs ≥ 1` produces byte-identical figures;
 /// the pool only changes wallclock — and peak transient memory, which
 /// scales with `jobs` because up to that many cells simulate concurrently
-/// (stored cells are lean: [`run_cell`] drops the output payload).
+/// (stored cells are lean: the cell runner drops the output payload).
 pub fn run_cells(
     jobs: usize,
     base: &RunConfig,
-    specs: &[(Algorithm, Distribution, NpPoint)],
+    specs: &[SorterSpec],
     reps: usize,
 ) -> Vec<CellResult> {
     exec::parallel_map(jobs, specs.len(), |i| {
-        let (alg, dist, point) = specs[i];
-        run_cell(alg, dist, base, point, reps)
+        let (sorter, dist, point) = &specs[i];
+        run_sorter_cell(sorter.as_ref(), *dist, base, *point, reps)
     })
 }
 
@@ -77,8 +88,7 @@ impl NpPoint {
     }
 }
 
-/// Run one (algorithm, distribution, n/p) cell, averaging `reps` seeds
-/// (the paper averages 5 runs after a warmup).
+/// [`run_sorter_cell`] addressed by the legacy enum tag.
 pub fn run_cell(
     alg: Algorithm,
     dist: Distribution,
@@ -86,40 +96,62 @@ pub fn run_cell(
     point: NpPoint,
     reps: usize,
 ) -> CellResult {
+    run_sorter_cell(alg.sorter().as_ref(), dist, base, point, reps)
+}
+
+/// Run one (sorter, distribution, n/p) cell, averaging `reps` seeds (the
+/// paper averages 5 runs after a warmup). One [`Runner`] executes the
+/// whole cell, so repetitions reuse the machine's scratch, and the Θ(n)
+/// output payload — which no figure reads — is never retained.
+pub fn run_sorter_cell(
+    sorter: &dyn Sorter,
+    dist: Distribution,
+    base: &RunConfig,
+    point: NpPoint,
+    reps: usize,
+) -> CellResult {
+    let algorithm = sorter.name();
+    // gather-style sorters (non-balanced output shapes) concentrate Θ(n)
+    // on one PE by design — the sweep shows their (steep) curve instead of
+    // tripping the robustness memory cap meant for *accidental*
+    // concentration
+    let gather_style = sorter.output_shape() != OutputShape::Balanced;
+    // replicating sorters hold n·p resident elements. Past a host-memory
+    // threshold that is an OOM on the real machine too — report it as such
+    // instead of thrashing.
+    let cell_cfg = point.apply(base);
+    if sorter.output_shape() == OutputShape::Replicated
+        && cell_cfg.n_total().saturating_mul(cell_cfg.p) > (1 << 27)
+    {
+        return CellResult {
+            algorithm,
+            distribution: dist,
+            point,
+            time: f64::INFINITY,
+            crashed: true,
+            ok: false,
+            report: None,
+        };
+    }
+
+    // repetitions share one runner ([`Runner::run_many`] semantics, but
+    // unrolled so a crashing cell stops at the first failed rep instead of
+    // simulating the rest)
+    let mut runner = Runner::new(cell_cfg).keep_output(false);
+    let reps = reps.max(1);
     let mut times = Vec::with_capacity(reps);
     let mut last: Option<RunReport> = None;
-    for rep in 0..reps.max(1) {
+    for rep in 0..reps {
         let mut cfg = point.apply(base).with_seed(base.seed.wrapping_add(rep as u64 * 7919));
-        // gather-style algorithms concentrate Θ(n) on one PE by design —
-        // the sweep shows their (steep) curve instead of tripping the
-        // robustness memory cap meant for *accidental* concentration
-        if matches!(alg, Algorithm::GatherM | Algorithm::AllGatherM) {
+        if gather_style {
             cfg.mem_cap_factor = None;
         }
-        // AllGatherM replicates the whole input on every PE: n·p resident
-        // elements. Past a host-memory threshold that is an OOM on the
-        // real machine too — report it as such instead of thrashing.
-        if alg == Algorithm::AllGatherM && cfg.n_total().saturating_mul(cfg.p) > (1 << 27) {
-            return CellResult {
-                algorithm: alg,
-                distribution: dist,
-                point,
-                time: f64::INFINITY,
-                crashed: true,
-                ok: false,
-                report: None,
-            };
-        }
-        let mut report = run(alg, &cfg, generate(&cfg, dist));
-        // figures keep every cell alive for the whole sweep, and the
-        // parallel driver keeps up to `jobs` cells in flight on top: drop
-        // the per-PE output payload (Θ(n), or Θ(n·p) for AllGatherM's
-        // replicated output), which no figure consumer reads — the cell
-        // only needs time/stats/validation
-        report.output = Vec::new();
+        let input = generate(&cfg, dist);
+        runner.set_config(cfg);
+        let report = runner.run(sorter, input);
         if report.crashed.is_some() {
             return CellResult {
-                algorithm: alg,
+                algorithm,
                 distribution: dist,
                 point,
                 time: f64::INFINITY,
@@ -133,7 +165,7 @@ pub fn run_cell(
     }
     let report = last.unwrap();
     CellResult {
-        algorithm: alg,
+        algorithm,
         distribution: dist,
         point,
         time: times.iter().sum::<f64>() / times.len() as f64,
@@ -146,7 +178,8 @@ pub fn run_cell(
 /// One cell of a figure.
 #[derive(Debug)]
 pub struct CellResult {
-    pub algorithm: Algorithm,
+    /// Registry name of the sorter ([`Sorter::name`]).
+    pub algorithm: &'static str,
     pub distribution: Distribution,
     pub point: NpPoint,
     pub time: f64,

@@ -4,7 +4,7 @@
 //! sizes and checking growth against the predicted exponent reproduces
 //! each row.
 
-use crate::algorithms::{run, Algorithm};
+use crate::algorithms::{Algorithm, Runner};
 use crate::config::RunConfig;
 use crate::input::{generate, Distribution};
 
@@ -24,7 +24,10 @@ pub fn measure(alg: Algorithm, p: usize, n_per_pe: usize, seed: u64) -> Option<F
     // footprint measurement must not trip the memory cap: gather-style
     // algorithms legitimately concentrate Θ(n) on one PE
     cfg.mem_cap_factor = None;
-    let report = run(alg, &cfg, generate(&cfg, Distribution::Uniform));
+    // footprints read only time/stats — skip the reference clone and the
+    // output payload
+    let mut runner = Runner::new(cfg.clone()).validate(false).keep_output(false);
+    let report = runner.run_algorithm(alg, generate(&cfg, Distribution::Uniform));
     if report.crashed.is_some() {
         return None;
     }
@@ -40,7 +43,8 @@ pub fn measure(alg: Algorithm, p: usize, n_per_pe: usize, seed: u64) -> Option<F
 /// One row of the empirical Table I.
 #[derive(Clone, Debug)]
 pub struct Row {
-    pub algorithm: Algorithm,
+    /// Registry name of the sorter ([`crate::algorithms::Sorter::name`]).
+    pub algorithm: &'static str,
     pub small: Footprint,
     pub large: Footprint,
     /// growth of per-PE messages when p quadruples (≈ latency exponent)
@@ -54,16 +58,9 @@ pub struct Row {
 /// algorithm order regardless of completion order.
 pub fn run_table(n_per_pe: usize, p_small: usize, seed: u64, jobs: usize) -> Vec<Row> {
     let p_large = p_small * 4;
-    let algos = [
-        Algorithm::GatherM,
-        Algorithm::AllGatherM,
-        Algorithm::Rfis,
-        Algorithm::RQuick,
-        Algorithm::Bitonic,
-        Algorithm::Rams,
-        Algorithm::HykSort,
-        Algorithm::SSort,
-    ];
+    // the same eight-algorithm comparison set as Figure 1 — one list,
+    // derived from the registry tags
+    let algos = Algorithm::FIG1;
     let foots = crate::exec::parallel_map(jobs, algos.len() * 2, |i| {
         let alg = algos[i / 2];
         let p = if i % 2 == 0 { p_small } else { p_large };
@@ -75,7 +72,7 @@ pub fn run_table(n_per_pe: usize, p_small: usize, seed: u64, jobs: usize) -> Vec
             continue;
         };
         rows.push(Row {
-            algorithm: alg,
+            algorithm: alg.name(),
             small: s,
             large: l,
             msg_growth: l.messages_per_pe / s.messages_per_pe,
@@ -94,7 +91,7 @@ pub fn print_rows(rows: &[Row]) {
     for r in rows {
         println!(
             "{:>12} {:>12.1} {:>12.1} {:>12.2} {:>12.2}",
-            r.algorithm.name(),
+            r.algorithm,
             r.small.messages_per_pe,
             r.large.messages_per_pe,
             r.msg_growth,
@@ -113,11 +110,11 @@ mod tests {
         // n/p must exceed 4·p_small so SSort's per-PE message count is not
         // capped by the element count (Ω(p) needs p distinct targets)
         let rows = run_table(1 << 9, 1 << 5, 7, crate::exec::available_jobs());
-        let get = |a: Algorithm| rows.iter().find(|r| r.algorithm == a);
+        let get = |a: &str| rows.iter().find(|r| r.algorithm == a);
         // SSort's per-PE message count grows ~linearly with p (Ω(p) row);
         // RQuick's grows only logarithmically (log²p row)
-        let ss = get(Algorithm::SSort).expect("ssort measured");
-        let rq = get(Algorithm::RQuick).expect("rquick measured");
+        let ss = get("SSort").expect("ssort measured");
+        let rq = get("RQuick").expect("rquick measured");
         assert!(
             ss.msg_growth > 2.0,
             "SSort msgs must grow ~linearly: {}",
@@ -131,13 +128,13 @@ mod tests {
         );
         // Bitonic moves Θ(n/p·log²p) words per PE — more than RQuick's
         // Θ(n/p·log p) at the same size
-        let bi = get(Algorithm::Bitonic).expect("bitonic measured");
+        let bi = get("Bitonic").expect("bitonic measured");
         assert!(bi.large.words_per_pe > rq.large.words_per_pe);
         // AllGatherM words per PE ~ n (grows ×4 with p at fixed n/p)
-        let ag = get(Algorithm::AllGatherM).expect("allgatherm measured");
+        let ag = get("AllGatherM").expect("allgatherm measured");
         assert!(ag.word_growth > 3.0, "AllGatherM {}", ag.word_growth);
         // RFIS words per PE ~ n/√p (grows ×2)
-        let rf = get(Algorithm::Rfis).expect("rfis measured");
+        let rf = get("RFIS").expect("rfis measured");
         assert!(
             rf.word_growth > 1.5 && rf.word_growth < 3.0,
             "RFIS {}",

@@ -1,40 +1,47 @@
 //! Appendix J2: parameter tuning — RAMS level counts and HykSort k, plus
-//! the selector crossover thresholds.
+//! the selector crossover thresholds, derived for the *configured* α/β by
+//! probing instead of hard-coding the paper's JUQUEEN numbers
+//! ([`crossover_table`]).
 
-use crate::algorithms::{hyksort, quick, rams};
+use crate::algorithms::gather_merge::GatherMSorter;
+use crate::algorithms::hyksort::{HykConfig, HykSorter};
+use crate::algorithms::quick::{QuickConfig, RQuickSorter};
+use crate::algorithms::rams::RamsSorter;
+use crate::algorithms::rfis::RfisSorter;
+use crate::algorithms::selector::CrossoverTable;
+use crate::algorithms::{Runner, Sorter};
 use crate::config::RunConfig;
 use crate::input::{generate, Distribution};
-use crate::localsort::RustSort;
-use crate::sim::Machine;
+
+/// Simulated time of one probe run (∞ on crash). Validation and output
+/// retention are off — tuning reads only the clock — and the memory cap is
+/// lifted because gather-style probes legitimately concentrate Θ(n).
+fn probe_time(cfg: &RunConfig, sorter: &dyn Sorter) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.mem_cap_factor = None;
+    let mut runner = Runner::new(cfg.clone()).validate(false).keep_output(false);
+    let report = runner.run(sorter, generate(&cfg, Distribution::Uniform));
+    if report.crashed.is_some() {
+        f64::INFINITY
+    } else {
+        report.time
+    }
+}
 
 /// Simulated time of RAMS at a fixed level count.
 pub fn rams_time(cfg: &RunConfig, levels: usize) -> f64 {
-    let mut mach = Machine::new(cfg.p, cfg.cost);
-    mach.mem_cap_elems = cfg.mem_cap_elems();
-    let mut data = generate(cfg, Distribution::Uniform);
-    let ac = rams::AmsConfig::robust(cfg).with_levels(levels);
-    rams::sort(&mut mach, &mut data, cfg, &mut RustSort, &ac);
-    mach.time()
+    probe_time(cfg, &RamsSorter::robust().with_levels(levels))
 }
 
 /// Simulated time of HykSort at a given k.
 pub fn hyksort_time(cfg: &RunConfig, k: usize) -> f64 {
-    let mut mach = Machine::new(cfg.p, cfg.cost);
-    mach.mem_cap_elems = cfg.mem_cap_elems();
-    let mut data = generate(cfg, Distribution::Uniform);
-    let hc = hyksort::HykConfig { k, ..Default::default() };
-    hyksort::sort(&mut mach, &mut data, cfg, &mut RustSort, &hc);
-    mach.time()
+    probe_time(cfg, &HykSorter::with_config(HykConfig { k, ..Default::default() }))
 }
 
 /// Simulated time of RQuick at a given median window k.
 pub fn rquick_time(cfg: &RunConfig, window_k: usize) -> f64 {
-    let mut mach = Machine::new(cfg.p, cfg.cost);
-    mach.mem_cap_elems = cfg.mem_cap_elems();
-    let mut data = generate(cfg, Distribution::Uniform);
-    let qc = quick::QuickConfig { window_k, ..quick::QuickConfig::robust() };
-    quick::sort(&mut mach, &mut data, cfg, &mut RustSort, &qc);
-    mach.time()
+    let qc = QuickConfig { window_k, ..QuickConfig::robust() };
+    probe_time(cfg, &RQuickSorter::with_config(qc))
 }
 
 pub struct Tuning {
@@ -113,6 +120,84 @@ impl Tuning {
     }
 }
 
+/// Derive a selector [`CrossoverTable`] for the configured machine ratio
+/// (α/β in `base.cost`) by probing each pair of adjacent robust algorithms
+/// on Uniform inputs — the ROADMAP "crossover auto-tuning" item. The
+/// default ladders probe sparsities 1/16..1/2, small sizes 1..16, and
+/// large sizes 2^8..2^14; hand the result to
+/// [`crate::algorithms::selector::RobustSorter::with_table`].
+pub fn crossover_table(base: &RunConfig) -> CrossoverTable {
+    crossover_table_with(base, &[16, 8, 4, 2], &[1, 2, 4, 8, 16], &[256, 1024, 4096, 16384])
+}
+
+/// [`crossover_table`] with explicit probe ladders:
+///
+/// * `sparse_s` — sparsity factors (n/p = 1/s) for the GatherM↔RFIS
+///   boundary; `gather_max` becomes the largest probed n/p where GatherM
+///   still wins, or half the smallest probed n/p if it never does.
+/// * `small_m` — dense n/p for the RFIS↔RQuick boundary; `rfis_max`
+///   becomes the smallest probed n/p where RQuick takes over (RFIS keeps
+///   everything strictly below it), or twice the largest probe if RFIS
+///   wins the whole ladder.
+/// * `large_m` — dense n/p for the RQuick↔RAMS boundary; `rquick_max`
+///   becomes the largest probed n/p where RQuick still wins, or half the
+///   smallest probe if RAMS wins everywhere.
+///
+/// Ladders must be sorted ascending in n/p (i.e. `sparse_s` descending).
+/// The simulator is deterministic, so the table is reproducible for a
+/// given config.
+pub fn crossover_table_with(
+    base: &RunConfig,
+    sparse_s: &[usize],
+    small_m: &[usize],
+    large_m: &[usize],
+) -> CrossoverTable {
+    let gather = GatherMSorter;
+    let rfis = RfisSorter;
+    let rquick = RQuickSorter::robust();
+    let rams = RamsSorter::robust();
+    let mut table = CrossoverTable::JUQUEEN;
+
+    // GatherM ↔ RFIS over the sparse ladder
+    let mut gather_max = None;
+    for &s in sparse_s {
+        let cfg = base.clone().with_sparsity(s);
+        if probe_time(&cfg, &gather) <= probe_time(&cfg, &rfis) {
+            let npp = 1.0 / s as f64;
+            gather_max = Some(gather_max.map_or(npp, |prev: f64| prev.max(npp)));
+        }
+    }
+    table.gather_max = gather_max
+        .unwrap_or_else(|| sparse_s.iter().map(|&s| 1.0 / s as f64).fold(f64::MAX, f64::min) / 2.0);
+
+    // RFIS ↔ RQuick over the small dense ladder
+    let mut rfis_max = None;
+    for &m in small_m {
+        let cfg = base.clone().with_n_per_pe(m);
+        if probe_time(&cfg, &rquick) <= probe_time(&cfg, &rfis) {
+            rfis_max = Some(m as f64);
+            break;
+        }
+    }
+    // RFIS won the whole ladder: extend its regime one octave past the
+    // probes instead of silently keeping the JUQUEEN number
+    table.rfis_max =
+        rfis_max.unwrap_or_else(|| 2.0 * small_m.last().copied().unwrap_or(2) as f64);
+
+    // RQuick ↔ RAMS over the large dense ladder
+    let mut rquick_max = None;
+    for &m in large_m {
+        let cfg = base.clone().with_n_per_pe(m);
+        if probe_time(&cfg, &rquick) <= probe_time(&cfg, &rams) {
+            rquick_max = Some(rquick_max.map_or(m as f64, |prev: f64| prev.max(m as f64)));
+        }
+    }
+    table.rquick_max =
+        rquick_max.unwrap_or_else(|| large_m.first().copied().unwrap_or(512) as f64 / 2.0);
+
+    table
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +219,28 @@ mod tests {
         assert_eq!(t.hyksort_k.len(), 4);
         assert_eq!(t.rquick_window.len(), 3);
         assert!(t.rams_levels.iter().all(|(_, _, t)| t.is_finite()));
+    }
+
+    /// Derived crossovers are ordered, in the probed ranges, and keep the
+    /// qualitative Fig. 1 shape on the default cost model: a sparse
+    /// GatherM regime below 1, an RFIS window, an RQuick plateau.
+    #[test]
+    fn crossover_table_orders_the_four_regimes() {
+        let base = RunConfig::default().with_p(1 << 5);
+        let t = crossover_table_with(&base, &[16, 8, 4, 2], &[1, 2, 4, 8], &[64, 256, 1024]);
+        assert!(t.gather_max < 1.0, "gather regime is sparse: {t:?}");
+        assert!(t.gather_max < t.rfis_max, "{t:?}");
+        assert!(t.rfis_max <= t.rquick_max, "{t:?}");
+        assert_eq!(t.choose(t.gather_max / 2.0), "GatherM");
+        assert_eq!(t.choose(t.rquick_max * 2.0 + 1.0), "RAMS");
+    }
+
+    /// The probe is deterministic: same config, same table.
+    #[test]
+    fn crossover_table_is_deterministic() {
+        let base = RunConfig::default().with_p(1 << 4);
+        let a = crossover_table_with(&base, &[4, 2], &[1, 4], &[64, 256]);
+        let b = crossover_table_with(&base, &[4, 2], &[1, 4], &[64, 256]);
+        assert_eq!(a, b);
     }
 }

@@ -22,14 +22,35 @@
 //! classifier) can instead execute AOT-compiled JAX/Pallas kernels through
 //! PJRT via the [`runtime`] module; Python never runs on the sort path.
 //!
+//! Runs go through the builder-style [`algorithms::Runner`], which owns
+//! the simulated machine and reuses it across batched runs; algorithms are
+//! first-class [`algorithms::Sorter`] values enumerated by
+//! [`algorithms::registry`] (external implementations join via
+//! [`algorithms::register`]):
+//!
 //! ```no_run
 //! use rmps::prelude::*;
 //!
 //! let cfg = RunConfig { p: 1 << 8, n_per_pe: 1 << 10, ..Default::default() };
+//! let mut runner = Runner::new(cfg.clone());
 //! let input = rmps::input::generate(&cfg, Distribution::Uniform);
-//! let report = rmps::algorithms::run(Algorithm::RQuick, &cfg, input);
+//! let report = runner.run_algorithm(Algorithm::RQuick, input);
 //! assert!(report.is_globally_sorted);
+//!
+//! // batched: same runner, new seed per repetition, machine scratch reused
+//! let batch = (0..5u64).map(|s| {
+//!     let cfg = cfg.clone().with_seed(s);
+//!     let input = rmps::input::generate(&cfg, Distribution::Staggered);
+//!     (cfg, input)
+//! });
+//! let sorter = Algorithm::Robust.sorter();
+//! let reports = runner.run_many(sorter.as_ref(), batch);
+//! assert!(reports.iter().all(|r| r.succeeded()));
 //! ```
+//!
+//! The pre-redesign free functions `algorithms::run` /
+//! `algorithms::run_with_backend` remain as thin shims over the same core
+//! and produce byte-identical reports (see `rust/tests/runner_equivalence.rs`).
 
 // Tolerate lint names that older clippy releases do not know yet.
 #![allow(unknown_lints)]
@@ -68,7 +89,10 @@ pub mod verify;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::algorithms::{Algorithm, RunReport};
+    pub use crate::algorithms::selector::CrossoverTable;
+    pub use crate::algorithms::{
+        find_sorter, register, registry, Algorithm, OutputShape, Runner, RunReport, Sorter,
+    };
     pub use crate::config::RunConfig;
     pub use crate::elements::Elem;
     pub use crate::input::Distribution;

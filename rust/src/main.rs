@@ -6,7 +6,10 @@
 //! (`--key value` flags) instead of pulling in clap, and errors are a
 //! plain message type instead of anyhow.
 
-use rmps::algorithms::{run_with_backend, Algorithm};
+use std::sync::Arc;
+
+use rmps::algorithms::selector::RobustSorter;
+use rmps::algorithms::{find_sorter, registry, Runner, Sorter};
 use rmps::config::RunConfig;
 use rmps::experiments::{self, NpPoint};
 use rmps::input::{generate, Distribution};
@@ -38,12 +41,16 @@ COMMANDS
   run      one algorithm on one instance
              --algo A        (default Robust)   GatherM|AllGatherM|RFIS|RQuick|
                              NTB-Quick|Bitonic|RAMS|NTB-AMS|NDMA-AMS|HykSort|
-                             SSort|NS-SSort|Minisort|Mways|Robust
+                             SSort|NS-SSort|Minisort|Mways|Robust — or any
+                             sorter registered with rmps::algorithms::register
              --dist D        (default Uniform)  Uniform|Gaussian|BucketSorted|
                              DeterDupl|RandDupl|Zero|g-Group|Staggered|
                              Mirrored|AllToOne|Reverse
              --n-per-pe M    (default 1024)
              --sparsity S    (default 1; >1 = one element per S PEs)
+             --tuned-crossovers  (Robust only) derive the selector's n/p
+                             crossovers for the configured α/β by probing
+                             instead of using the paper's JUQUEEN table
   fig1     running times of all algorithms over the n/p sweep
              --max-log L     (default 10)    --reps R (default 1)
   fig2a    RQuick / NTB-Quick ratios        --max-log L
@@ -163,8 +170,6 @@ fn main() -> Result<()> {
         "run" => {
             let algo = a.get_str("algo", "Robust");
             let dist = a.get_str("dist", "Uniform");
-            let alg = Algorithm::parse(&algo)
-                .ok_or_else(|| CliError(format!("unknown algorithm {algo}")))?;
             let d = Distribution::parse(&dist)
                 .ok_or_else(|| CliError(format!("unknown distribution {dist}")))?;
             let mut cfg = machine_config(&a)?;
@@ -174,12 +179,33 @@ fn main() -> Result<()> {
             } else {
                 cfg = cfg.with_n_per_pe(a.get("n-per-pe", 1024)?);
             }
-            let mut be = backend(&a)?;
+            // resolve --algo through the registry, so sorters added with
+            // rmps::algorithms::register are first-class CLI citizens
+            let sorter: Arc<dyn Sorter> = if a.flag("tuned-crossovers") {
+                if !algo.eq_ignore_ascii_case("robust") {
+                    bail!("--tuned-crossovers only applies to --algo Robust");
+                }
+                let table = experiments::tuning::crossover_table(&cfg);
+                println!(
+                    "tuned crossovers: GatherM ≤ {:.4} | RFIS < {} | RQuick ≤ {} | RAMS",
+                    table.gather_max, table.rfis_max, table.rquick_max
+                );
+                Arc::new(RobustSorter::with_table(table))
+            } else {
+                find_sorter(&algo).ok_or_else(|| {
+                    let known: Vec<&str> = registry().iter().map(|s| s.name()).collect();
+                    CliError(format!(
+                        "unknown algorithm {algo} (known: {})",
+                        known.join(", ")
+                    ))
+                })?
+            };
+            let mut runner = Runner::new(cfg.clone()).backend(backend(&a)?);
             let input = generate(&cfg, d);
-            let report = run_with_backend(alg, &cfg, input, be.as_mut());
+            let report = runner.run(sorter.as_ref(), input);
             println!(
                 "algo={} dist={} p={} n/p={:.4}",
-                alg.name(),
+                report.algorithm,
                 d.name(),
                 cfg.p,
                 cfg.n_over_p()

@@ -109,6 +109,31 @@ impl Machine {
         self.p
     }
 
+    /// Reset to the pristine state of `Machine::new(p, cost)` — zero
+    /// clocks, fresh stats, no crash, no memory cap, no open superstep —
+    /// while keeping every scratch allocation (route tallies, transcript
+    /// buffers) for reuse. [`crate::algorithms::Runner`] calls this
+    /// between batched runs; a reset machine is bit-for-bit equivalent to
+    /// a freshly constructed one (the simulation is deterministic and the
+    /// scratch invariants guarantee clean slates).
+    pub fn reset(&mut self, p: usize, cost: CostModel) {
+        assert!(p >= 1);
+        self.p = p;
+        self.clock.clear();
+        self.clock.resize(p, 0.0);
+        self.cost = cost;
+        self.stats = Stats::default();
+        self.mem_cap_elems = None;
+        self.crash = None;
+        // a crashed run may have been abandoned mid-superstep; drop any
+        // buffered (never charged) operations
+        if let Some(mut t) = self.transcript.take() {
+            t.ops.clear();
+            t.route.clear();
+            self.spare = t;
+        }
+    }
+
     /// log2(p) for power-of-two machines.
     #[inline]
     pub fn dims(&self) -> u32 {

@@ -67,6 +67,28 @@ pub fn validate(input: &[Vec<Elem>], output: &[Vec<Elem>], epsilon: f64) -> Vali
     Validation { locally_sorted, globally_sorted, multiset_preserved, imbalance, balanced }
 }
 
+/// Validate a *replicated* output
+/// ([`crate::algorithms::OutputShape::Replicated`]): every PE must hold
+/// the complete input in sorted `(key, id)` order. Each PE's copy is
+/// checked against the sorted reference — not merely against PE 0's copy,
+/// so a uniformly wrong replica cannot pass.
+///
+/// `balanced` is always false: full replication holds Θ(n) per PE by
+/// construction and never meets the (1+ε)·n/p contract.
+pub fn validate_replicated(input: &[Vec<Elem>], output: &[Vec<Elem>]) -> Validation {
+    let mut expected: Vec<Elem> = input.iter().flatten().copied().collect();
+    expected.sort_unstable();
+    let locally_sorted = output.iter().all(|v| is_key_sorted(v));
+    let complete = !output.is_empty() && output.iter().all(|v| *v == expected);
+    Validation {
+        locally_sorted,
+        globally_sorted: locally_sorted && complete,
+        multiset_preserved: complete,
+        imbalance: Imbalance::from_loads(output.iter().map(Vec::len)),
+        balanced: false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +153,35 @@ mod tests {
         let input = vec![vec![e(1, 0)], vec![], vec![e(2, 1)]];
         let output = vec![vec![e(1, 0)], vec![], vec![e(2, 1)]];
         assert!(validate(&input, &output, 0.2).ok());
+    }
+
+    #[test]
+    fn replicated_accepts_full_copies_everywhere() {
+        let input = vec![vec![e(3, 0), e(1, 1)], vec![e(2, 2)]];
+        let full = vec![e(1, 1), e(2, 2), e(3, 0)];
+        let v = validate_replicated(&input, &[full.clone(), full]);
+        assert!(v.ok(), "{v:?}");
+        assert!(!v.balanced, "replication never satisfies the balance contract");
+    }
+
+    /// The hole the old PE-0-projection check left open: if every PE holds
+    /// the *same* wrong copy, "all PEs equal PE 0" is vacuously true. The
+    /// per-PE reference comparison must reject it.
+    #[test]
+    fn replicated_rejects_uniformly_wrong_copies() {
+        let input = vec![vec![e(3, 0), e(1, 1)], vec![e(2, 2)]];
+        let wrong = vec![e(1, 1), e(2, 2)]; // lost element 3, uniformly
+        let v = validate_replicated(&input, &[wrong.clone(), wrong]);
+        assert!(!v.ok());
+        assert!(!v.multiset_preserved);
+    }
+
+    #[test]
+    fn replicated_rejects_one_divergent_pe() {
+        let input = vec![vec![e(3, 0), e(1, 1)], vec![e(2, 2)]];
+        let full = vec![e(1, 1), e(2, 2), e(3, 0)];
+        let divergent = vec![e(1, 1), e(3, 0), e(2, 2)];
+        let v = validate_replicated(&input, &[full, divergent]);
+        assert!(!v.ok());
     }
 }

@@ -1,0 +1,111 @@
+//! Acceptance test for the open sorter API: a brand-new sorter defined in
+//! one file (here, this test crate — outside `rmps` entirely) becomes
+//! visible to CLI-style name lookup, registry enumeration, and experiment
+//! sweeps purely by implementing `Sorter` and calling `register` — no
+//! edit to any dispatch table in `rmps::algorithms`.
+
+use std::sync::Arc;
+
+use rmps::algorithms::{
+    builtin_sorters, find_sorter, register, registry, OutputShape, Runner, Sorter,
+};
+use rmps::config::RunConfig;
+use rmps::elements::Elem;
+use rmps::experiments::{fig1, NpPoint};
+use rmps::input::{generate, Distribution};
+use rmps::localsort::SortBackend;
+use rmps::sim::Machine;
+
+/// A deliberately naive external sorter: gather everything to PE 0, sort
+/// centrally through the local-sort backend, scatter contiguous chunks
+/// back. Correct (full `(key, id)` order, balanced) and honestly costed —
+/// just slow, like a baseline somebody might plug in from outside.
+struct CentralSorter;
+
+impl Sorter for CentralSorter {
+    fn name(&self) -> &'static str {
+        "Central"
+    }
+
+    fn output_shape(&self) -> OutputShape {
+        OutputShape::Balanced
+    }
+
+    fn is_robust(&self) -> bool {
+        true
+    }
+
+    fn sort(
+        &self,
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        let p = cfg.p;
+        // gather: every non-empty PE ships its fragment to PE 0
+        let gather: Vec<(usize, usize, usize)> = data
+            .iter()
+            .enumerate()
+            .filter(|(pe, local)| *pe != 0 && !local.is_empty())
+            .map(|(pe, local)| (pe, 0, local.len()))
+            .collect();
+        mach.route_round(&gather);
+
+        let mut all: Vec<Elem> = data.iter().flatten().copied().collect();
+        let n = all.len();
+        mach.note_mem(0, n, "central gather");
+        mach.work_sort(0, n);
+        backend.sort_runs(&mut [&mut all]);
+
+        // scatter contiguous chunks, ⌈n/p⌉ on the first n mod p PEs
+        let (chunk, extra) = (n / p, n % p);
+        let mut scatter = Vec::new();
+        let mut start = 0;
+        for (pe, local) in data.iter_mut().enumerate() {
+            let len = chunk + usize::from(pe < extra);
+            *local = all[start..start + len].to_vec();
+            start += len;
+            if pe != 0 && len > 0 {
+                scatter.push((0, pe, len));
+            }
+        }
+        mach.route_round(&scatter);
+        OutputShape::Balanced
+    }
+}
+
+#[test]
+fn external_sorter_is_first_class() {
+    register(Arc::new(CentralSorter)).expect("fresh name registers");
+
+    // CLI parsing path (`rmps run --algo central` resolves through this)
+    let found = find_sorter("central").expect("registered sorter parses");
+    assert_eq!(found.name(), "Central");
+    assert!(found.is_robust());
+
+    // registry enumeration: built-ins plus the new one
+    assert_eq!(registry().len(), builtin_sorters().len() + 1);
+    assert!(registry().iter().any(|s| s.name() == "Central"));
+
+    // duplicate names are rejected (case/separator-insensitively)
+    assert!(register(Arc::new(CentralSorter)).is_err());
+
+    // it runs through the Runner and meets the §II contract
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(32);
+    let mut runner = Runner::new(cfg.clone());
+    for dist in [Distribution::Uniform, Distribution::Zero, Distribution::Staggered] {
+        let report = runner.run(found.as_ref(), generate(&cfg, dist));
+        assert!(report.succeeded(), "{dist:?}: {:?}", report.validation);
+        assert_eq!(report.algorithm, "Central");
+    }
+
+    // experiment enumeration: a Fig. 1-style sweep over the *registry*
+    // (all built-ins plus the external sorter) produces a cell for it
+    let base = RunConfig { p: 1 << 3, ..Default::default() };
+    let fig = fig1::run_with(&base, registry(), 2, 1, 2);
+    let cell = fig.cell(Distribution::Uniform, NpPoint::Dense(4), "Central");
+    assert!(!cell.crashed && cell.ok, "external cell: {cell:?}");
+    // and the winner bookkeeping sees it like any built-in
+    let _ = fig.winner(Distribution::Uniform, NpPoint::Dense(4));
+}

@@ -1,0 +1,129 @@
+//! The API-redesign compatibility contract: the legacy `run` /
+//! `run_with_backend` free functions are thin shims over the `Runner`
+//! core and must produce **byte-identical** reports — simulated time,
+//! stats, validation, shape, crash, output — for all 15 algorithms.
+//! (`wall_ms` is host wallclock and is the one field exempt by nature.)
+//!
+//! Also pinned here: machine reuse across batched `Runner` runs changes
+//! nothing, and the `validate`/`keep_output` opt-outs change payloads but
+//! never the simulation.
+
+use rmps::algorithms::{run, Algorithm, Runner, RunReport};
+use rmps::config::RunConfig;
+use rmps::input::{generate, Distribution};
+
+/// Field-by-field byte comparison (floats as raw bits).
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm");
+    assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: time");
+    assert_eq!(a.stats.messages, b.stats.messages, "{ctx}: messages");
+    assert_eq!(a.stats.words, b.stats.words, "{ctx}: words");
+    assert_eq!(
+        a.stats.local_work.to_bits(),
+        b.stats.local_work.to_bits(),
+        "{ctx}: local_work"
+    );
+    assert_eq!(a.stats.max_mem_elems, b.stats.max_mem_elems, "{ctx}: max_mem_elems");
+    assert_eq!(a.stats.max_degree, b.stats.max_degree, "{ctx}: max_degree");
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed");
+    assert_eq!(a.output_shape, b.output_shape, "{ctx}: output_shape");
+    assert_eq!(a.is_globally_sorted, b.is_globally_sorted, "{ctx}: is_globally_sorted");
+    let (va, vb) = (&a.validation, &b.validation);
+    assert_eq!(va.locally_sorted, vb.locally_sorted, "{ctx}: locally_sorted");
+    assert_eq!(va.globally_sorted, vb.globally_sorted, "{ctx}: globally_sorted");
+    assert_eq!(va.multiset_preserved, vb.multiset_preserved, "{ctx}: multiset");
+    assert_eq!(va.balanced, vb.balanced, "{ctx}: balanced");
+    assert_eq!(va.imbalance.max_load, vb.imbalance.max_load, "{ctx}: max_load");
+    assert_eq!(va.imbalance.min_load, vb.imbalance.min_load, "{ctx}: min_load");
+    assert_eq!(
+        va.imbalance.epsilon.to_bits(),
+        vb.imbalance.epsilon.to_bits(),
+        "{ctx}: imbalance ε"
+    );
+    assert_eq!(a.output, b.output, "{ctx}: output");
+}
+
+/// All 15 algorithms × a small (distribution, size) grid: the legacy shim
+/// and a fresh `Runner` agree bit for bit. Out-of-range combinations
+/// (Minisort on m ≠ 1, Bitonic on sparse) are included — their *crash
+/// reports* must agree too.
+#[test]
+fn legacy_shims_match_runner_for_all_algorithms() {
+    let dists = [Distribution::Uniform, Distribution::Zero, Distribution::Staggered];
+    for &dist in &dists {
+        for m in [1usize, 4, 64] {
+            let cfg = RunConfig::default().with_p(16).with_n_per_pe(m);
+            for alg in Algorithm::ALL {
+                let ctx = format!("{alg:?}/{dist:?}/m={m}");
+                let input = generate(&cfg, dist);
+                let legacy = run(alg, &cfg, input.clone());
+                let mut runner = Runner::new(cfg.clone());
+                let new = runner.run_algorithm(alg, input);
+                assert_reports_identical(&legacy, &new, &ctx);
+            }
+        }
+    }
+}
+
+/// The sparse regime (n < p), where the selector hands off to GatherM and
+/// the gather baselines shine.
+#[test]
+fn legacy_shims_match_runner_on_sparse_inputs() {
+    let mut cfg = RunConfig::default().with_p(32).with_sparsity(8);
+    cfg.mem_cap_factor = None; // gather-style runs concentrate Θ(n)
+    for alg in Algorithm::ALL {
+        let ctx = format!("{alg:?}/sparse");
+        let input = generate(&cfg, Distribution::Uniform);
+        let legacy = run(alg, &cfg, input.clone());
+        let mut runner = Runner::new(cfg.clone());
+        let new = runner.run_algorithm(alg, input);
+        assert_reports_identical(&legacy, &new, &ctx);
+    }
+}
+
+/// One `Runner` running a batch (different seeds, reused machine) agrees
+/// bit for bit with fresh legacy runs of each item.
+#[test]
+fn batched_runner_matches_fresh_legacy_runs() {
+    let base = RunConfig::default().with_p(16).with_n_per_pe(32);
+    for alg in [Algorithm::RQuick, Algorithm::Rams, Algorithm::Robust, Algorithm::Rfis] {
+        let batch: Vec<_> = (0..4u64)
+            .map(|s| {
+                let cfg = base.clone().with_seed(0xABC0DE + s);
+                let input = generate(&cfg, Distribution::RandDupl);
+                (cfg, input)
+            })
+            .collect();
+        let sorter = alg.sorter();
+        let mut runner = Runner::new(base.clone());
+        let batched = runner.run_many(sorter.as_ref(), batch.clone());
+        assert_eq!(batched.len(), batch.len());
+        for ((cfg, input), got) in batch.into_iter().zip(&batched) {
+            let fresh = run(alg, &cfg, input);
+            assert_reports_identical(&fresh, got, &format!("{alg:?} batched"));
+        }
+    }
+}
+
+/// `validate(false)` / `keep_output(false)` strip payloads without
+/// touching the simulation.
+#[test]
+fn opt_outs_preserve_simulation_results() {
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(64);
+    for alg in [Algorithm::RQuick, Algorithm::Mways, Algorithm::Robust] {
+        let input = generate(&cfg, Distribution::Staggered);
+        let full = run(alg, &cfg, input.clone());
+        let mut lean_runner = Runner::new(cfg.clone()).validate(false).keep_output(false);
+        let lean = lean_runner.run_algorithm(alg, input);
+        assert_eq!(full.time.to_bits(), lean.time.to_bits(), "{alg:?}: time");
+        assert_eq!(full.stats.messages, lean.stats.messages, "{alg:?}: messages");
+        assert_eq!(full.stats.words, lean.stats.words, "{alg:?}: words");
+        assert_eq!(full.crashed, lean.crashed, "{alg:?}: crashed");
+        assert!(lean.output.is_empty(), "{alg:?}: output dropped");
+        assert!(
+            !lean.validation.ok() && !lean.is_globally_sorted,
+            "{alg:?}: unvalidated reports must not claim success"
+        );
+        assert!(full.validation.ok(), "{alg:?}: the validated twin passes");
+    }
+}
