@@ -5,34 +5,114 @@
 //! (merge, partition, shuffle), and emits `BENCH_hotpath.json` (CI uploads
 //! it as an artifact).
 //!
+//! The binary installs a counting global allocator and reports, per
+//! algorithm, the heap-allocation count of the **first** run on a fresh
+//! `Runner` (`allocs_cold` — data-plane pools empty) against a
+//! **steady-state** run on the same runner (`allocs_warm` — pooled
+//! exchange buffers reused). The cold/warm gap is the pooling win of the
+//! Exchange data plane; both land in the JSON so CI artifacts track
+//! allocation regressions across commits.
+//!
 //! Knobs: RMPS_BENCH_REPS (default 3); RMPS_BENCH_TINY=1 shrinks every
 //! size so a CI smoke run finishes in seconds while still driving the
 //! same code paths.
 
 mod common;
 
-use rmps::algorithms::{run, Algorithm};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use rmps::algorithms::{Algorithm, Runner};
 use rmps::config::RunConfig;
 use rmps::elements::{merge_into, multiway_merge, Elem};
 use rmps::input::{generate, Distribution};
 use rmps::partition::{partition, pick_splitters, SplitterTree};
 use rmps::rng::Rng;
 
-/// One measured line: (label, median ms, Melem/s).
-type Line = (String, f64, f64);
+/// System allocator wrapped with a call counter (alloc/realloc/zeroed;
+/// frees are not counted — the metric is allocation churn).
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Relaxed)
+}
+
+/// One measured line: label, median ms, Melem/s, and (for end-to-end
+/// algorithm runs) cold/warm allocation counts.
+struct Line {
+    name: String,
+    ms: f64,
+    rate: f64,
+    allocs: Option<(u64, u64)>,
+}
 
 fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Line>) {
     let cfg = RunConfig::default().with_p(p).with_n_per_pe(m);
     let input = generate(&cfg, Distribution::Uniform);
+
+    // allocation counting uses a lean runner (no reference clone, no kept
+    // output) and clones the input *outside* the counted window, so the
+    // cold/warm delta isolates the data-plane pool warmup
+    let mut lean = Runner::new(cfg.clone()).validate(false).keep_output(false);
+    // cold: fresh machine, empty data-plane pools
+    let run_input = input.clone();
+    let before = alloc_count();
+    let r = lean.run_algorithm(alg, run_input);
+    let allocs_cold = alloc_count() - before;
+    assert!(r.crashed.is_none());
+    // warm: same runner, pooled exchange buffers in steady state
+    let run_input = input.clone();
+    let before = alloc_count();
+    let r = lean.run_algorithm(alg, run_input);
+    let allocs_warm = alloc_count() - before;
+    assert!(r.crashed.is_none());
+
+    // timing keeps the historical semantics (validation on, output kept)
+    let mut runner = Runner::new(cfg.clone());
     let ms = common::time_ms(reps, || {
-        let r = run(alg, &cfg, input.clone());
+        let r = runner.run_algorithm(alg, input.clone());
         assert!(r.crashed.is_none());
         r.time
     });
     let n = (p * m) as f64;
     let rate = n / ms / 1e3;
-    println!("{:>10} p={p:<5} n/p={m:<6} {ms:>9.1} ms host   {rate:>7.2} Melem/s", alg.name());
-    out.push((format!("{} p={p} n/p={m}", alg.name()), ms, rate));
+    println!(
+        "{:>10} p={p:<5} n/p={m:<6} {ms:>9.1} ms host   {rate:>7.2} Melem/s   \
+         allocs {allocs_cold:>8} cold / {allocs_warm:>8} warm",
+        alg.name()
+    );
+    out.push(Line {
+        name: format!("{} p={p} n/p={m}", alg.name()),
+        ms,
+        rate,
+        allocs: Some((allocs_cold, allocs_warm)),
+    });
 }
 
 fn main() {
@@ -64,7 +144,7 @@ fn main() {
     });
     let rate = (2 * kn) as f64 / ms / 1e3;
     println!("merge_into 2-way       {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push((format!("merge_into 2x{kn}"), ms, rate));
+    lines.push(Line { name: format!("merge_into 2x{kn}"), ms, rate, allocs: None });
 
     let runs_n = 64;
     let run_len = sz(1 << 14, 1 << 8);
@@ -80,7 +160,7 @@ fn main() {
     let ms = common::time_ms(reps, || multiway_merge(&refs).len());
     let rate = (runs_n * run_len) as f64 / ms / 1e3;
     println!("multiway_merge 64-way  {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push((format!("multiway_merge 64x{run_len}"), ms, rate));
+    lines.push(Line { name: format!("multiway_merge 64x{run_len}"), ms, rate, allocs: None });
 
     let pn = sz(1 << 20, 1 << 13);
     let data: Vec<Elem> = (0..pn).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
@@ -91,18 +171,26 @@ fn main() {
     let ms = common::time_ms(reps, || partition(&data, &tree, true).len());
     let rate = pn as f64 / ms / 1e3;
     println!("partition s=127 TB     {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push((format!("partition {pn} s=127 TB"), ms, rate));
+    lines.push(Line { name: format!("partition {pn} s=127 TB"), ms, rate, allocs: None });
     let ms = common::time_ms(reps, || partition(&data, &tree, false).len());
     let rate = pn as f64 / ms / 1e3;
     println!("partition s=127        {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push((format!("partition {pn} s=127"), ms, rate));
+    lines.push(Line { name: format!("partition {pn} s=127"), ms, rate, allocs: None });
 
     let results: Vec<String> = lines
         .iter()
-        .map(|(name, ms, rate)| {
+        .map(|l| {
+            let allocs = match l.allocs {
+                Some((cold, warm)) => {
+                    format!(", \"allocs_cold\": {cold}, \"allocs_warm\": {warm}")
+                }
+                None => String::new(),
+            };
             format!(
-                "{{\"name\": {}, \"ms\": {ms:.3}, \"melem_per_s\": {rate:.3}}}",
-                common::json_str(name)
+                "{{\"name\": {}, \"ms\": {:.3}, \"melem_per_s\": {:.3}{allocs}}}",
+                common::json_str(&l.name),
+                l.ms,
+                l.rate
             )
         })
         .collect();

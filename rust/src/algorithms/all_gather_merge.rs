@@ -3,6 +3,11 @@
 //! receives *everything*) is why the paper finds it "not competitive for
 //! any input size" — it exists as a baseline and as RFIS' row/column
 //! primitive.
+//!
+//! All element movement happens inside the [`all_gather_merge`]
+//! collective, whose dimension rounds run on the pooled
+//! [`crate::sim::Exchange`] data plane (each pairwise `xchg` moves both
+//! runs and charges the model in one call).
 
 use crate::config::RunConfig;
 use crate::elements::Elem;

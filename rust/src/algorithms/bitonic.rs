@@ -15,9 +15,19 @@ use crate::sim::Machine;
 use super::{OutputShape, Sorter};
 
 /// Compare-split: keep the lower/upper `keep` elements of two sorted runs.
+#[cfg(test)]
 fn compare_split(mine: &[Elem], theirs: &[Elem], keep_low: bool) -> Vec<Elem> {
+    let mut out = Vec::new();
+    compare_split_into(mine, theirs, keep_low, &mut out);
+    out
+}
+
+/// Compare-split writing into a reusable buffer (cleared first) — the
+/// per-round output vectors cycle through the machine's data-plane pool.
+fn compare_split_into(mine: &[Elem], theirs: &[Elem], keep_low: bool, out: &mut Vec<Elem>) {
     let keep = mine.len();
-    let mut out = Vec::with_capacity(keep);
+    out.clear();
+    out.reserve(keep);
     if keep_low {
         let (mut i, mut j) = (0, 0);
         while out.len() < keep {
@@ -42,7 +52,6 @@ fn compare_split(mine: &[Elem], theirs: &[Elem], keep_low: bool) -> Vec<Elem> {
         }
         out.reverse();
     }
-    out
 }
 
 pub fn sort(
@@ -65,22 +74,32 @@ pub fn sort(
     for i in 0..d {
         for j in (0..=i).rev() {
             let bit = 1usize << j;
-            // exchange whole fragments, keep the proper half
+            // exchange whole fragments through the data plane: each pair
+            // swaps runs wholesale, so after delivery the partner's inbox
+            // holds this PE's old run — no whole-machine snapshot clone
+            let mut ex = mach.exchange();
             for pe in 0..p {
                 let partner = pe ^ bit;
                 if pe < partner {
-                    mach.xchg(pe, partner, data[pe].len(), data[partner].len());
+                    let a = std::mem::take(&mut data[pe]);
+                    let b = std::mem::take(&mut data[partner]);
+                    ex.xchg(pe, partner, a, b);
                 }
             }
-            let snapshot: Vec<Vec<Elem>> = data.clone();
-            for pe in 0..p {
+            let inboxes = ex.deliver(mach);
+            for (pe, slot) in data.iter_mut().enumerate() {
                 let partner = pe ^ bit;
+                let mine = inboxes.single(partner);
+                let theirs = inboxes.single(pe);
                 let ascending = pe & (1 << (i + 1)) == 0;
                 let keep_low = (pe & bit == 0) == ascending;
-                data[pe] = compare_split(&snapshot[pe], &snapshot[partner], keep_low);
+                let mut out = mach.take_buf();
+                compare_split_into(mine, theirs, keep_low, &mut out);
+                *slot = out;
                 mach.work_linear(pe, 2 * m);
                 mach.note_mem(pe, 2 * m, "bitonic compare-split");
             }
+            mach.recycle(inboxes);
         }
     }
     // final intra-PE order is ascending per PE already; ensure ascending

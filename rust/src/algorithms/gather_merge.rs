@@ -3,6 +3,10 @@
 //! PEs that actually hold data pay startups, and the root receives log p
 //! pre-merged runs instead of n messages. Does *not* satisfy the balance
 //! contract — the output lives entirely on PE 0 (§VII (1)).
+//!
+//! All element movement happens inside the [`gather_merge`] collective,
+//! whose binomial rounds run on the pooled [`crate::sim::Exchange`] data
+//! plane (one `send` per tree edge moves the run and charges the model).
 
 use crate::config::RunConfig;
 use crate::elements::Elem;

@@ -107,52 +107,35 @@ fn level(
         .collect();
 
     // --- partition (key-only) and k-way exchange ----------------------
+    // every bucket is posted straight to its target PE: the data plane
+    // coalesces, charges the irregular round, and delivers — no
+    // per-level outgoing/incoming tables
     let q_sub = q / k;
-    let mut outgoing: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
-    let mut msgs: Vec<(usize, usize, usize)> = Vec::new();
+    let mut ex = mach.exchange();
     for r in 0..q {
         let pe = pes[r];
         let local = std::mem::take(&mut data[pe]);
         mach.work_classify(pe, local.len(), k);
-        let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); k];
+        let mut buckets: Vec<Vec<Elem>> = (0..k).map(|_| mach.take_buf()).collect();
         for e in local {
             let b = splitters.partition_point(|&s| s < e.key);
             buckets[b].push(e);
         }
         // bucket b goes to subgroup b, target rank = own rank within sub
-        for (b, bucket) in buckets.iter().enumerate() {
-            if bucket.is_empty() {
-                continue;
-            }
+        for (b, bucket) in buckets.into_iter().enumerate() {
             let target = subgroups[b].pe(r % q_sub);
-            if target != pe {
-                msgs.push((pe, target, bucket.len()));
-            }
-        }
-        outgoing[pe] = buckets;
-    }
-    mach.route_round(&msgs);
-
-    // deliver + merge
-    let mut incoming: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
-    for r in 0..q {
-        let pe = pes[r];
-        for (b, bucket) in std::mem::take(&mut outgoing[pe]).into_iter().enumerate() {
-            if bucket.is_empty() {
-                continue;
-            }
-            let target = subgroups[b].pe(r % q_sub);
-            incoming[target].push(bucket);
+            ex.post(pe, target, bucket);
         }
     }
+    let inboxes = ex.deliver(mach);
     for &pe in &pes {
-        let runs = std::mem::take(&mut incoming[pe]);
-        let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
         let merged = multiway_merge(&refs);
-        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (runs.len().max(2) as f64).log2());
+        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (refs.len().max(2) as f64).log2());
         mach.note_mem(pe, merged.len(), "HykSort k-way exchange");
         data[pe] = merged;
     }
+    mach.recycle(inboxes);
 }
 
 /// [`Sorter`]: HykSort — k-way hypercube quicksort with key-only sample

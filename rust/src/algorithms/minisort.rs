@@ -5,7 +5,9 @@
 //! Our implementation is hypercube quicksort specialised to m = 1 with the
 //! §III-B median reduction (the paper's own fix of Siebert & Wolf's
 //! unbalanced-ternary-tree heuristic) and *with* tie-breaking, so it also
-//! handles the duplicate-heavy instances the original cannot.
+//! handles the duplicate-heavy instances the original cannot. Element
+//! movement (the shuffle permutation round and every exchange level)
+//! inherits RQuick's pooled [`crate::sim::Exchange`] data plane.
 
 use crate::config::RunConfig;
 use crate::elements::Elem;

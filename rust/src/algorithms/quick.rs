@@ -182,38 +182,35 @@ fn exchange_level(
         mach.work(base + r, 2.0 * (a.len().max(2) as f64).log2()); // two binary searches
         cuts.push(cut);
     }
-    // pairwise exchange: low partner collects Ls, high partner collects Rs
-    for r in 0..size {
-        let pr = r ^ bit;
-        if r < pr {
-            let send_r = data[base + r].len() - cuts[r]; // r sends its R
-            let send_pr = cuts[pr]; // partner sends its L
-            mach.xchg(base + r, base + pr, send_r, send_pr);
-        }
-    }
-    // perform the data movement + merges
-    let mut outgoing: Vec<Vec<Elem>> = Vec::with_capacity(size);
+    // pairwise exchange through the data plane: the low partner ships its
+    // R half, the high partner its L half, in one pooled payload each —
+    // charging and movement are the same call
+    let mut ex = mach.exchange();
     for r in 0..size {
         let pe = base + r;
         let keep_low = r & bit == 0;
         let run = &mut data[pe];
+        let mut out = mach.take_buf();
         if keep_low {
-            outgoing.push(run.split_off(cuts[r])); // ship R
+            out.extend_from_slice(&run[cuts[r]..]); // ship R
+            run.truncate(cuts[r]);
         } else {
-            let mut rest = run.split_off(cuts[r]);
-            std::mem::swap(run, &mut rest);
-            outgoing.push(rest); // ship L, keep R
+            out.extend_from_slice(&run[..cuts[r]]); // ship L, keep R
+            let keep = run.len() - cuts[r];
+            run.copy_within(cuts[r].., 0);
+            run.truncate(keep);
         }
+        ex.xchg_leg(pe, base + (r ^ bit), out);
     }
+    let inboxes = ex.deliver(mach);
     for r in 0..size {
-        let pr = r ^ bit;
         let pe = base + r;
-        let incoming = std::mem::take(&mut outgoing[pr]);
-        merge_into(&data[pe], &incoming, merge_buf);
+        merge_into(&data[pe], inboxes.single(pe), merge_buf);
         std::mem::swap(&mut data[pe], merge_buf);
         mach.work_linear(pe, data[pe].len());
         mach.note_mem(pe, data[pe].len(), "quicksort exchange");
     }
+    mach.recycle(inboxes);
 }
 
 /// [`Sorter`] for the hypercube-quicksort family: the robust **RQuick**

@@ -14,16 +14,18 @@
 //!    minimizing imbalance;
 //! 5. **deterministic message assignment (DMA)**: exact target offsets
 //!    from the prefix sums so every receiver gets Θ(k) coalesced
-//!    messages; addresses delivered with an NBX sparse exchange. Without
-//!    DMA (NDMA-AMS), per-(sender,target) messages go out directly and
-//!    adversarial inputs (AllToOne) serialize Ω(min(p, n/p)) receives on
-//!    one PE — Fig. 2c;
+//!    messages; addresses delivered with an NBX sparse exchange, and the
+//!    element payloads really travel in two hops through the
+//!    [`crate::sim::Exchange`] data plane (sender → subgroup entry PE →
+//!    final target, forwarding on the run tag). Without DMA (NDMA-AMS),
+//!    per-(sender,target) messages go out directly and adversarial inputs
+//!    (AllToOne) serialize Ω(min(p, n/p)) receives on one PE — Fig. 2c;
 //! 6. receivers merge their runs; recurse into the subgroups.
 
 use crate::config::RunConfig;
 use crate::elements::{multiway_merge, Elem};
 use crate::localsort::{sort_all, SortBackend};
-use crate::partition::{partition, pick_splitters, SplitterTree};
+use crate::partition::{partition_pooled, pick_splitters, SplitterTree};
 use crate::rng::Rng;
 use crate::sim::{all_gather_merge, prefix_sum_vec, Cube, Machine};
 
@@ -153,7 +155,8 @@ fn level(
     for &pe in &pes {
         let local = std::mem::take(&mut data[pe]);
         mach.work_classify(pe, local.len(), nb + 1);
-        let parts = partition(&local, &tree, ac.tie_break);
+        let parts = partition_pooled(mach, &local, &tree, ac.tie_break);
+        mach.recycle_buf(local);
         counts.push(parts.iter().map(Vec::len).collect());
         buckets[pe] = parts;
     }
@@ -239,25 +242,16 @@ fn level(
         }
     }
 
-    // --- coalesce: one wire message per (sender, target) pair -----------
-    // a sender's buckets headed to the same target PE are contiguous in
-    // the subgroup order, so the real implementation ships them as one
-    // message; the per-bucket `msgs` list is kept only for data delivery.
-    let mut wire: std::collections::HashMap<(usize, usize), usize> =
-        std::collections::HashMap::new();
+    // --- DMA decision (fan-in of the direct wire pattern) ---------------
+    // one wire message per (sender, target) pair: a sender's buckets
+    // headed to the same target PE are contiguous in the subgroup order,
+    // so the data plane coalesces them into one message.
+    let mut pairs: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    let mut fan_in: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
     for m in &msgs {
-        if m.from_pe != m.to_pe {
-            *wire.entry((m.from_pe, m.to_pe)).or_insert(0) += m.end - m.start;
+        if m.from_pe != m.to_pe && pairs.insert((m.from_pe, m.to_pe)) {
+            *fan_in.entry(m.to_pe).or_insert(0usize) += 1;
         }
-    }
-    let mut wire: Vec<(usize, usize, usize)> =
-        wire.into_iter().map(|((f, t), l)| (f, t, l)).collect();
-    wire.sort_unstable();
-
-    // --- DMA decision ---------------------------------------------------
-    let mut fan_in = std::collections::HashMap::new();
-    for &(_, to, _) in &wire {
-        *fan_in.entry(to).or_insert(0usize) += 1;
     }
     let max_fan_in = fan_in.values().copied().max().unwrap_or(0);
     let use_dma = match ac.dma {
@@ -270,8 +264,8 @@ fn level(
         }
     };
 
-    // --- price the exchange ---------------------------------------------
-    if use_dma {
+    // --- the exchange: charging and movement are the same calls ----------
+    let inboxes = if use_dma {
         // Deterministic message assignment (App. G): address information is
         // routed *to the target group*, which computes exact addresses and
         // replies — O(α·log q + α·k) per PE (Hoefler et al.'s NBX supplies
@@ -283,64 +277,69 @@ fn level(
             mach.work(pe, addr_cost);
         }
         mach.barrier(&pes);
-        // With addresses known, senders aggregate per target subgroup:
-        // one message to a subgroup entry PE (Θ(k) sends per PE), then one
-        // intra-subgroup scatter round to the final targets (coalesced) —
-        // every PE sends and receives Θ(k) messages, at the price of the
-        // group-internal second hop.
-        let mut per_sub: std::collections::HashMap<(usize, usize), usize> =
-            std::collections::HashMap::new();
-        for m in &msgs {
-            let g = assignment[m.bucket];
-            *per_sub.entry((m.from_pe, g)).or_insert(0) += m.end - m.start;
-        }
-        let mut round1: Vec<(usize, usize, usize)> = Vec::new();
-        for (&(from, g), &len) in &per_sub {
+        // With addresses known, senders aggregate per target subgroup and
+        // the data really travels in two hops: one coalesced message to a
+        // subgroup entry PE (Θ(k) sends per PE), then one intra-subgroup
+        // scatter round to the final targets. Runs are tagged with their
+        // final target so the entry PE can forward them — every PE sends
+        // and receives Θ(k) messages, at the price of the group-internal
+        // second hop.
+        let mut ex = mach.exchange();
+        let mut i = 0usize;
+        while i < msgs.len() {
+            // msgs are sender-major with nondecreasing bucket, so the
+            // (sender, subgroup) aggregates are contiguous
+            let from = msgs[i].from_pe;
+            let g = assignment[msgs[i].bucket];
             let entry = subgroups[g].pe(group.rank(from) % q_sub);
-            if entry != from {
-                round1.push((from, entry, len));
+            let mut total = 0usize;
+            while i < msgs.len() && msgs[i].from_pe == from && assignment[msgs[i].bucket] == g {
+                let m = &msgs[i];
+                let mut run = mach.take_buf();
+                run.extend_from_slice(&buckets[m.from_pe][m.bucket][m.start..m.end]);
+                total += run.len();
+                ex.post_tagged(from, entry, m.to_pe as u64, run);
+                i += 1;
             }
-            mach.note_mem(entry, len, "DMA subgroup entry");
+            mach.note_mem(entry, total, "DMA subgroup entry");
         }
-        round1.sort_unstable();
-        mach.route_round(&round1);
-        // second hop: entry PE → final target (coalesced per pair)
-        let mut round2: std::collections::HashMap<(usize, usize), usize> =
-            std::collections::HashMap::new();
-        for m in &msgs {
-            let g = assignment[m.bucket];
-            let entry = subgroups[g].pe(group.rank(m.from_pe) % q_sub);
-            if entry != m.to_pe {
-                *round2.entry((entry, m.to_pe)).or_insert(0) += m.end - m.start;
+        let mut hop1 = ex.deliver(mach);
+        let mut ex = mach.exchange();
+        for &pe in &pes {
+            for (tag, run) in hop1.take(pe) {
+                ex.post(pe, tag as usize, run);
             }
         }
-        let mut round2: Vec<(usize, usize, usize)> =
-            round2.into_iter().map(|((f, t), l)| (f, t, l)).collect();
-        round2.sort_unstable();
-        mach.route_round(&round2);
+        let inboxes = ex.deliver(mach);
+        mach.recycle(hop1);
+        inboxes
     } else {
         // direct per-(sender, target) messages: adversarial inputs
         // (AllToOne) serialize Ω(min(p, n/p)) receives on one PE
-        mach.route_round(&wire);
-    }
-
-    // --- actually move the data ------------------------------------------
-    let mut incoming: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
-    for m in &msgs {
-        let slice = buckets[m.from_pe][m.bucket][m.start..m.end].to_vec();
-        incoming[m.to_pe].push(slice);
+        let mut ex = mach.exchange();
+        for m in &msgs {
+            let mut run = mach.take_buf();
+            run.extend_from_slice(&buckets[m.from_pe][m.bucket][m.start..m.end]);
+            ex.post(m.from_pe, m.to_pe, run);
+        }
+        ex.deliver(mach)
+    };
+    for &pe in &pes {
+        for bucket in std::mem::take(&mut buckets[pe]) {
+            mach.recycle_buf(bucket);
+        }
     }
     for &pe in &pes {
-        let runs = std::mem::take(&mut incoming[pe]);
-        let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
         let merged = multiway_merge(&refs);
         mach.work(
             pe,
-            cfg.cost.cmp * merged.len() as f64 * (runs.len().max(2) as f64).log2(),
+            cfg.cost.cmp * merged.len() as f64 * (refs.len().max(2) as f64).log2(),
         );
         mach.note_mem(pe, merged.len(), "AMS data exchange");
         data[pe] = merged;
     }
+    mach.recycle(inboxes);
 
     subgroups
 }

@@ -168,33 +168,45 @@ pub fn sort(
         }
         data[pe].clear();
     }
-    // hypercube bit-fixing over the rows of each column
+    // hypercube bit-fixing over the rows of each column: misrouted
+    // elements travel through the data plane as runs tagged with their
+    // destination row (the paper's address bits — zero extra words)
     let row_dims = rows.trailing_zeros();
     for j in (0..row_dims).rev() {
         let bit = 1usize << j;
         for c in 0..cols {
-            // pairwise exchange of misrouted elements
-            let mut outgoing: Vec<Vec<(Elem, usize)>> = vec![Vec::new(); rows];
+            let mut ex = mach.exchange();
             for r in 0..rows {
                 let pe = r * cols + c;
-                let (stay, go): (Vec<_>, Vec<_>) =
+                let partner = (r ^ bit) * cols + c;
+                // lock-step round: the pair pays its α even when neither
+                // side has misrouted elements (as the eager charges did)
+                ex.xchg_touch(pe, partner);
+                let (stay, mut go): (Vec<_>, Vec<_>) =
                     std::mem::take(&mut in_flight[pe]).into_iter().partition(|(_, d)| d & bit == r & bit);
                 in_flight[pe] = stay;
-                outgoing[r] = go;
-            }
-            for r in 0..rows {
-                let pr = r ^ bit;
-                if r < pr {
-                    mach.xchg(r * cols + c, pr * cols + c, outgoing[r].len(), outgoing[pr].len());
+                // one tagged run per destination row
+                go.sort_unstable_by_key(|&(_, d)| d);
+                let mut i = 0;
+                while i < go.len() {
+                    let d = go[i].1;
+                    let mut run = mach.take_buf();
+                    while i < go.len() && go[i].1 == d {
+                        run.push(go[i].0);
+                        i += 1;
+                    }
+                    ex.xchg_leg_tagged(pe, partner, d as u64, run);
                 }
             }
+            let inboxes = ex.deliver(mach);
             for r in 0..rows {
-                let pr = r ^ bit;
-                let incoming = std::mem::take(&mut outgoing[pr]);
                 let pe = r * cols + c;
-                in_flight[pe].extend(incoming);
+                for (tag, run) in inboxes.runs(pe) {
+                    in_flight[pe].extend(run.iter().map(|&e| (e, *tag as usize)));
+                }
                 mach.note_mem(pe, in_flight[pe].len(), "RFIS delivery");
             }
+            mach.recycle(inboxes);
         }
     }
     for pe in 0..p {

@@ -13,7 +13,7 @@ use crate::config::RunConfig;
 use crate::elements::{multiway_merge, Elem, Key};
 use crate::localsort::{sort_all, SortBackend};
 use crate::rng::Rng;
-use crate::sim::{alltoallv, bcast_cost, Cube, Machine};
+use crate::sim::{bcast_cost, Cube, Machine};
 
 use super::{OutputShape, Sorter};
 
@@ -75,30 +75,35 @@ pub fn sort(
         bcast_cost(mach, &pes, 0, p - 1);
     }
 
-    // --- partition + direct delivery ---------------------------------
-    let mut send: Vec<Vec<Vec<Elem>>> = Vec::with_capacity(p);
+    // --- partition + direct delivery through the data plane -----------
+    let mut ex = mach.exchange();
     for pe in 0..p {
         let local = std::mem::take(&mut data[pe]);
         mach.work_classify(pe, local.len(), p);
-        let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); p];
+        let mut buckets: Vec<Vec<Elem>> = (0..p).map(|_| mach.take_buf()).collect();
         for e in local {
             // nonrobust: key-only binary search (duplicates pile up)
             let b = splitters.partition_point(|&s| s < e.key);
             buckets[b].push(e);
         }
-        send.push(buckets);
+        for (t, bucket) in buckets.into_iter().enumerate() {
+            ex.post(pe, t, bucket);
+        }
     }
-    let recv = alltoallv(mach, &pes, send);
+    let inboxes = ex.deliver(mach);
+    for &pe in &pes {
+        mach.note_mem(pe, inboxes.total(pe), "alltoallv");
+    }
 
     // --- local merge of received runs --------------------------------
-    for (r, runs) in recv.into_iter().enumerate() {
-        let pe = pes[r];
-        let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+    for &pe in &pes {
+        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
         let merged = multiway_merge(&refs);
         mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
         mach.note_mem(pe, merged.len(), "sample sort receive");
         data[pe] = merged;
     }
+    mach.recycle(inboxes);
 }
 
 /// [`Sorter`] for single-level p-way sample sort: **SSort** charges the

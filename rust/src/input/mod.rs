@@ -1,7 +1,8 @@
-//! Input instance generators — the ten distributions of the paper's
-//! evaluation (§VII, Appendix J): the seven Helman et al. instances plus
-//! Mirrored, AllToOne, and Reverse, each designed to break a specific
-//! nonrobust mechanism.
+//! Input instance generators — the eleven distributions of the paper's
+//! evaluation (§VII, Appendix J): the eight Helman et al. instances
+//! (Uniform, Gaussian, BucketSorted, DeterDupl, RandDupl, Zero, g-Group,
+//! Staggered) plus Mirrored, AllToOne, and Reverse, each designed to
+//! break a specific nonrobust mechanism.
 //!
 //! Keys are drawn from `[0, 2^32)` like the paper's 32-bit key ranges;
 //! every element carries a unique origin id (never read by nonrobust
@@ -84,11 +85,22 @@ impl Distribution {
         }
     }
 
+    /// Resolve a name, insensitive to ASCII case and to `-` separators
+    /// (`"g-group"`, `"ggroup"`, and `"G-Group"` all parse). Allocation
+    /// free: candidates are compared byte-wise with dashes skipped.
     pub fn parse(s: &str) -> Option<Distribution> {
-        Self::ALL
-            .iter()
-            .copied()
-            .find(|d| d.name().eq_ignore_ascii_case(s) || d.name().replace('-', "").eq_ignore_ascii_case(&s.replace('-', "")))
+        fn eq_loose(a: &str, b: &str) -> bool {
+            let mut ai = a.bytes().filter(|&c| c != b'-');
+            let mut bi = b.bytes().filter(|&c| c != b'-');
+            loop {
+                match (ai.next(), bi.next()) {
+                    (None, None) => return true,
+                    (Some(x), Some(y)) if x.eq_ignore_ascii_case(&y) => {}
+                    _ => return false,
+                }
+            }
+        }
+        Self::ALL.iter().copied().find(|d| eq_loose(d.name(), s))
     }
 }
 
@@ -330,5 +342,21 @@ mod tests {
         assert_eq!(Distribution::parse("g-group"), Some(Distribution::GGroup));
         assert_eq!(Distribution::parse("ggroup"), Some(Distribution::GGroup));
         assert_eq!(Distribution::parse("nope"), None);
+    }
+
+    /// Every name round-trips through `parse`, insensitive to case and to
+    /// `-` separators; near-misses (prefixes, extensions) are rejected.
+    #[test]
+    fn parse_round_trips_every_distribution() {
+        assert_eq!(Distribution::ALL.len(), 11);
+        for d in Distribution::ALL {
+            let name = d.name();
+            assert_eq!(Distribution::parse(name), Some(d), "{name}");
+            assert_eq!(Distribution::parse(&name.to_lowercase()), Some(d), "{name} lower");
+            assert_eq!(Distribution::parse(&name.to_uppercase()), Some(d), "{name} upper");
+            assert_eq!(Distribution::parse(&name.replace('-', "")), Some(d), "{name} no dash");
+            assert_eq!(Distribution::parse(&name[..name.len() - 1]), None, "{name} prefix");
+            assert_eq!(Distribution::parse(&format!("{name}x")), None, "{name} extended");
+        }
     }
 }

@@ -106,6 +106,35 @@ impl SplitterTree {
 /// robust (App. G) or nonrobust classifier. Preserves input order inside
 /// each bucket (stable).
 pub fn partition(data: &[Elem], tree: &SplitterTree, tie_break: bool) -> Vec<Vec<Elem>> {
+    partition_with(data, tree, tie_break, Vec::with_capacity)
+}
+
+/// [`partition`] with bucket vectors drawn from the machine's data-plane
+/// buffer pool ([`crate::sim::Machine::take_buf`]) — the hot-path variant
+/// for algorithms that ship the buckets through an
+/// [`crate::sim::Exchange`] round (RAMS); the buffers cycle back to the
+/// pool when the delivered mail is recycled, so steady-state levels
+/// allocate nothing. Bucket contents and order are identical to
+/// [`partition`].
+pub fn partition_pooled(
+    mach: &mut crate::sim::Machine,
+    data: &[Elem],
+    tree: &SplitterTree,
+    tie_break: bool,
+) -> Vec<Vec<Elem>> {
+    partition_with(data, tree, tie_break, |c| {
+        let mut buf = mach.take_buf();
+        buf.reserve(c);
+        buf
+    })
+}
+
+fn partition_with(
+    data: &[Elem],
+    tree: &SplitterTree,
+    tie_break: bool,
+    mut bucket_buf: impl FnMut(usize) -> Vec<Elem>,
+) -> Vec<Vec<Elem>> {
     let nb = tree.buckets();
     // two passes: count then place — cache-friendlier than push-per-bucket
     let mut counts = vec![0usize; nb];
@@ -123,7 +152,7 @@ pub fn partition(data: &[Elem], tree: &SplitterTree, tie_break: bool) -> Vec<Vec
             counts[b] += 1;
         }
     }
-    let mut out: Vec<Vec<Elem>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    let mut out: Vec<Vec<Elem>> = counts.iter().map(|&c| bucket_buf(c)).collect();
     for (e, &b) in data.iter().zip(&labels) {
         out[b as usize].push(*e);
     }

@@ -24,8 +24,10 @@ pub fn hypercube_shuffle(
     let base = cube.base();
     for j in (0..cube.dim).rev() {
         let bit = 1usize << j;
-        // each member splits locally into keep/send halves
-        let mut outgoing: Vec<Vec<Elem>> = vec![Vec::new(); size];
+        // each member splits locally into keep/send halves; the send half
+        // goes straight into the exchange as one pooled payload — no
+        // per-dimension outgoing table
+        let mut ex = mach.exchange();
         for r in 0..size {
             let pe = base + r;
             let local = std::mem::take(&mut data[pe]);
@@ -42,23 +44,19 @@ pub fn hypercube_shuffle(
                 let j = i + rng.below((v.len() - i) as u64) as usize;
                 v.swap(i, j);
             }
-            let send = v.split_off(cut);
+            let mut send = mach.take_buf();
+            send.extend_from_slice(&v[cut..]);
+            v.truncate(cut);
             data[pe] = v;
-            outgoing[r] = send;
+            ex.xchg_leg(pe, base + (r ^ bit), send);
         }
-        // pairwise exchange along dimension j — one batched superstep
-        // (disjoint pairs, so settlement is exact; see Machine::settle)
-        mach.begin_superstep();
-        for (r, pr) in crate::sim::rank_pairs(size, j) {
-            mach.xchg(base + r, base + pr, outgoing[r].len(), outgoing[pr].len());
-        }
-        mach.settle();
+        let inboxes = ex.deliver(mach);
         for r in 0..size {
-            let pr = r ^ bit;
-            let incoming = std::mem::take(&mut outgoing[pr]);
-            data[base + r].extend(incoming);
-            mach.note_mem(base + r, data[base + r].len(), "hypercube shuffle");
+            let pe = base + r;
+            data[pe].extend_from_slice(inboxes.single(pe));
+            mach.note_mem(pe, data[pe].len(), "hypercube shuffle");
         }
+        mach.recycle(inboxes);
     }
 }
 
@@ -73,7 +71,9 @@ pub fn direct_shuffle(
 ) {
     let size = cube.size();
     let base = cube.base();
-    let mut buckets: Vec<Vec<Vec<Elem>>> = (0..size).map(|_| vec![Vec::new(); size]).collect();
+    let mut buckets: Vec<Vec<Vec<Elem>>> = (0..size)
+        .map(|_| (0..size).map(|_| mach.take_buf()).collect())
+        .collect();
     for r in 0..size {
         let pe = base + r;
         for e in std::mem::take(&mut data[pe]) {
@@ -83,10 +83,12 @@ pub fn direct_shuffle(
         mach.work_linear(pe, buckets[r].iter().map(Vec::len).sum());
     }
     let recv = crate::sim::alltoallv(mach, &cube.pe_vec(), buckets);
-    for r in 0..size {
+    for (r, runs) in recv.into_iter().enumerate() {
         let pe = base + r;
-        let mut v: Vec<Elem> = recv[r].iter().flatten().copied().collect();
-        data[pe].append(&mut v);
+        for run in runs {
+            data[pe].extend_from_slice(&run);
+            mach.recycle_buf(run);
+        }
         mach.note_mem(pe, data[pe].len(), "direct shuffle");
     }
 }

@@ -10,11 +10,16 @@
 //! really combine the values — the simulator never "fakes" a result, it
 //! only *prices* it.
 //!
-//! Every dimension round is priced through the batched superstep path
-//! ([`Machine::begin_superstep`]/[`Machine::settle`]): the round's pairwise
-//! exchanges (from [`rank_pairs`]) are buffered and settled in one pass,
-//! which is bit-identical to eager per-call charging because the pairs of
-//! one dimension are disjoint — see the exactness contract on
+//! The **data-moving** collectives ([`all_gather_merge`], [`gather_merge`],
+//! [`alltoallv`]) move their payloads through the pooled
+//! [`crate::sim::Exchange`] data plane: each dimension round posts the
+//! element payloads and the delivery itself charges the cost model, so the
+//! charged and moved volumes agree by construction. The **scalar**
+//! collectives (all-reduce, prefix sums, [`bcast_cost`]) move metadata
+//! words, not elements, and stay on the cost-only batched superstep path
+//! ([`Machine::begin_superstep`]/[`Machine::settle`]); both batchings are
+//! bit-identical to eager per-call charging because the pairs of one
+//! dimension are disjoint — see the exactness contract on
 //! [`Machine::begin_superstep`].
 
 use crate::elements::{merge, Elem};
@@ -68,29 +73,31 @@ pub fn all_gather_merge(
 
     for j in 0..dim {
         let bit = 1usize << j;
-        // move the current state out: each member reads its own old run
-        // and its partner's — no cloning of the payload (§Perf)
-        let old: Vec<Vec<Elem>> = std::mem::take(&mut full);
-        mach.begin_superstep();
+        // every member's state moves through the exchange: after delivery
+        // the partner's inbox holds this member's old run, so both old
+        // runs are read back without cloning the payload (§Perf)
+        let mut ex = mach.exchange();
         for (r, pr) in rank_pairs(size, j) {
-            mach.xchg(pes[r], pes[pr], old[r].len(), old[pr].len());
+            let a = std::mem::take(&mut full[r]);
+            let b = std::mem::take(&mut full[pr]);
+            ex.xchg(pes[r], pes[pr], a, b);
         }
-        mach.settle();
-        full = (0..size)
-            .map(|r| {
-                let pr = r ^ bit;
-                let incoming = &old[pr];
-                if pr < r {
-                    runs[r].left = merge(&runs[r].left, incoming);
-                } else {
-                    runs[r].right = merge(&runs[r].right, incoming);
-                }
-                let merged = merge(&old[r], incoming);
-                mach.work_linear(pes[r], merged.len());
-                mach.note_mem(pes[r], merged.len(), "all-gather-merge");
-                merged
-            })
-            .collect();
+        let inboxes = ex.deliver(mach);
+        for (r, slot) in full.iter_mut().enumerate() {
+            let pr = r ^ bit;
+            let incoming = inboxes.single(pes[r]);
+            let own = inboxes.single(pes[pr]);
+            if pr < r {
+                runs[r].left = merge(&runs[r].left, incoming);
+            } else {
+                runs[r].right = merge(&runs[r].right, incoming);
+            }
+            let merged = merge(own, incoming);
+            mach.work_linear(pes[r], merged.len());
+            mach.note_mem(pes[r], merged.len(), "all-gather-merge");
+            *slot = merged;
+        }
+        mach.recycle(inboxes);
     }
     runs
 }
@@ -102,30 +109,30 @@ pub fn gather_merge(mach: &mut Machine, pes: &[usize], local: &[Vec<Elem>]) -> V
     let size = pes.len();
     let mut cur: Vec<Option<Vec<Elem>>> =
         pes.iter().map(|&pe| Some(local[pe].clone())).collect();
+    let mut dsts: Vec<usize> = Vec::new();
     for j in 0..dim {
         let bit = 1usize << j;
-        // senders this round: lowest set bit of r is `bit`; collect the
-        // round's transfers, price them as one batched superstep, merge after
-        let mut moves: Vec<(usize, usize, Vec<Elem>)> = Vec::new();
+        // senders this round: lowest set bit of r is `bit`; their runs
+        // travel through the exchange, receivers merge after delivery
+        let mut ex = mach.exchange();
+        dsts.clear();
         for r in 0..size {
             if r & bit != 0 && r & (bit - 1) == 0 {
                 let dst = r & !bit;
                 let data = cur[r].take().expect("sender already gave data away");
-                moves.push((r, dst, data));
+                ex.send(pes[r], pes[dst], data);
+                dsts.push(dst);
             }
         }
-        mach.begin_superstep();
-        for (r, dst, data) in &moves {
-            mach.send(pes[*r], pes[*dst], data.len());
-        }
-        mach.settle();
-        for (_, dst, data) in moves {
+        let inboxes = ex.deliver(mach);
+        for &dst in &dsts {
             let acc = cur[dst].as_mut().expect("receiver must hold data");
-            let merged = merge(acc, &data);
+            let merged = merge(acc, inboxes.single(pes[dst]));
             mach.work_linear(pes[dst], merged.len());
             mach.note_mem(pes[dst], merged.len(), "gather-merge");
             *acc = merged;
         }
+        mach.recycle(inboxes);
     }
     cur[0].take().expect("root holds the result")
 }
@@ -295,26 +302,26 @@ pub fn alltoallv(
 ) -> Vec<Vec<Vec<Elem>>> {
     let size = pes.len();
     debug_assert_eq!(send.len(), size);
-    let mut msgs = Vec::new();
-    for (r, targets) in send.iter().enumerate() {
-        debug_assert_eq!(targets.len(), size);
-        for (t, data) in targets.iter().enumerate() {
-            if t != r && !data.is_empty() {
-                msgs.push((pes[r], pes[t], data.len()));
-            }
-        }
-    }
-    mach.route_round(&msgs);
-    let mut recv: Vec<Vec<Vec<Elem>>> = (0..size).map(|_| vec![Vec::new(); size]).collect();
+    let mut ex = mach.exchange();
     for (r, targets) in send.into_iter().enumerate() {
+        debug_assert_eq!(targets.len(), size);
         for (t, data) in targets.into_iter().enumerate() {
-            recv[t][r] = data;
+            // sender-rank tags rebuild the transposed table below; empty
+            // payloads are skipped (never a wire message), self-posts are
+            // free local moves — the historical route-round semantics
+            ex.post_tagged(pes[r], pes[t], r as u64, data);
         }
     }
+    let mut inboxes = ex.deliver(mach);
+    let mut recv: Vec<Vec<Vec<Elem>>> = (0..size).map(|_| vec![Vec::new(); size]).collect();
     for t in 0..size {
+        for (tag, payload) in inboxes.take(pes[t]) {
+            recv[t][tag as usize] = payload;
+        }
         let total: usize = recv[t].iter().map(|v| v.len()).sum();
         mach.note_mem(pes[t], total, "alltoallv");
     }
+    mach.recycle(inboxes);
     recv
 }
 

@@ -1,0 +1,647 @@
+//! The pooled **Exchange** data plane: typed element movement that charges
+//! the cost model from the same call.
+//!
+//! Before this layer existed, every communication step lived twice — once
+//! as a cost charge on [`Machine`] (`xchg`/`send`/`route_round`) and once
+//! as hand-rolled `Vec<Vec<Elem>>` payload juggling inside each algorithm.
+//! The paper's robustness results hinge on the *charged* volumes matching
+//! the *moved* volumes (that is what DMA and tie-breaking bound — §III,
+//! Fig. 2), yet nothing enforced that correspondence, and the duplicated
+//! bookkeeping was the dominant allocation churn on the simulator's hot
+//! path.
+//!
+//! An [`Exchange`] is a one-round mailbox: algorithms obtain one from
+//! [`Machine::exchange`], post element payloads with [`Exchange::xchg`] /
+//! [`Exchange::xchg_leg`] / [`Exchange::send`] / [`Exchange::post`], and
+//! close the round with [`Exchange::deliver`], which
+//!
+//! 1. charges the machine — pairwise ops in call order (exactly the eager
+//!    `Machine::xchg`/`Machine::send` sequence every converted call site
+//!    used to issue), then all routed posts as **one** irregular
+//!    h-relation, coalesced per `(from, to)` pair and charged in sorted
+//!    `(from, to)` order (exactly the sorted message list the call sites
+//!    used to hand to `Machine::route_round`);
+//! 2. moves every posted payload into per-PE inboxes ([`Inboxes`]),
+//!    preserving post order per receiver;
+//! 3. `debug_assert!`s that the element count charged to the cost model
+//!    equals the element count delivered remotely — the charged == moved
+//!    invariant. Both counts also accumulate on the machine
+//!    ([`Machine::exchange_charged`] / [`Machine::exchange_moved`]) so
+//!    tests can check the invariant machine-wide across a whole run.
+//!    The invariant guards *plane-internal* consistency (every payload
+//!    that moves through a mailbox is charged exactly once, and nothing
+//!    charged fails to arrive); an algorithm that bypasses the plane
+//!    entirely never touches the counters, which is why the test suite
+//!    additionally asserts that every built-in sorter records *nonzero*
+//!    plane traffic (`rust/tests/exchange_invariant.rs`) and pins the
+//!    exact charge sequences against pre-refactor oracles
+//!    (`rust/tests/exchange_equivalence.rs`).
+//!
+//! All staging (op lists, the posted-run arena, pair slots, the route
+//! coalescing map) and all mailbox buffers are owned by the [`Machine`]
+//! and reused across rounds — extending the `Machine::reset` scratch-reuse
+//! story: after warmup a dimension round allocates nothing. Algorithms
+//! building outgoing payloads draw reusable element buffers from the same
+//! pool with [`Machine::take_buf`] and return delivered mail with
+//! [`Machine::recycle`].
+//!
+//! # Charging semantics (identical to the raw machine API)
+//!
+//! * **Pairwise** ([`Exchange::xchg`], [`Exchange::xchg_leg`],
+//!   [`Exchange::xchg_touch`]): the telephone model — both partners finish
+//!   at `max(c_i, c_j) + α + β·len`. A pair is charged once per round even
+//!   if both directions are empty (lock-step hypercube rounds pay the
+//!   startup regardless). At most one pairwise op per PE per round (the
+//!   disjointness contract of one hypercube dimension).
+//! * **One-way** ([`Exchange::send`]): sender busy `α + β·l`, receiver
+//!   resumes at the arrival — always charged, even for an empty payload
+//!   (binomial-tree rounds send headers regardless).
+//! * **Routed** ([`Exchange::post`]): buffered into the round's combined
+//!   h-relation. Posts to *self* are local moves (delivered, never
+//!   charged); empty payloads are skipped entirely (no message, no
+//!   delivery) — matching the historical `route_round` call sites, which
+//!   never enqueued empty messages.
+//!
+//! Scalar/metadata traffic (pivot windows, splitter broadcasts, histogram
+//! reductions) moves no elements and stays on the raw
+//! `Machine::xchg`/`send`/`route_round` API — the invariant deliberately
+//! covers element payloads only.
+
+use std::collections::HashMap;
+
+use crate::elements::Elem;
+use crate::sim::Machine;
+
+/// One delivered payload run: `(tag, elements)`. Tags are opaque to the
+/// data plane; algorithms use them to address multi-hop traffic (RAMS'
+/// deterministic message assignment forwards on the tag) or to carry
+/// per-run metadata (RFIS tags runs with the destination row). Plain
+/// consumers post with tag 0 and ignore it.
+pub type Run = (u64, Vec<Elem>);
+
+/// A buffered pairwise (`xchg`/`send`) operation of an open exchange.
+#[derive(Clone, Debug)]
+struct PairOp {
+    /// First-leg direction `i → j` (the charge is issued as
+    /// `Machine::xchg(i, j, len_ij, len_ji)`, matching the historical
+    /// low-rank-first call sites).
+    i: usize,
+    j: usize,
+    len_ij: usize,
+    len_ji: usize,
+    is_send: bool,
+}
+
+/// One payload run in flight, in post order.
+#[derive(Clone, Debug)]
+struct PostedRun {
+    dest: usize,
+    tag: u64,
+    /// Whether this run's words were charged to the cost model (false for
+    /// local `post`s from a PE to itself).
+    charged: bool,
+    payload: Vec<Elem>,
+}
+
+/// Machine-owned staging + pools for the data plane (all reused across
+/// rounds; see the module docs).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct PlanePool {
+    /// Spare cleared element buffers ([`Machine::take_buf`]).
+    bufs: Vec<Vec<Elem>>,
+    /// Spare per-PE inbox tables (slots empty).
+    tables: Vec<Vec<Vec<Run>>>,
+    /// Staging for the next [`Machine::exchange`] round.
+    ops: Vec<PairOp>,
+    posted: Vec<PostedRun>,
+    /// Per-PE pairwise-op slot: op index + 1, 0 = none. Zeroed outside an
+    /// open exchange (deliver clears exactly the slots it dirtied).
+    pair_slot: Vec<u32>,
+    /// Route coalescing: `(from, to)` → index into `route`.
+    route_idx: HashMap<(usize, usize), u32>,
+    /// Coalesced routed messages `(from, to, words)` in first-post order.
+    route: Vec<(usize, usize, usize)>,
+    /// Scratch for the sorted charged message list handed to
+    /// `route_round`.
+    route_sorted: Vec<(usize, usize, usize)>,
+    /// Scratch list for empty payloads awaiting return to `bufs`.
+    skipped: Vec<Vec<Elem>>,
+}
+
+impl PlanePool {
+    pub(crate) fn take_buf(&mut self) -> Vec<Elem> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    pub(crate) fn recycle_buf(&mut self, mut buf: Vec<Elem>) {
+        buf.clear();
+        self.bufs.push(buf);
+    }
+
+    /// Defensive clear between runs. Staging handed back by
+    /// [`Exchange::deliver`] is always drained (an Exchange abandoned
+    /// *without* delivering drops its staging with itself), so these loops
+    /// normally find nothing — they exist so no future partial-return
+    /// path can leak one run's state into the next.
+    pub(crate) fn reset(&mut self) {
+        self.ops.clear();
+        while let Some(run) = self.posted.pop() {
+            self.recycle_buf(run.payload);
+        }
+        while let Some(buf) = self.skipped.pop() {
+            self.recycle_buf(buf);
+        }
+        for slot in self.pair_slot.iter_mut() {
+            *slot = 0;
+        }
+        self.route_idx.clear();
+        self.route.clear();
+        self.route_sorted.clear();
+    }
+}
+
+/// An open payload round on one [`Machine`] — see the module docs.
+///
+/// Obtained from [`Machine::exchange`]; does **not** borrow the machine,
+/// so local-work charges (`Machine::work_*`, `Machine::note_mem`) freely
+/// interleave with posting, exactly like the historical call sites.
+/// Consumed by [`Exchange::deliver`].
+#[derive(Debug)]
+pub struct Exchange {
+    p: usize,
+    /// Identity of the machine that opened this round — `deliver` on a
+    /// different machine would charge the wrong clocks and migrate pooled
+    /// staging between machines, so it is asserted against.
+    mach_id: u64,
+    ops: Vec<PairOp>,
+    posted: Vec<PostedRun>,
+    pair_slot: Vec<u32>,
+    route_idx: HashMap<(usize, usize), u32>,
+    route: Vec<(usize, usize, usize)>,
+    route_sorted: Vec<(usize, usize, usize)>,
+    /// Payloads skipped as empty routed posts — returned to the pool at
+    /// delivery so callers can post pool buffers unconditionally.
+    skipped: Vec<Vec<Elem>>,
+}
+
+impl Exchange {
+    fn op_slot(&mut self, a: usize, b: usize, is_send: bool) -> usize {
+        debug_assert!(a != b, "exchange op endpoints must differ ({a})");
+        debug_assert!(a < self.p && b < self.p);
+        let slot = self.pair_slot[a];
+        if slot != 0 {
+            let idx = slot as usize - 1;
+            let op = &self.ops[idx];
+            debug_assert!(
+                !op.is_send && !is_send && (op.i == a && op.j == b || op.i == b && op.j == a),
+                "a PE may appear in at most one pairwise op per round \
+                 (PE {a} reused)"
+            );
+            return idx;
+        }
+        debug_assert!(
+            self.pair_slot[b] == 0,
+            "a PE may appear in at most one pairwise op per round (PE {b} reused)"
+        );
+        let idx = self.ops.len();
+        self.ops.push(PairOp { i: a, j: b, len_ij: 0, len_ji: 0, is_send });
+        self.pair_slot[a] = idx as u32 + 1;
+        self.pair_slot[b] = idx as u32 + 1;
+        idx
+    }
+
+    /// Ensure the pairwise op `(i, j)` exists with zero-length legs — the
+    /// lock-step rounds that pay α even when neither side has data
+    /// (RFIS' in-column delivery touches every pair every round).
+    pub fn xchg_touch(&mut self, i: usize, j: usize) {
+        self.op_slot(i, j, false);
+    }
+
+    /// One leg of a pairwise exchange: `payload` travels `from → to`.
+    /// The partner leg (posted separately, possibly empty) completes the
+    /// op; the pair is charged once as `Machine::xchg` at delivery, in
+    /// first-leg call order.
+    pub fn xchg_leg(&mut self, from: usize, to: usize, payload: Vec<Elem>) {
+        self.xchg_leg_tagged(from, to, 0, payload);
+    }
+
+    /// [`Exchange::xchg_leg`] with an explicit run tag. Repeated legs in
+    /// the same direction accumulate (charged as their total length,
+    /// delivered as separate runs in post order).
+    pub fn xchg_leg_tagged(&mut self, from: usize, to: usize, tag: u64, payload: Vec<Elem>) {
+        let idx = self.op_slot(from, to, false);
+        let op = &mut self.ops[idx];
+        if op.i == from {
+            op.len_ij += payload.len();
+        } else {
+            op.len_ji += payload.len();
+        }
+        if payload.is_empty() {
+            self.skipped.push(payload);
+        } else {
+            self.posted.push(PostedRun { dest: to, tag, charged: true, payload });
+        }
+    }
+
+    /// Full pairwise exchange: `a` travels `i → j`, `b` travels `j → i`,
+    /// charged once as `Machine::xchg(i, j, |a|, |b|)` at delivery.
+    pub fn xchg(&mut self, i: usize, j: usize, a: Vec<Elem>, b: Vec<Elem>) {
+        self.xchg_leg(i, j, a);
+        self.xchg_leg(j, i, b);
+    }
+
+    /// One-way message (binomial-tree rounds): charged as
+    /// `Machine::send(from, to, |payload|)` at delivery, in call order —
+    /// even when the payload is empty.
+    pub fn send(&mut self, from: usize, to: usize, payload: Vec<Elem>) {
+        let idx = self.op_slot(from, to, true);
+        debug_assert!(self.ops[idx].i == from, "send ops are one-directional");
+        self.ops[idx].len_ij += payload.len();
+        if payload.is_empty() {
+            self.skipped.push(payload);
+        } else {
+            self.posted.push(PostedRun { dest: to, tag: 0, charged: true, payload });
+        }
+    }
+
+    /// Routed message for the round's irregular h-relation — tag 0.
+    /// See [`Exchange::post_tagged`].
+    pub fn post(&mut self, from: usize, to: usize, payload: Vec<Elem>) {
+        self.post_tagged(from, to, 0, payload);
+    }
+
+    /// Routed message with an explicit run tag. Posts to the same
+    /// `(from, to)` pair coalesce into one wire message (one α, β·total),
+    /// delivered as separate runs in post order. `from == to` is a free
+    /// local move; empty payloads are skipped entirely.
+    pub fn post_tagged(&mut self, from: usize, to: usize, tag: u64, payload: Vec<Elem>) {
+        debug_assert!(from < self.p && to < self.p);
+        if payload.is_empty() {
+            self.skipped.push(payload);
+            return;
+        }
+        if from == to {
+            self.posted.push(PostedRun { dest: to, tag, charged: false, payload });
+            return;
+        }
+        match self.route_idx.entry((from, to)) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                self.route[*e.get() as usize].2 += payload.len();
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(self.route.len() as u32);
+                self.route.push((from, to, payload.len()));
+            }
+        }
+        self.posted.push(PostedRun { dest: to, tag, charged: true, payload });
+    }
+
+    /// Close the round: charge the machine (pairwise ops in call order,
+    /// then the routed h-relation in sorted `(from, to)` order), move all
+    /// payloads into per-PE inboxes, and assert charged == moved.
+    pub fn deliver(mut self, mach: &mut Machine) -> Inboxes {
+        assert_eq!(
+            self.mach_id,
+            mach.instance_id(),
+            "exchange delivered on a different machine than opened it"
+        );
+        // the charges below must apply eagerly, not be buffered into (and
+        // reordered by) an unrelated scalar superstep's transcript
+        assert!(
+            !mach.in_superstep(),
+            "cannot deliver an exchange while a raw cost superstep is open"
+        );
+        // ---- charge ---------------------------------------------------
+        let mut charged_words: u64 = 0;
+        for op in &self.ops {
+            if op.is_send {
+                debug_assert_eq!(op.len_ji, 0);
+                mach.send(op.i, op.j, op.len_ij);
+            } else {
+                mach.xchg(op.i, op.j, op.len_ij, op.len_ji);
+            }
+            charged_words += (op.len_ij + op.len_ji) as u64;
+        }
+        self.route_sorted.clear();
+        self.route_sorted.extend_from_slice(&self.route);
+        self.route_sorted.sort_unstable();
+        #[cfg(debug_assertions)]
+        for &(from, to, _) in &self.route_sorted {
+            debug_assert!(
+                self.pair_slot[from] == 0 && self.pair_slot[to] == 0,
+                "routed posts must not share PEs with pairwise ops in one \
+                 round (message {from}→{to})"
+            );
+        }
+        mach.route_round(&self.route_sorted);
+        charged_words += self.route_sorted.iter().map(|&(_, _, l)| l as u64).sum::<u64>();
+
+        // ---- move -----------------------------------------------------
+        let mut table = mach.plane.tables.pop().unwrap_or_default();
+        debug_assert!(table.iter().all(|slot| slot.is_empty()));
+        if table.len() < self.p {
+            table.resize_with(self.p, Vec::new);
+        }
+        let mut moved: u64 = 0;
+        for run in self.posted.drain(..) {
+            if run.charged {
+                moved += run.payload.len() as u64;
+            }
+            table[run.dest].push((run.tag, run.payload));
+        }
+        debug_assert_eq!(
+            charged_words, moved,
+            "exchange invariant violated: {charged_words} element-words \
+             charged but {moved} elements delivered remotely"
+        );
+        mach.note_exchange(charged_words, moved);
+
+        // ---- return staging + skipped buffers to the machine ----------
+        for op in &self.ops {
+            self.pair_slot[op.i] = 0;
+            self.pair_slot[op.j] = 0;
+        }
+        self.ops.clear();
+        self.route_idx.clear();
+        self.route.clear();
+        self.route_sorted.clear();
+        for buf in self.skipped.drain(..) {
+            mach.plane.recycle_buf(buf);
+        }
+        mach.plane.ops = std::mem::take(&mut self.ops);
+        mach.plane.posted = std::mem::take(&mut self.posted);
+        mach.plane.pair_slot = std::mem::take(&mut self.pair_slot);
+        mach.plane.route_idx = std::mem::take(&mut self.route_idx);
+        mach.plane.route = std::mem::take(&mut self.route);
+        mach.plane.route_sorted = std::mem::take(&mut self.route_sorted);
+        mach.plane.skipped = std::mem::take(&mut self.skipped);
+
+        Inboxes { boxes: table }
+    }
+}
+
+/// Per-PE mailboxes returned by [`Exchange::deliver`], indexed by global
+/// PE number. Hand back to [`Machine::recycle`] when drained so the run
+/// lists and payload buffers return to the pool.
+#[derive(Debug, Default)]
+pub struct Inboxes {
+    boxes: Vec<Vec<Run>>,
+}
+
+impl Inboxes {
+    /// All runs delivered to `pe`, in post order.
+    #[inline]
+    pub fn runs(&self, pe: usize) -> &[Run] {
+        self.boxes.get(pe).map_or(&[], Vec::as_slice)
+    }
+
+    /// The single run delivered to `pe` (empty slice if none) — for the
+    /// pairwise rounds where each PE receives at most one payload.
+    #[inline]
+    pub fn single(&self, pe: usize) -> &[Elem] {
+        let runs = self.runs(pe);
+        debug_assert!(runs.len() <= 1, "PE {pe} received {} runs", runs.len());
+        runs.first().map_or(&[], |(_, v)| v.as_slice())
+    }
+
+    /// Total elements delivered to `pe` (for memory accounting).
+    #[inline]
+    pub fn total(&self, pe: usize) -> usize {
+        self.runs(pe).iter().map(|(_, v)| v.len()).sum()
+    }
+
+    /// Move `pe`'s runs out (the mailbox slot is left empty) — for
+    /// consumers that forward payloads onward (RAMS' second DMA hop).
+    pub fn take(&mut self, pe: usize) -> Vec<Run> {
+        match self.boxes.get_mut(pe) {
+            Some(slot) => std::mem::take(slot),
+            None => Vec::new(),
+        }
+    }
+
+    pub(crate) fn into_table(self) -> Vec<Vec<Run>> {
+        self.boxes
+    }
+}
+
+impl Machine {
+    /// Open a payload round on this machine — see [`Exchange`]. The
+    /// returned object does not borrow the machine; interleave
+    /// `work_*`/`note_mem` charges freely while posting, then call
+    /// [`Exchange::deliver`].
+    pub fn exchange(&mut self) -> Exchange {
+        assert!(
+            !self.in_superstep(),
+            "cannot open an exchange inside a raw cost superstep"
+        );
+        let mut pair_slot = std::mem::take(&mut self.plane.pair_slot);
+        if pair_slot.len() < self.p() {
+            pair_slot.resize(self.p(), 0);
+        }
+        debug_assert!(pair_slot.iter().all(|&s| s == 0));
+        Exchange {
+            p: self.p(),
+            mach_id: self.instance_id(),
+            ops: std::mem::take(&mut self.plane.ops),
+            posted: std::mem::take(&mut self.plane.posted),
+            pair_slot,
+            route_idx: std::mem::take(&mut self.plane.route_idx),
+            route: std::mem::take(&mut self.plane.route),
+            route_sorted: std::mem::take(&mut self.plane.route_sorted),
+            skipped: std::mem::take(&mut self.plane.skipped),
+        }
+    }
+
+    /// A cleared element buffer from the data-plane pool (or a fresh one).
+    /// Algorithms build outgoing payloads in these; the buffers cycle back
+    /// through [`Machine::recycle`] after delivery.
+    #[inline]
+    pub fn take_buf(&mut self) -> Vec<Elem> {
+        self.plane.take_buf()
+    }
+
+    /// Return a payload buffer to the pool (cleared).
+    #[inline]
+    pub fn recycle_buf(&mut self, buf: Vec<Elem>) {
+        self.plane.recycle_buf(buf);
+    }
+
+    /// Return drained mailboxes to the pool: every remaining payload
+    /// buffer is cleared and pooled, the table itself is reused by the
+    /// next [`Exchange::deliver`].
+    pub fn recycle(&mut self, inboxes: Inboxes) {
+        let mut table = inboxes.into_table();
+        for slot in table.iter_mut() {
+            for (_, payload) in slot.drain(..) {
+                self.plane.recycle_buf(payload);
+            }
+        }
+        self.plane.tables.push(table);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+
+    fn m(p: usize) -> Machine {
+        Machine::new(p, CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true })
+    }
+
+    fn elems(pe: usize, n: usize) -> Vec<Elem> {
+        (0..n).map(|i| Elem::new((pe * 100 + i) as u64, pe, i)).collect()
+    }
+
+    #[test]
+    fn xchg_charges_like_raw_machine_and_moves_payloads() {
+        let mut raw = m(4);
+        raw.work(0, 50.0);
+        raw.xchg(0, 1, 3, 2);
+        raw.xchg(2, 3, 0, 0);
+
+        let mut mach = m(4);
+        mach.work(0, 50.0);
+        let mut ex = mach.exchange();
+        ex.xchg(0, 1, elems(0, 3), elems(1, 2));
+        ex.xchg(2, 3, Vec::new(), Vec::new());
+        let inboxes = ex.deliver(&mut mach);
+
+        for pe in 0..4 {
+            assert_eq!(mach.clock(pe).to_bits(), raw.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(mach.stats.messages, raw.stats.messages);
+        assert_eq!(mach.stats.words, raw.stats.words);
+        assert_eq!(inboxes.single(0), elems(1, 2).as_slice());
+        assert_eq!(inboxes.single(1), elems(0, 3).as_slice());
+        assert!(inboxes.single(2).is_empty() && inboxes.single(3).is_empty());
+        assert_eq!(mach.exchange_charged(), 5);
+        assert_eq!(mach.exchange_moved(), 5);
+        mach.recycle(inboxes);
+    }
+
+    #[test]
+    fn legs_accumulate_and_charge_once_per_pair() {
+        let mut raw = m(2);
+        raw.xchg(0, 1, 5, 1);
+
+        let mut mach = m(2);
+        let mut ex = mach.exchange();
+        ex.xchg_leg_tagged(0, 1, 7, elems(0, 2));
+        ex.xchg_leg_tagged(0, 1, 9, elems(0, 3));
+        ex.xchg_leg(1, 0, elems(1, 1));
+        let inboxes = ex.deliver(&mut mach);
+
+        assert_eq!(mach.clock(0).to_bits(), raw.clock(0).to_bits());
+        assert_eq!(mach.stats.messages, 2);
+        let runs = inboxes.runs(1);
+        assert_eq!(runs.len(), 2);
+        assert_eq!((runs[0].0, runs[0].1.len()), (7, 2));
+        assert_eq!((runs[1].0, runs[1].1.len()), (9, 3));
+        mach.recycle(inboxes);
+    }
+
+    #[test]
+    fn send_charges_even_empty() {
+        let mut raw = m(4);
+        raw.send(0, 1, 4);
+        raw.send(3, 2, 0);
+
+        let mut mach = m(4);
+        let mut ex = mach.exchange();
+        ex.send(0, 1, elems(0, 4));
+        ex.send(3, 2, Vec::new());
+        let inboxes = ex.deliver(&mut mach);
+        for pe in 0..4 {
+            assert_eq!(mach.clock(pe).to_bits(), raw.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(inboxes.total(1), 4);
+        assert_eq!(inboxes.runs(2).len(), 0);
+        mach.recycle(inboxes);
+    }
+
+    #[test]
+    fn posts_coalesce_and_route_in_sorted_order() {
+        // raw: one route round, coalesced per (from, to), sorted
+        let mut raw = m(4);
+        raw.route_round(&[(0, 2, 5), (1, 2, 2), (3, 0, 1)]);
+
+        let mut mach = m(4);
+        let mut ex = mach.exchange();
+        ex.post(3, 0, elems(3, 1)); // out-of-order post
+        ex.post(0, 2, elems(0, 3));
+        ex.post(1, 2, elems(1, 2));
+        ex.post(0, 2, elems(0, 2)); // coalesces with the earlier 0→2
+        ex.post(2, 2, elems(2, 9)); // local: delivered, never charged
+        ex.post(1, 3, Vec::new()); // empty: skipped entirely
+        let inboxes = ex.deliver(&mut mach);
+
+        for pe in 0..4 {
+            assert_eq!(mach.clock(pe).to_bits(), raw.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(mach.stats.messages, raw.stats.messages);
+        assert_eq!(mach.stats.words, raw.stats.words);
+        assert_eq!(mach.stats.max_degree, raw.stats.max_degree);
+        // delivery: runs stay separate (two remote posts coalesce on the
+        // wire but arrive as distinct runs) in post order per receiver
+        assert_eq!(inboxes.runs(2).len(), 4);
+        assert_eq!(inboxes.total(2), 5 + 2 + 9);
+        assert_eq!(inboxes.total(0), 1);
+        // local move delivered but not charged
+        assert_eq!(mach.exchange_charged(), 8);
+        assert_eq!(mach.exchange_moved(), 8);
+        mach.recycle(inboxes);
+    }
+
+    #[test]
+    fn pooling_reuses_buffers_across_rounds() {
+        let mut mach = m(2);
+        for round in 0..3 {
+            let mut buf = mach.take_buf();
+            assert!(buf.is_empty(), "round {round}: pooled buffers arrive clean");
+            buf.extend(elems(0, 8));
+            let cap_before = buf.capacity();
+            let mut ex = mach.exchange();
+            ex.xchg(0, 1, buf, Vec::new());
+            let inboxes = ex.deliver(&mut mach);
+            assert_eq!(inboxes.total(1), 8);
+            mach.recycle(inboxes);
+            if round > 0 {
+                assert!(cap_before >= 8, "recycled buffer kept its capacity");
+            }
+        }
+    }
+
+    #[test]
+    fn machine_reset_clears_exchange_counters() {
+        let mut mach = m(2);
+        let mut ex = mach.exchange();
+        ex.xchg(0, 1, elems(0, 3), Vec::new());
+        let inboxes = ex.deliver(&mut mach);
+        mach.recycle(inboxes);
+        assert_eq!(mach.exchange_charged(), 3);
+        mach.reset(2, CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true });
+        assert_eq!(mach.exchange_charged(), 0);
+        assert_eq!(mach.exchange_moved(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different machine")]
+    fn delivering_on_a_different_machine_panics() {
+        let mut m1 = m(2);
+        let mut m2 = m(2);
+        let ex = m1.exchange();
+        let _ = ex.deliver(&mut m2);
+    }
+
+    #[test]
+    #[should_panic(expected = "at most one pairwise op")]
+    #[cfg(debug_assertions)]
+    fn reusing_a_pe_across_pairwise_ops_panics() {
+        let mut mach = m(4);
+        let mut ex = mach.exchange();
+        ex.xchg_touch(0, 1);
+        ex.xchg_touch(1, 2);
+        let _ = ex.deliver(&mut mach);
+    }
+}

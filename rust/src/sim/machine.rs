@@ -2,6 +2,7 @@
 
 use crate::metrics::Stats;
 use crate::model::CostModel;
+use crate::sim::exchange::PlanePool;
 
 /// Reported when a nonrobust algorithm blows past a PE's memory budget —
 /// the simulator analogue of "HykSort crashes on DeterDupl/BucketSorted".
@@ -70,10 +71,17 @@ struct Transcript {
     route: Vec<(usize, usize, usize)>,
 }
 
+/// Process-unique id source for [`Machine::instance_id`].
+static MACHINE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 /// The simulated machine: `p` PEs, one virtual clock each.
 #[derive(Clone, Debug)]
 pub struct Machine {
     p: usize,
+    /// Process-unique identity (clones share it) — lets the data plane
+    /// assert an [`crate::sim::Exchange`] is delivered on the machine
+    /// that opened it.
+    instance_id: u64,
     clock: Vec<f64>,
     pub cost: CostModel,
     pub stats: Stats,
@@ -84,6 +92,13 @@ pub struct Machine {
     transcript: Option<Transcript>,
     /// Drained transcript kept for buffer reuse across supersteps.
     spare: Transcript,
+    /// Staging + buffer pools of the payload data plane
+    /// ([`crate::sim::Exchange`]), reused across rounds and runs.
+    pub(crate) plane: PlanePool,
+    /// Cumulative element-words charged through the data plane.
+    elems_charged: u64,
+    /// Cumulative elements delivered remotely through the data plane.
+    elems_moved: u64,
 }
 
 impl Machine {
@@ -93,6 +108,7 @@ impl Machine {
         assert!(p >= 1);
         Self {
             p,
+            instance_id: MACHINE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             clock: vec![0.0; p],
             cost,
             stats: Stats::default(),
@@ -101,6 +117,9 @@ impl Machine {
             scratch: RouteScratch::default(),
             transcript: None,
             spare: Transcript::default(),
+            plane: PlanePool::default(),
+            elems_charged: 0,
+            elems_moved: 0,
         }
     }
 
@@ -132,6 +151,39 @@ impl Machine {
             t.route.clear();
             self.spare = t;
         }
+        // the data plane keeps its pools but forgets any staged round
+        self.plane.reset();
+        self.elems_charged = 0;
+        self.elems_moved = 0;
+    }
+
+    /// Cumulative element-words the data plane has charged to the cost
+    /// model ([`crate::sim::Exchange`]); equals [`Machine::exchange_moved`]
+    /// whenever every payload moved through the plane — the charged ==
+    /// moved invariant, `debug_assert`ed per round and testable per run.
+    #[inline]
+    pub fn exchange_charged(&self) -> u64 {
+        self.elems_charged
+    }
+
+    /// Cumulative elements delivered to a *remote* PE through the data
+    /// plane (local self-posts excluded). See [`Machine::exchange_charged`].
+    #[inline]
+    pub fn exchange_moved(&self) -> u64 {
+        self.elems_moved
+    }
+
+    #[inline]
+    pub(crate) fn note_exchange(&mut self, charged: u64, moved: u64) {
+        self.elems_charged += charged;
+        self.elems_moved += moved;
+    }
+
+    /// Process-unique machine identity (survives [`Machine::reset`];
+    /// clones share their original's id).
+    #[inline]
+    pub(crate) fn instance_id(&self) -> u64 {
+        self.instance_id
     }
 
     /// log2(p) for power-of-two machines.
@@ -294,6 +346,16 @@ impl Machine {
     /// are buffered (costs *not* yet charged) until [`settle`] replays them
     /// in one batched pass. Clock reads ([`time`], [`clock`]) in between see
     /// the pre-superstep state.
+    ///
+    /// This is the **cost-only** batching layer, used by scalar collectives
+    /// (all-reduce, prefix sums, broadcast pricing) whose payloads are
+    /// metadata words, not elements. Rounds that move element payloads go
+    /// through the [`crate::sim::Exchange`] data plane
+    /// ([`Machine::exchange`]) instead, which buffers the payloads together
+    /// with the charges, delivers them to per-PE inboxes, and asserts that
+    /// charged and moved element counts agree; an exchange round cannot be
+    /// opened while a raw superstep is open (and vice versa each exchange
+    /// settles itself before returning).
     ///
     /// # Semantics preserved
     ///

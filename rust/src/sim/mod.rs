@@ -5,13 +5,22 @@
 //! advances one virtual clock per PE. The reported running time of a run is
 //! the maximum clock (makespan), exactly the quantity the paper's analysis
 //! bounds.
+//!
+//! Element payloads travel through the pooled [`Exchange`] data plane
+//! ([`Machine::exchange`]), which charges the cost model and moves the
+//! elements from the same call and asserts that the two volumes agree;
+//! the raw [`Machine`] charge API (`xchg`/`send`/`route_round`,
+//! `begin_superstep`/`settle`) remains for scalar/metadata traffic that
+//! moves no elements (pivot windows, histograms, splitter broadcasts).
 
 mod collectives;
+mod exchange;
 mod hypercube;
 mod machine;
 mod sparse;
 
 pub use collectives::*;
+pub use exchange::{Exchange, Inboxes, Run};
 pub use hypercube::*;
 pub use machine::*;
 pub use sparse::*;

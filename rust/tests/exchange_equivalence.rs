@@ -1,0 +1,1442 @@
+//! The Exchange data-plane compatibility contract: porting every
+//! algorithm's cost charging **and** element movement onto the pooled
+//! [`rmps::sim::Exchange`] mailbox must not change a single bit of any
+//! [`RunReport`].
+//!
+//! The oracle below (`mod legacy`) is a **verbatim copy of the
+//! pre-refactor implementations** — hand-rolled `Vec<Vec<Elem>>` outgoing
+//! and incoming tables, separate `Machine::xchg`/`send`/`route_round`
+//! charges — of all 15 algorithms' data-exchange phases, together with
+//! the pre-refactor payload collectives (`all_gather_merge`,
+//! `gather_merge`, `alltoallv`) and both shuffles they build on. Each
+//! grid cell runs the legacy oracle and the current `Runner` path and
+//! asserts field-by-field equality (floats as raw bits), in the style of
+//! `runner_equivalence.rs`: times, message/word/work stats, memory
+//! high-water marks, crash strings, validation, and the full sorted
+//! output.
+
+use rmps::algorithms::{Algorithm, RunReport, Runner};
+use rmps::config::RunConfig;
+use rmps::input::{generate, Distribution};
+
+/// Field-by-field byte comparison (floats as raw bits). `wall_ms` is host
+/// wallclock and exempt by nature.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm");
+    assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: time");
+    assert_eq!(a.stats.messages, b.stats.messages, "{ctx}: messages");
+    assert_eq!(a.stats.words, b.stats.words, "{ctx}: words");
+    assert_eq!(
+        a.stats.local_work.to_bits(),
+        b.stats.local_work.to_bits(),
+        "{ctx}: local_work"
+    );
+    assert_eq!(a.stats.max_mem_elems, b.stats.max_mem_elems, "{ctx}: max_mem_elems");
+    assert_eq!(a.stats.max_degree, b.stats.max_degree, "{ctx}: max_degree");
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed");
+    assert_eq!(a.output_shape, b.output_shape, "{ctx}: output_shape");
+    assert_eq!(a.is_globally_sorted, b.is_globally_sorted, "{ctx}: is_globally_sorted");
+    let (va, vb) = (&a.validation, &b.validation);
+    assert_eq!(va.locally_sorted, vb.locally_sorted, "{ctx}: locally_sorted");
+    assert_eq!(va.globally_sorted, vb.globally_sorted, "{ctx}: globally_sorted");
+    assert_eq!(va.multiset_preserved, vb.multiset_preserved, "{ctx}: multiset");
+    assert_eq!(va.balanced, vb.balanced, "{ctx}: balanced");
+    assert_eq!(va.imbalance.max_load, vb.imbalance.max_load, "{ctx}: max_load");
+    assert_eq!(va.imbalance.min_load, vb.imbalance.min_load, "{ctx}: min_load");
+    assert_eq!(
+        va.imbalance.epsilon.to_bits(),
+        vb.imbalance.epsilon.to_bits(),
+        "{ctx}: imbalance ε"
+    );
+    assert_eq!(a.output, b.output, "{ctx}: output");
+}
+
+/// Verbatim pre-refactor implementations (charging and movement
+/// separate), driving the same public `Machine` cost API the old code
+/// used. Do not "fix" or modernize anything in here — it is the oracle.
+mod legacy {
+    use rmps::algorithms::hyksort::HykConfig;
+    use rmps::algorithms::quick::{Pivot, QuickConfig};
+    use rmps::algorithms::rams::{AmsConfig, Dma};
+    use rmps::algorithms::selector::CrossoverTable;
+    use rmps::algorithms::{Algorithm, OutputShape, RunReport};
+    use rmps::config::RunConfig;
+    use rmps::elements::{merge, merge_into, multiway_merge, Elem, Key};
+    use rmps::input::KEY_RANGE;
+    use rmps::localsort::{sort_all, RustSort, SortBackend};
+    use rmps::median::median_binary;
+    use rmps::partition::{partition, pick_splitters, SplitterTree};
+    use rmps::rng::Rng;
+    use rmps::sim::{
+        allreduce_u64, allreduce_vec_u64, bcast_cost, prefix_sum_vec, rank_pairs, Cube,
+        GatheredRuns, Machine,
+    };
+    use rmps::verify::{validate, validate_replicated};
+
+    // ---- pre-refactor payload collectives -----------------------------
+
+    pub fn all_gather_merge(
+        mach: &mut Machine,
+        pes: &[usize],
+        local: &[Vec<Elem>],
+    ) -> Vec<GatheredRuns> {
+        assert!(pes.len().is_power_of_two());
+        let dim = pes.len().trailing_zeros();
+        let size = pes.len();
+        let mut runs: Vec<GatheredRuns> = pes
+            .iter()
+            .map(|&pe| GatheredRuns { own: local[pe].clone(), ..Default::default() })
+            .collect();
+        let mut full: Vec<Vec<Elem>> = pes.iter().map(|&pe| local[pe].clone()).collect();
+        for j in 0..dim {
+            let bit = 1usize << j;
+            let old: Vec<Vec<Elem>> = std::mem::take(&mut full);
+            mach.begin_superstep();
+            for (r, pr) in rank_pairs(size, j) {
+                mach.xchg(pes[r], pes[pr], old[r].len(), old[pr].len());
+            }
+            mach.settle();
+            full = (0..size)
+                .map(|r| {
+                    let pr = r ^ bit;
+                    let incoming = &old[pr];
+                    if pr < r {
+                        runs[r].left = merge(&runs[r].left, incoming);
+                    } else {
+                        runs[r].right = merge(&runs[r].right, incoming);
+                    }
+                    let merged = merge(&old[r], incoming);
+                    mach.work_linear(pes[r], merged.len());
+                    mach.note_mem(pes[r], merged.len(), "all-gather-merge");
+                    merged
+                })
+                .collect();
+        }
+        runs
+    }
+
+    pub fn gather_merge(mach: &mut Machine, pes: &[usize], local: &[Vec<Elem>]) -> Vec<Elem> {
+        assert!(pes.len().is_power_of_two());
+        let dim = pes.len().trailing_zeros();
+        let size = pes.len();
+        let mut cur: Vec<Option<Vec<Elem>>> =
+            pes.iter().map(|&pe| Some(local[pe].clone())).collect();
+        for j in 0..dim {
+            let bit = 1usize << j;
+            let mut moves: Vec<(usize, usize, Vec<Elem>)> = Vec::new();
+            for r in 0..size {
+                if r & bit != 0 && r & (bit - 1) == 0 {
+                    let dst = r & !bit;
+                    let data = cur[r].take().expect("sender already gave data away");
+                    moves.push((r, dst, data));
+                }
+            }
+            mach.begin_superstep();
+            for (r, dst, data) in &moves {
+                mach.send(pes[*r], pes[*dst], data.len());
+            }
+            mach.settle();
+            for (_, dst, data) in moves {
+                let acc = cur[dst].as_mut().expect("receiver must hold data");
+                let merged = merge(acc, &data);
+                mach.work_linear(pes[dst], merged.len());
+                mach.note_mem(pes[dst], merged.len(), "gather-merge");
+                *acc = merged;
+            }
+        }
+        cur[0].take().expect("root holds the result")
+    }
+
+    pub fn alltoallv(
+        mach: &mut Machine,
+        pes: &[usize],
+        send: Vec<Vec<Vec<Elem>>>,
+    ) -> Vec<Vec<Vec<Elem>>> {
+        let size = pes.len();
+        let mut msgs = Vec::new();
+        for (r, targets) in send.iter().enumerate() {
+            for (t, data) in targets.iter().enumerate() {
+                if t != r && !data.is_empty() {
+                    msgs.push((pes[r], pes[t], data.len()));
+                }
+            }
+        }
+        mach.route_round(&msgs);
+        let mut recv: Vec<Vec<Vec<Elem>>> = (0..size).map(|_| vec![Vec::new(); size]).collect();
+        for (r, targets) in send.into_iter().enumerate() {
+            for (t, data) in targets.into_iter().enumerate() {
+                recv[t][r] = data;
+            }
+        }
+        for t in 0..size {
+            let total: usize = recv[t].iter().map(|v| v.len()).sum();
+            mach.note_mem(pes[t], total, "alltoallv");
+        }
+        recv
+    }
+
+    // ---- pre-refactor shuffles ----------------------------------------
+
+    pub fn hypercube_shuffle(
+        mach: &mut Machine,
+        cube: Cube,
+        data: &mut [Vec<Elem>],
+        rng: &mut Rng,
+    ) {
+        let size = cube.size();
+        let base = cube.base();
+        for j in (0..cube.dim).rev() {
+            let bit = 1usize << j;
+            let mut outgoing: Vec<Vec<Elem>> = vec![Vec::new(); size];
+            for r in 0..size {
+                let pe = base + r;
+                let local = std::mem::take(&mut data[pe]);
+                mach.work_linear(pe, local.len());
+                let mut v = local;
+                let half = v.len() / 2;
+                let extra = v.len() % 2 == 1 && rng.coin();
+                let cut = half + usize::from(extra);
+                for i in 0..cut {
+                    let j = i + rng.below((v.len() - i) as u64) as usize;
+                    v.swap(i, j);
+                }
+                let send = v.split_off(cut);
+                data[pe] = v;
+                outgoing[r] = send;
+            }
+            mach.begin_superstep();
+            for (r, pr) in rank_pairs(size, j) {
+                mach.xchg(base + r, base + pr, outgoing[r].len(), outgoing[pr].len());
+            }
+            mach.settle();
+            for r in 0..size {
+                let pr = r ^ bit;
+                let incoming = std::mem::take(&mut outgoing[pr]);
+                data[base + r].extend(incoming);
+                mach.note_mem(base + r, data[base + r].len(), "hypercube shuffle");
+            }
+        }
+    }
+
+    pub fn direct_shuffle(
+        mach: &mut Machine,
+        cube: Cube,
+        data: &mut [Vec<Elem>],
+        rng: &mut Rng,
+    ) {
+        let size = cube.size();
+        let base = cube.base();
+        let mut buckets: Vec<Vec<Vec<Elem>>> =
+            (0..size).map(|_| vec![Vec::new(); size]).collect();
+        for r in 0..size {
+            let pe = base + r;
+            for e in std::mem::take(&mut data[pe]) {
+                let t = rng.below(size as u64) as usize;
+                buckets[r][t].push(e);
+            }
+            mach.work_linear(pe, buckets[r].iter().map(Vec::len).sum());
+        }
+        let recv = alltoallv(mach, &cube.pe_vec(), buckets);
+        for r in 0..size {
+            let pe = base + r;
+            let mut v: Vec<Elem> = recv[r].iter().flatten().copied().collect();
+            data[pe].append(&mut v);
+            mach.note_mem(pe, data[pe].len(), "direct shuffle");
+        }
+    }
+
+    // ---- pre-refactor hypercube quicksort -----------------------------
+
+    fn split_run(a: &[Elem], s: Key, tie_break: bool) -> (usize, usize) {
+        let lo = a.partition_point(|e| e.key < s);
+        let hi = a.partition_point(|e| e.key <= s);
+        if !tie_break {
+            return (lo, lo);
+        }
+        let m = hi - lo;
+        let desired = a.len() / 2;
+        let x = desired.saturating_sub(lo).min(m);
+        (lo, lo + x)
+    }
+
+    fn select_pivot(
+        mach: &mut Machine,
+        pes: &[usize],
+        data: &[Vec<Elem>],
+        qc: &QuickConfig,
+        rng: &mut Rng,
+    ) -> Option<Key> {
+        match qc.pivot {
+            Pivot::Window => median_binary(mach, pes, data, qc.window_k, rng),
+            Pivot::Pe0LocalMedian => {
+                let local = &data[pes[0]];
+                let s = local.get(local.len() / 2).map(|e| e.key);
+                bcast_cost(mach, pes, 0, 1);
+                s.or_else(|| {
+                    pes.iter()
+                        .find_map(|&pe| data[pe].get(data[pe].len() / 2).map(|e| e.key))
+                })
+            }
+            Pivot::MedianOfMedians => {
+                let q = pes.len();
+                let dim = q.trailing_zeros();
+                let mut have: Vec<usize> = vec![1; q];
+                for j in 0..dim {
+                    let bit = 1usize << j;
+                    for r in 0..q {
+                        if r & bit != 0 && r & (bit - 1) == 0 {
+                            let dst = r & !bit;
+                            mach.send(pes[r], pes[dst], have[r]);
+                            have[dst] += have[r];
+                        }
+                    }
+                }
+                let mut meds: Vec<Key> = pes
+                    .iter()
+                    .filter_map(|&pe| data[pe].get(data[pe].len() / 2).map(|e| e.key))
+                    .collect();
+                if meds.is_empty() {
+                    return None;
+                }
+                meds.sort_unstable();
+                mach.work_sort(pes[0], q);
+                bcast_cost(mach, pes, 0, 1);
+                Some(meds[meds.len() / 2])
+            }
+        }
+    }
+
+    pub fn quick_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+        qc: &QuickConfig,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let mut rng = Rng::seeded(cfg.seed ^ 0x5157_4943, 1);
+        if qc.shuffle {
+            hypercube_shuffle(mach, Cube::whole(p), data, &mut rng);
+        }
+        sort_all(mach, data, backend);
+        let mut cubes = vec![Cube::whole(p)];
+        let mut merge_buf: Vec<Elem> = Vec::new();
+        while cubes[0].dim > 0 {
+            let mut next = Vec::with_capacity(cubes.len() * 2);
+            for cube in &cubes {
+                let pes = cube.pe_vec();
+                if let Some(s) = select_pivot(mach, &pes, data, qc, &mut rng) {
+                    exchange_level(mach, cube, data, s, qc.tie_break, &mut merge_buf);
+                }
+                let (lo, hi) = cube.split();
+                next.push(lo);
+                next.push(hi);
+                if mach.crashed() {
+                    return;
+                }
+            }
+            cubes = next;
+        }
+    }
+
+    fn exchange_level(
+        mach: &mut Machine,
+        cube: &Cube,
+        data: &mut [Vec<Elem>],
+        s: Key,
+        tie_break: bool,
+        merge_buf: &mut Vec<Elem>,
+    ) {
+        let j = cube.dim - 1;
+        let bit = 1usize << j;
+        let size = cube.size();
+        let base = cube.base();
+        let mut cuts: Vec<usize> = Vec::with_capacity(size);
+        for r in 0..size {
+            let a = &data[base + r];
+            let (_, cut) = split_run(a, s, tie_break);
+            mach.work(base + r, 2.0 * (a.len().max(2) as f64).log2());
+            cuts.push(cut);
+        }
+        for r in 0..size {
+            let pr = r ^ bit;
+            if r < pr {
+                let send_r = data[base + r].len() - cuts[r];
+                let send_pr = cuts[pr];
+                mach.xchg(base + r, base + pr, send_r, send_pr);
+            }
+        }
+        let mut outgoing: Vec<Vec<Elem>> = Vec::with_capacity(size);
+        for r in 0..size {
+            let pe = base + r;
+            let keep_low = r & bit == 0;
+            let run = &mut data[pe];
+            if keep_low {
+                outgoing.push(run.split_off(cuts[r]));
+            } else {
+                let mut rest = run.split_off(cuts[r]);
+                std::mem::swap(run, &mut rest);
+                outgoing.push(rest);
+            }
+        }
+        for r in 0..size {
+            let pr = r ^ bit;
+            let pe = base + r;
+            let incoming = std::mem::take(&mut outgoing[pr]);
+            merge_into(&data[pe], &incoming, merge_buf);
+            std::mem::swap(&mut data[pe], merge_buf);
+            mach.work_linear(pe, data[pe].len());
+            mach.note_mem(pe, data[pe].len(), "quicksort exchange");
+        }
+    }
+
+    // ---- pre-refactor bitonic -----------------------------------------
+
+    fn compare_split(mine: &[Elem], theirs: &[Elem], keep_low: bool) -> Vec<Elem> {
+        let keep = mine.len();
+        let mut out = Vec::with_capacity(keep);
+        if keep_low {
+            let (mut i, mut j) = (0, 0);
+            while out.len() < keep {
+                if j >= theirs.len() || (i < mine.len() && mine[i] <= theirs[j]) {
+                    out.push(mine[i]);
+                    i += 1;
+                } else {
+                    out.push(theirs[j]);
+                    j += 1;
+                }
+            }
+        } else {
+            let (mut i, mut j) = (mine.len() as i64 - 1, theirs.len() as i64 - 1);
+            while out.len() < keep {
+                if j < 0 || (i >= 0 && mine[i as usize] >= theirs[j as usize]) {
+                    out.push(mine[i as usize]);
+                    i -= 1;
+                } else {
+                    out.push(theirs[j as usize]);
+                    j -= 1;
+                }
+            }
+            out.reverse();
+        }
+        out
+    }
+
+    pub fn bitonic_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let d = p.trailing_zeros();
+        let m = data[0].len();
+        if data.iter().any(|v| v.len() != m) || (m == 0 && cfg.n_total() > 0) {
+            mach.fail(0, "bitonic requires dense balanced input");
+            return;
+        }
+        sort_all(mach, data, backend);
+        for i in 0..d {
+            for j in (0..=i).rev() {
+                let bit = 1usize << j;
+                for pe in 0..p {
+                    let partner = pe ^ bit;
+                    if pe < partner {
+                        mach.xchg(pe, partner, data[pe].len(), data[partner].len());
+                    }
+                }
+                let snapshot: Vec<Vec<Elem>> = data.clone();
+                for pe in 0..p {
+                    let partner = pe ^ bit;
+                    let ascending = pe & (1 << (i + 1)) == 0;
+                    let keep_low = (pe & bit == 0) == ascending;
+                    data[pe] = compare_split(&snapshot[pe], &snapshot[partner], keep_low);
+                    mach.work_linear(pe, 2 * m);
+                    mach.note_mem(pe, 2 * m, "bitonic compare-split");
+                }
+            }
+        }
+    }
+
+    // ---- pre-refactor HykSort -----------------------------------------
+
+    pub fn hyksort_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+        hc: &HykConfig,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let mut rng = Rng::seeded(cfg.seed ^ 0x4859_4B53, 3);
+        sort_all(mach, data, backend);
+        let mut groups = vec![Cube::whole(p)];
+        while groups[0].dim > 0 {
+            let mut next = Vec::new();
+            for group in &groups {
+                hyk_level(mach, group, data, cfg, hc, &mut rng, &mut next);
+                if mach.crashed() {
+                    return;
+                }
+            }
+            groups = next;
+        }
+    }
+
+    fn hyk_level(
+        mach: &mut Machine,
+        group: &Cube,
+        data: &mut [Vec<Elem>],
+        cfg: &RunConfig,
+        hc: &HykConfig,
+        rng: &mut Rng,
+        next: &mut Vec<Cube>,
+    ) {
+        let q = group.size();
+        let pes = group.pe_vec();
+        let logk = (hc.k.max(2).trailing_zeros()).min(group.dim);
+        let k = 1usize << logk;
+        let subgroups = group.split_k(logk);
+        next.extend(subgroups.iter().copied());
+
+        let split_cost = cfg.cost.alpha * (q.max(2) as f64).log2() + cfg.cost.beta * q as f64;
+        for &pe in &pes {
+            mach.work(pe, split_cost);
+        }
+
+        let mut samples: Vec<Vec<Elem>> = vec![Vec::new(); data.len()];
+        let budget = mach.mem_cap_elems.unwrap_or(usize::MAX).min(hc.sample_per_pe * q) / 2;
+        let per_pe_cap = (budget / q).max(1);
+        for &pe in &pes {
+            let local = &data[pe];
+            let take = hc.sample_per_pe.min(per_pe_cap).min(local.len());
+            for _ in 0..take {
+                samples[pe].push(local[rng.below(local.len() as u64) as usize]);
+            }
+            samples[pe].sort_unstable_by_key(|e| e.key);
+            mach.work_sort(pe, take);
+        }
+        let gathered = all_gather_merge(mach, &pes, &samples);
+        let sorted_samples = gathered[0].merged();
+        let splitters: Vec<Key> = (1..k)
+            .map(|i| {
+                if sorted_samples.is_empty() {
+                    Key::MAX
+                } else {
+                    sorted_samples[(i * sorted_samples.len() / k).min(sorted_samples.len() - 1)]
+                        .key
+                }
+            })
+            .collect();
+
+        let q_sub = q / k;
+        let mut outgoing: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
+        let mut msgs: Vec<(usize, usize, usize)> = Vec::new();
+        for r in 0..q {
+            let pe = pes[r];
+            let local = std::mem::take(&mut data[pe]);
+            mach.work_classify(pe, local.len(), k);
+            let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); k];
+            for e in local {
+                let b = splitters.partition_point(|&s| s < e.key);
+                buckets[b].push(e);
+            }
+            for (b, bucket) in buckets.iter().enumerate() {
+                if bucket.is_empty() {
+                    continue;
+                }
+                let target = subgroups[b].pe(r % q_sub);
+                if target != pe {
+                    msgs.push((pe, target, bucket.len()));
+                }
+            }
+            outgoing[pe] = buckets;
+        }
+        mach.route_round(&msgs);
+
+        let mut incoming: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
+        for r in 0..q {
+            let pe = pes[r];
+            for (b, bucket) in std::mem::take(&mut outgoing[pe]).into_iter().enumerate() {
+                if bucket.is_empty() {
+                    continue;
+                }
+                let target = subgroups[b].pe(r % q_sub);
+                incoming[target].push(bucket);
+            }
+        }
+        for &pe in &pes {
+            let runs = std::mem::take(&mut incoming[pe]);
+            let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+            let merged = multiway_merge(&refs);
+            mach.work(
+                pe,
+                cfg.cost.cmp * merged.len() as f64 * (runs.len().max(2) as f64).log2(),
+            );
+            mach.note_mem(pe, merged.len(), "HykSort k-way exchange");
+            data[pe] = merged;
+        }
+    }
+
+    // ---- pre-refactor RAMS --------------------------------------------
+
+    pub fn rams_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+        ac: &AmsConfig,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let mut rng = Rng::seeded(cfg.seed ^ 0x414D_5331, 4);
+        sort_all(mach, data, backend);
+        let mut groups = vec![(Cube::whole(p), ac.levels.max(1))];
+        while let Some((group, levels_left)) = groups.pop() {
+            if group.dim == 0 || levels_left == 0 {
+                continue;
+            }
+            let subs = rams_level(mach, &group, data, cfg, ac, levels_left, &mut rng);
+            if mach.crashed() {
+                return;
+            }
+            for s in subs {
+                groups.push((s, levels_left - 1));
+            }
+        }
+    }
+
+    fn rams_level(
+        mach: &mut Machine,
+        group: &Cube,
+        data: &mut [Vec<Elem>],
+        cfg: &RunConfig,
+        ac: &AmsConfig,
+        levels_left: usize,
+        rng: &mut Rng,
+    ) -> Vec<Cube> {
+        let q = group.size();
+        let pes = group.pe_vec();
+        let logk = group.dim.div_ceil(levels_left as u32).max(1);
+        let k = 1usize << logk;
+        let subgroups = group.split_k(logk);
+        let q_sub = q / k;
+
+        let b = (2.0 / ((1.0 + ac.epsilon).powf(1.0 / ac.levels as f64) - 1.0)).ceil() as usize;
+        let nb = ((b * k).next_power_of_two() - 1).max(k - 1).min(1023);
+
+        let mut samples: Vec<Vec<Elem>> = vec![Vec::new(); data.len()];
+        let budget = mach.mem_cap_elems.unwrap_or(usize::MAX).min(4 * nb.max(k));
+        let s_loc_target = (budget as f64 / q as f64).ceil() as usize;
+        for &pe in &pes {
+            let local = &data[pe];
+            let take = s_loc_target.max(1).min(local.len());
+            for _ in 0..take {
+                samples[pe].push(local[rng.below(local.len() as u64) as usize]);
+            }
+            samples[pe].sort_unstable();
+            mach.work_sort(pe, take);
+        }
+        let gathered = all_gather_merge(mach, &pes, &samples);
+        let sorted_samples = gathered[0].merged();
+        let splitters = pick_splitters(&sorted_samples, nb);
+        let tree = SplitterTree::new(&splitters);
+
+        let mut buckets: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
+        let mut counts: Vec<Vec<usize>> = Vec::with_capacity(q);
+        for &pe in &pes {
+            let local = std::mem::take(&mut data[pe]);
+            mach.work_classify(pe, local.len(), nb + 1);
+            let parts = partition(&local, &tree, ac.tie_break);
+            counts.push(parts.iter().map(Vec::len).collect());
+            buckets[pe] = parts;
+        }
+
+        let prefixes = prefix_sum_vec(mach, &pes, &counts);
+        let totals: Vec<usize> = prefixes[0].1.clone();
+        let grand_total: usize = totals.iter().sum();
+        let ideal = grand_total as f64 / k as f64;
+        let mut assignment = vec![0usize; nb + 1];
+        {
+            let mut cum = 0usize;
+            let mut g = 0usize;
+            for (bkt, &t) in totals.iter().enumerate() {
+                let remaining_buckets = nb + 1 - bkt;
+                let remaining_groups = k - g;
+                if g + 1 < k
+                    && cum as f64 >= (g + 1) as f64 * ideal
+                    && remaining_buckets > remaining_groups - 1
+                {
+                    g += 1;
+                }
+                assignment[bkt] = g;
+                cum += t;
+            }
+            mach.work(pes[0], cfg.cost.cmp * (nb + 1) as f64);
+        }
+        let mut sub_total = vec![0usize; k];
+        for (bkt, &g) in assignment.iter().enumerate() {
+            sub_total[g] += totals[bkt];
+        }
+        let mut bucket_base = vec![0usize; nb + 1];
+        {
+            let mut acc = vec![0usize; k];
+            for (bkt, &g) in assignment.iter().enumerate() {
+                bucket_base[bkt] = acc[g];
+                acc[g] += totals[bkt];
+            }
+        }
+
+        let caps: Vec<usize> = sub_total.iter().map(|&t| t.div_ceil(q_sub).max(1)).collect();
+        struct Msg {
+            from_pe: usize,
+            to_pe: usize,
+            bucket: usize,
+            start: usize,
+            end: usize,
+        }
+        let mut msgs: Vec<Msg> = Vec::new();
+        for (r, &pe) in pes.iter().enumerate() {
+            let pre = &prefixes[r].0;
+            for bkt in 0..=nb {
+                let len = buckets[pe][bkt].len();
+                if len == 0 {
+                    continue;
+                }
+                let g = assignment[bkt];
+                let goff = bucket_base[bkt] + pre[bkt];
+                let cap = caps[g];
+                let mut local_start = 0usize;
+                while local_start < len {
+                    let gpos = goff + local_start;
+                    let t_idx = (gpos / cap).min(q_sub - 1);
+                    let t_end_gpos = ((t_idx + 1) * cap).min(goff + len);
+                    let local_end = t_end_gpos - goff;
+                    msgs.push(Msg {
+                        from_pe: pe,
+                        to_pe: subgroups[g].pe(t_idx),
+                        bucket: bkt,
+                        start: local_start,
+                        end: local_end,
+                    });
+                    local_start = local_end;
+                }
+            }
+        }
+
+        let mut wire: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        for m in &msgs {
+            if m.from_pe != m.to_pe {
+                *wire.entry((m.from_pe, m.to_pe)).or_insert(0) += m.end - m.start;
+            }
+        }
+        let mut wire: Vec<(usize, usize, usize)> =
+            wire.into_iter().map(|((f, t), l)| (f, t, l)).collect();
+        wire.sort_unstable();
+
+        let mut fan_in = std::collections::HashMap::new();
+        for &(_, to, _) in &wire {
+            *fan_in.entry(to).or_insert(0usize) += 1;
+        }
+        let max_fan_in = fan_in.values().copied().max().unwrap_or(0);
+        let use_dma = match ac.dma {
+            Dma::Always => true,
+            Dma::Never => false,
+            Dma::Auto => {
+                allreduce_u64(mach, &pes, &vec![0u64; data.len()], |a, b| a.max(b));
+                max_fan_in > 4 * k
+            }
+        };
+
+        if use_dma {
+            let addr_cost = cfg.cost.alpha * ((q.max(2) as f64).log2() + k as f64);
+            for &pe in &pes {
+                mach.work(pe, addr_cost);
+            }
+            mach.barrier(&pes);
+            let mut per_sub: std::collections::HashMap<(usize, usize), usize> =
+                std::collections::HashMap::new();
+            for m in &msgs {
+                let g = assignment[m.bucket];
+                *per_sub.entry((m.from_pe, g)).or_insert(0) += m.end - m.start;
+            }
+            // deterministic iteration (the historical HashMap iteration
+            // order was unspecified; note_mem aggregates by max so any
+            // order yields the same non-crash state — iterate sorted like
+            // the current implementation does)
+            let mut per_sub: Vec<((usize, usize), usize)> = per_sub.into_iter().collect();
+            per_sub.sort_unstable();
+            let mut round1: Vec<(usize, usize, usize)> = Vec::new();
+            for &((from, g), len) in &per_sub {
+                let entry = subgroups[g].pe(group.rank(from) % q_sub);
+                if entry != from {
+                    round1.push((from, entry, len));
+                }
+                mach.note_mem(entry, len, "DMA subgroup entry");
+            }
+            round1.sort_unstable();
+            mach.route_round(&round1);
+            let mut round2: std::collections::HashMap<(usize, usize), usize> =
+                std::collections::HashMap::new();
+            for m in &msgs {
+                let g = assignment[m.bucket];
+                let entry = subgroups[g].pe(group.rank(m.from_pe) % q_sub);
+                if entry != m.to_pe {
+                    *round2.entry((entry, m.to_pe)).or_insert(0) += m.end - m.start;
+                }
+            }
+            let mut round2: Vec<(usize, usize, usize)> =
+                round2.into_iter().map(|((f, t), l)| (f, t, l)).collect();
+            round2.sort_unstable();
+            mach.route_round(&round2);
+        } else {
+            mach.route_round(&wire);
+        }
+
+        let mut incoming: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
+        for m in &msgs {
+            let slice = buckets[m.from_pe][m.bucket][m.start..m.end].to_vec();
+            incoming[m.to_pe].push(slice);
+        }
+        for &pe in &pes {
+            let runs = std::mem::take(&mut incoming[pe]);
+            let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+            let merged = multiway_merge(&refs);
+            mach.work(
+                pe,
+                cfg.cost.cmp * merged.len() as f64 * (runs.len().max(2) as f64).log2(),
+            );
+            mach.note_mem(pe, merged.len(), "AMS data exchange");
+            data[pe] = merged;
+        }
+
+        subgroups
+    }
+
+    // ---- pre-refactor SSort -------------------------------------------
+
+    fn gather_words_cost(mach: &mut Machine, pes: &[usize], counts: &mut [usize]) {
+        let dim = pes.len().trailing_zeros();
+        for j in 0..dim {
+            let bit = 1usize << j;
+            for r in 0..pes.len() {
+                if r & bit != 0 && r & (bit - 1) == 0 {
+                    let dst = r & !bit;
+                    mach.send(pes[r], pes[dst], counts[r]);
+                    counts[dst] += counts[r];
+                }
+            }
+        }
+    }
+
+    pub fn ssort_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+        charge_splitters: bool,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let logp = p.trailing_zeros().max(1) as usize;
+        let mut rng = Rng::seeded(cfg.seed ^ 0x5350_4C54, 2);
+        let pes = Cube::whole(p).pe_vec();
+        sort_all(mach, data, backend);
+
+        let per_pe_sample = 16 * logp;
+        let mut sample: Vec<Elem> = Vec::new();
+        let mut sample_counts = vec![0usize; p];
+        for (pe, local) in data.iter().enumerate() {
+            let take = per_pe_sample.min(local.len());
+            for _ in 0..take {
+                sample.push(local[rng.below(local.len() as u64) as usize]);
+            }
+            sample_counts[pe] = take;
+        }
+        sample.sort_unstable_by_key(|e| e.key);
+        let splitters: Vec<Key> = (1..p)
+            .map(|i| {
+                if sample.is_empty() {
+                    Key::MAX
+                } else {
+                    sample[(i * sample.len() / p).min(sample.len() - 1)].key
+                }
+            })
+            .collect();
+        if charge_splitters {
+            gather_words_cost(mach, &pes, &mut sample_counts);
+            mach.work_sort(0, sample.len());
+            bcast_cost(mach, &pes, 0, p - 1);
+        }
+
+        let mut send: Vec<Vec<Vec<Elem>>> = Vec::with_capacity(p);
+        for pe in 0..p {
+            let local = std::mem::take(&mut data[pe]);
+            mach.work_classify(pe, local.len(), p);
+            let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); p];
+            for e in local {
+                let b = splitters.partition_point(|&s| s < e.key);
+                buckets[b].push(e);
+            }
+            send.push(buckets);
+        }
+        let recv = alltoallv(mach, &pes, send);
+
+        for (r, runs) in recv.into_iter().enumerate() {
+            let pe = pes[r];
+            let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+            let merged = multiway_merge(&refs);
+            mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
+            mach.note_mem(pe, merged.len(), "sample sort receive");
+            data[pe] = merged;
+        }
+    }
+
+    // ---- pre-refactor multiway mergesort ------------------------------
+
+    #[inline]
+    fn point(e: &Elem) -> u128 {
+        ((e.key as u128) << 64) | e.id as u128
+    }
+
+    pub fn mways_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let pes = Cube::whole(p).pe_vec();
+        let n: usize = data.iter().map(Vec::len).sum();
+        if n == 0 {
+            return;
+        }
+        sort_all(mach, data, backend);
+
+        let nb = p - 1;
+        let target: Vec<usize> = (0..nb).map(|b| ((b + 1) * n) / p).collect();
+        let mut lo = vec![0u128; nb];
+        let mut hi = vec![(KEY_RANGE as u128) << 64; nb];
+        let rounds = 96;
+        let mut counts: Vec<Vec<u64>> = vec![vec![0; nb]; p];
+        for _ in 0..rounds {
+            if lo.iter().zip(&hi).all(|(l, h)| l + 1 >= *h) {
+                break;
+            }
+            let mid: Vec<u128> = lo.iter().zip(&hi).map(|(l, h)| (l + h) / 2).collect();
+            for (pe, local) in data.iter().enumerate() {
+                for (b, &m) in mid.iter().enumerate() {
+                    counts[pe][b] = local.partition_point(|e| point(e) < m) as u64;
+                }
+                mach.work(pe, cfg.cost.cmp * nb as f64 * (local.len().max(2) as f64).log2());
+            }
+            allreduce_vec_u64(mach, &pes, &mut counts, |a, b| a + b);
+            let total = &counts[0];
+            for b in 0..nb {
+                if (total[b] as usize) < target[b] {
+                    lo[b] = mid[b];
+                } else {
+                    hi[b] = mid[b];
+                }
+            }
+            for c in counts.iter_mut() {
+                for v in c.iter_mut() {
+                    *v = 0;
+                }
+            }
+        }
+        let splitters: Vec<u128> = hi;
+
+        let mut send: Vec<Vec<Vec<Elem>>> = Vec::with_capacity(p);
+        for pe in 0..p {
+            let local = std::mem::take(&mut data[pe]);
+            mach.work_classify(pe, local.len(), p);
+            let mut buckets: Vec<Vec<Elem>> = vec![Vec::new(); p];
+            for e in local {
+                let b = splitters.partition_point(|&s| s <= point(&e));
+                buckets[b].push(e);
+            }
+            send.push(buckets);
+        }
+        let recv = alltoallv(mach, &pes, send);
+        for (r, runs) in recv.into_iter().enumerate() {
+            let pe = pes[r];
+            let refs: Vec<&[Elem]> = runs.iter().map(|v| v.as_slice()).collect();
+            let merged = multiway_merge(&refs);
+            mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
+            mach.note_mem(pe, merged.len(), "multiway mergesort receive");
+            data[pe] = merged;
+        }
+    }
+
+    // ---- pre-refactor RFIS --------------------------------------------
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum RowClass {
+        Left,
+        Own(usize),
+        Right,
+    }
+
+    fn grid(p: usize) -> (usize, usize) {
+        let d = p.trailing_zeros();
+        let cols = 1usize << (d / 2);
+        (p / cols, cols)
+    }
+
+    #[inline]
+    fn ub(run: &[Elem], key: u64) -> u64 {
+        run.partition_point(|e| e.key <= key) as u64
+    }
+
+    #[inline]
+    fn lb(run: &[Elem], key: u64) -> u64 {
+        run.partition_point(|e| e.key < key) as u64
+    }
+
+    pub fn rfis_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) {
+        let p = cfg.p;
+        assert!(p.is_power_of_two());
+        let n: usize = data.iter().map(Vec::len).sum();
+        if n == 0 {
+            return;
+        }
+        let (rows, cols) = grid(p);
+        sort_all(mach, data, backend);
+
+        let mut row_runs = vec![None; p];
+        for r in 0..rows {
+            let pes: Vec<usize> = (0..cols).map(|c| r * cols + c).collect();
+            let runs = all_gather_merge(mach, &pes, data);
+            for (c, g) in runs.into_iter().enumerate() {
+                row_runs[r * cols + c] = Some(g);
+            }
+        }
+        let mut col_runs = vec![None; p];
+        for c in 0..cols {
+            let pes: Vec<usize> = (0..rows).map(|r| r * cols + c).collect();
+            let runs = all_gather_merge(mach, &pes, data);
+            for (r, g) in runs.into_iter().enumerate() {
+                col_runs[r * cols + c] = Some(g);
+            }
+        }
+
+        let mut ranks: Vec<Vec<u64>> = vec![Vec::new(); p];
+        let mut row_merged: Vec<Vec<Elem>> = vec![Vec::new(); p];
+        for pe in 0..p {
+            let row = row_runs[pe].take().expect("row gather ran");
+            let col = col_runs[pe].take().expect("col gather ran");
+            let mut annotated: Vec<(Elem, RowClass)> = Vec::with_capacity(row.total());
+            {
+                let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+                let (l, o, r) = (&row.left, &row.own, &row.right);
+                while i < l.len() || j < o.len() || k < r.len() {
+                    let lv = l.get(i);
+                    let ov = o.get(j);
+                    let rv = r.get(k);
+                    let pick_l = lv.is_some()
+                        && ov.map_or(true, |x| lv.unwrap() <= x)
+                        && rv.map_or(true, |x| lv.unwrap() <= x);
+                    if pick_l {
+                        annotated.push((l[i], RowClass::Left));
+                        i += 1;
+                    } else if ov.is_some() && rv.map_or(true, |x| ov.unwrap() <= x) {
+                        annotated.push((o[j], RowClass::Own(j)));
+                        j += 1;
+                    } else {
+                        annotated.push((r[k], RowClass::Right));
+                        k += 1;
+                    }
+                }
+            }
+            let (up, own_col, down) = (&col.left, &col.own, &col.right);
+            let mut rk = Vec::with_capacity(annotated.len());
+            for (e, class) in &annotated {
+                let r = match class {
+                    RowClass::Left => ub(up, e.key) + lb(own_col, e.key) + lb(down, e.key),
+                    RowClass::Right => ub(up, e.key) + ub(own_col, e.key) + lb(down, e.key),
+                    RowClass::Own(i) => ub(up, e.key) + *i as u64 + lb(down, e.key),
+                };
+                rk.push(r);
+            }
+            let total = annotated.len() + col.total();
+            mach.work(
+                pe,
+                cfg.cost.cmp * annotated.len() as f64 * ((col.total().max(2)) as f64).log2(),
+            );
+            mach.note_mem(pe, total, "RFIS gather footprint");
+            ranks[pe] = rk;
+            row_merged[pe] = annotated.into_iter().map(|(e, _)| e).collect();
+        }
+
+        for r in 0..rows {
+            let pes: Vec<usize> = (0..cols).map(|c| r * cols + c).collect();
+            if !ranks[pes[0]].is_empty() {
+                allreduce_vec_u64(mach, &pes, &mut ranks, |a, b| a + b);
+            }
+        }
+
+        let dest_pe = |rank: u64| -> usize { ((rank as u128 * p as u128) / n as u128) as usize };
+        let mut in_flight: Vec<Vec<(Elem, usize)>> = vec![Vec::new(); p];
+        for pe in 0..p {
+            let c = pe % cols;
+            let merged = std::mem::take(&mut row_merged[pe]);
+            let rk = std::mem::take(&mut ranks[pe]);
+            mach.work_linear(pe, merged.len());
+            for (e, r) in merged.into_iter().zip(rk) {
+                let dest = dest_pe(r);
+                if dest % cols == c {
+                    in_flight[pe].push((e, dest / cols));
+                }
+            }
+            data[pe].clear();
+        }
+        let row_dims = rows.trailing_zeros();
+        for j in (0..row_dims).rev() {
+            let bit = 1usize << j;
+            for c in 0..cols {
+                let mut outgoing: Vec<Vec<(Elem, usize)>> = vec![Vec::new(); rows];
+                for r in 0..rows {
+                    let pe = r * cols + c;
+                    let (stay, go): (Vec<_>, Vec<_>) = std::mem::take(&mut in_flight[pe])
+                        .into_iter()
+                        .partition(|(_, d)| d & bit == r & bit);
+                    in_flight[pe] = stay;
+                    outgoing[r] = go;
+                }
+                for r in 0..rows {
+                    let pr = r ^ bit;
+                    if r < pr {
+                        mach.xchg(
+                            r * cols + c,
+                            pr * cols + c,
+                            outgoing[r].len(),
+                            outgoing[pr].len(),
+                        );
+                    }
+                }
+                for r in 0..rows {
+                    let pr = r ^ bit;
+                    let incoming = std::mem::take(&mut outgoing[pr]);
+                    let pe = r * cols + c;
+                    in_flight[pe].extend(incoming);
+                    mach.note_mem(pe, in_flight[pe].len(), "RFIS delivery");
+                }
+            }
+        }
+        for pe in 0..p {
+            let mut v: Vec<Elem> =
+                std::mem::take(&mut in_flight[pe]).into_iter().map(|(e, _)| e).collect();
+            mach.work_sort(pe, v.len());
+            v.sort_unstable();
+            data[pe] = v;
+        }
+    }
+
+    // ---- pre-refactor Minisort / GatherM / AllGatherM / selector -------
+
+    pub fn minisort_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) {
+        if data.iter().any(|v| v.len() != 1) {
+            mach.fail(0, "Minisort requires exactly one element per PE (n = p)");
+            return;
+        }
+        let qc = QuickConfig { shuffle: true, tie_break: true, pivot: Pivot::Window, window_k: 2 };
+        quick_sort(mach, data, cfg, backend, &qc);
+    }
+
+    pub fn gatherm_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) {
+        sort_all(mach, data, backend);
+        let pes = Cube::whole(cfg.p).pe_vec();
+        let merged = gather_merge(mach, &pes, data);
+        for v in data.iter_mut() {
+            v.clear();
+        }
+        data[0] = merged;
+    }
+
+    pub fn allgatherm_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) {
+        sort_all(mach, data, backend);
+        let pes = Cube::whole(cfg.p).pe_vec();
+        let runs = all_gather_merge(mach, &pes, data);
+        for (pe, r) in runs.into_iter().enumerate() {
+            data[pe] = r.merged();
+        }
+    }
+
+    fn selector_sort(
+        mach: &mut Machine,
+        data: &mut Vec<Vec<Elem>>,
+        cfg: &RunConfig,
+        backend: &mut dyn SortBackend,
+    ) -> OutputShape {
+        let table = CrossoverTable::JUQUEEN;
+        let n: usize = data.iter().map(Vec::len).sum();
+        let npp = n as f64 / cfg.p as f64;
+        match table.choose(npp) {
+            "GatherM" => {
+                gatherm_sort(mach, data, cfg, backend);
+                OutputShape::RootOnly
+            }
+            "RFIS" => {
+                rfis_sort(mach, data, cfg, backend);
+                OutputShape::Balanced
+            }
+            "RQuick" => {
+                quick_sort(mach, data, cfg, backend, &QuickConfig::robust());
+                OutputShape::Balanced
+            }
+            _ => {
+                rams_sort(mach, data, cfg, backend, &AmsConfig::robust(cfg));
+                OutputShape::Balanced
+            }
+        }
+    }
+
+    // ---- the legacy run harness (the pre-refactor `execute`) -----------
+
+    pub fn run(alg: Algorithm, cfg: &RunConfig, input: Vec<Vec<Elem>>) -> RunReport {
+        let mut mach = Machine::new(cfg.p, cfg.cost);
+        mach.mem_cap_elems = cfg.mem_cap_elems();
+        let reference = input.clone();
+        let mut data = input;
+        let backend: &mut dyn SortBackend = &mut RustSort;
+        let shape = match alg {
+            Algorithm::GatherM => {
+                gatherm_sort(&mut mach, &mut data, cfg, backend);
+                OutputShape::RootOnly
+            }
+            Algorithm::AllGatherM => {
+                allgatherm_sort(&mut mach, &mut data, cfg, backend);
+                OutputShape::Replicated
+            }
+            Algorithm::Rfis => {
+                rfis_sort(&mut mach, &mut data, cfg, backend);
+                OutputShape::Balanced
+            }
+            Algorithm::RQuick => {
+                quick_sort(&mut mach, &mut data, cfg, backend, &QuickConfig::robust());
+                OutputShape::Balanced
+            }
+            Algorithm::NtbQuick => {
+                quick_sort(&mut mach, &mut data, cfg, backend, &QuickConfig::nonrobust());
+                OutputShape::Balanced
+            }
+            Algorithm::Bitonic => {
+                bitonic_sort(&mut mach, &mut data, cfg, backend);
+                OutputShape::Balanced
+            }
+            Algorithm::Rams => {
+                rams_sort(&mut mach, &mut data, cfg, backend, &AmsConfig::robust(cfg));
+                OutputShape::Balanced
+            }
+            Algorithm::NtbAms => {
+                let mut ac = AmsConfig::robust(cfg);
+                ac.tie_break = false;
+                rams_sort(&mut mach, &mut data, cfg, backend, &ac);
+                OutputShape::Balanced
+            }
+            Algorithm::NdmaAms => {
+                let mut ac = AmsConfig::robust(cfg);
+                ac.dma = Dma::Never;
+                rams_sort(&mut mach, &mut data, cfg, backend, &ac);
+                OutputShape::Balanced
+            }
+            Algorithm::HykSort => {
+                hyksort_sort(&mut mach, &mut data, cfg, backend, &HykConfig::default());
+                OutputShape::Balanced
+            }
+            Algorithm::SSort => {
+                ssort_sort(&mut mach, &mut data, cfg, backend, true);
+                OutputShape::Balanced
+            }
+            Algorithm::NsSSort => {
+                ssort_sort(&mut mach, &mut data, cfg, backend, false);
+                OutputShape::Balanced
+            }
+            Algorithm::Minisort => {
+                minisort_sort(&mut mach, &mut data, cfg, backend);
+                OutputShape::Balanced
+            }
+            Algorithm::Mways => {
+                mways_sort(&mut mach, &mut data, cfg, backend);
+                OutputShape::Balanced
+            }
+            Algorithm::Robust => selector_sort(&mut mach, &mut data, cfg, backend),
+        };
+        let crashed = mach.crash().map(|c| c.to_string());
+        let validation = match shape {
+            OutputShape::Balanced => validate(&reference, &data, cfg.epsilon),
+            OutputShape::RootOnly => {
+                let mut proj = vec![Vec::new(); cfg.p];
+                proj[0] = data[0].clone();
+                let mut v = validate(&reference, &proj, f64::INFINITY);
+                v.balanced = false;
+                v
+            }
+            OutputShape::Replicated => validate_replicated(&reference, &data),
+        };
+        RunReport {
+            algorithm: alg.name(),
+            time: mach.time(),
+            stats: mach.stats,
+            is_globally_sorted: validation.globally_sorted && crashed.is_none(),
+            validation,
+            output_shape: shape,
+            crashed,
+            wall_ms: 0.0,
+            output: data,
+        }
+    }
+}
+
+/// All 15 algorithms × a (distribution, size) grid: the verbatim
+/// pre-refactor oracle and the Exchange-based `Runner` agree bit for bit.
+/// Out-of-range combinations (Minisort on m ≠ 1, Bitonic on sparse) are
+/// included — their *crash reports* must agree too.
+#[test]
+fn exchange_path_matches_legacy_for_all_algorithms() {
+    let dists = [Distribution::Uniform, Distribution::Zero, Distribution::Staggered];
+    for &dist in &dists {
+        for m in [1usize, 4, 64] {
+            let cfg = RunConfig::default().with_p(16).with_n_per_pe(m);
+            for alg in Algorithm::ALL {
+                let ctx = format!("{alg:?}/{dist:?}/m={m}");
+                let input = generate(&cfg, dist);
+                let want = legacy::run(alg, &cfg, input.clone());
+                let mut runner = Runner::new(cfg.clone());
+                let got = runner.run_algorithm(alg, input);
+                assert_reports_identical(&want, &got, &ctx);
+            }
+        }
+    }
+}
+
+/// The sparse regime (n < p): the selector hands off to GatherM, RFIS
+/// routes across a mostly-empty grid, Bitonic refuses the input.
+#[test]
+fn exchange_path_matches_legacy_on_sparse_inputs() {
+    let mut cfg = RunConfig::default().with_p(32).with_sparsity(8);
+    cfg.mem_cap_factor = None;
+    for alg in Algorithm::ALL {
+        let ctx = format!("{alg:?}/sparse");
+        let input = generate(&cfg, Distribution::Uniform);
+        let want = legacy::run(alg, &cfg, input.clone());
+        let mut runner = Runner::new(cfg.clone());
+        let got = runner.run_algorithm(alg, input);
+        assert_reports_identical(&want, &got, &ctx);
+    }
+}
+
+/// Memory-capped hard instances: the crash reports (PE, resident count,
+/// context string) of nonrobust algorithms must survive the port
+/// byte-for-byte.
+#[test]
+fn exchange_path_matches_legacy_crash_reports() {
+    let mut cfg = RunConfig::default().with_p(16).with_n_per_pe(256);
+    cfg.mem_cap_factor = Some(4.0);
+    for dist in [Distribution::Zero, Distribution::DeterDupl] {
+        for alg in [
+            Algorithm::HykSort,
+            Algorithm::NtbQuick,
+            Algorithm::NtbAms,
+            Algorithm::SSort,
+            Algorithm::Rams,
+            Algorithm::RQuick,
+        ] {
+            let ctx = format!("{alg:?}/{dist:?}/capped");
+            let input = generate(&cfg, dist);
+            let want = legacy::run(alg, &cfg, input.clone());
+            let mut runner = Runner::new(cfg.clone());
+            let got = runner.run_algorithm(alg, input);
+            assert_reports_identical(&want, &got, &ctx);
+        }
+    }
+}
+
+/// The two shuffle primitives directly against their verbatim legacy
+/// twins: same RNG stream, same clocks/stats bits, same element placement.
+/// (`direct_shuffle` is not reachable through any `Algorithm`, so the
+/// RunReport grids above never cover it.)
+#[test]
+fn shuffles_match_legacy_bit_for_bit() {
+    use rmps::rng::Rng;
+    use rmps::sim::{Cube, Machine};
+    for seed in [1u64, 7, 42] {
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(24).with_seed(seed);
+        for direct in [false, true] {
+            let input = generate(&cfg, Distribution::Mirrored);
+            let mut want_data = input.clone();
+            let mut got_data = input;
+            let mut want_mach = Machine::new(cfg.p, cfg.cost);
+            let mut got_mach = Machine::new(cfg.p, cfg.cost);
+            let mut want_rng = Rng::seeded(seed, 99);
+            let mut got_rng = Rng::seeded(seed, 99);
+            if direct {
+                legacy::direct_shuffle(&mut want_mach, Cube::whole(cfg.p), &mut want_data, &mut want_rng);
+                rmps::shuffle::direct_shuffle(&mut got_mach, Cube::whole(cfg.p), &mut got_data, &mut got_rng);
+            } else {
+                legacy::hypercube_shuffle(&mut want_mach, Cube::whole(cfg.p), &mut want_data, &mut want_rng);
+                rmps::shuffle::hypercube_shuffle(&mut got_mach, Cube::whole(cfg.p), &mut got_data, &mut got_rng);
+            }
+            let ctx = format!("seed {seed} direct={direct}");
+            assert_eq!(want_data, got_data, "{ctx}: element placement");
+            for pe in 0..cfg.p {
+                assert_eq!(
+                    want_mach.clock(pe).to_bits(),
+                    got_mach.clock(pe).to_bits(),
+                    "{ctx}: clock pe {pe}"
+                );
+            }
+            assert_eq!(want_mach.stats.messages, got_mach.stats.messages, "{ctx}");
+            assert_eq!(want_mach.stats.words, got_mach.stats.words, "{ctx}");
+            assert_eq!(want_mach.stats.max_degree, got_mach.stats.max_degree, "{ctx}");
+            assert_eq!(want_mach.stats.max_mem_elems, got_mach.stats.max_mem_elems, "{ctx}");
+            assert_eq!(
+                want_mach.stats.local_work.to_bits(),
+                got_mach.stats.local_work.to_bits(),
+                "{ctx}: local_work"
+            );
+        }
+    }
+}
+
+/// The Fig. 2c regime that actually triggers deterministic message
+/// assignment (fan-in ≫ k on AllToOne): the two-hop payload movement of
+/// the Exchange port must reproduce the legacy overlay charging exactly.
+#[test]
+fn exchange_path_matches_legacy_in_dma_regime() {
+    let cfg = RunConfig::default().with_p(512).with_n_per_pe(512);
+    for alg in [Algorithm::Rams, Algorithm::NdmaAms] {
+        let ctx = format!("{alg:?}/AllToOne/dma");
+        let input = generate(&cfg, Distribution::AllToOne);
+        let want = legacy::run(alg, &cfg, input.clone());
+        let mut runner = Runner::new(cfg.clone());
+        let got = runner.run_algorithm(alg, input);
+        assert_reports_identical(&want, &got, &ctx);
+    }
+}

@@ -1,0 +1,102 @@
+//! The data-plane invariant, machine-wide: across a randomized
+//! algorithms × distributions grid, the element count **charged** to the
+//! α-β cost model through the [`rmps::sim::Exchange`] equals the element
+//! count **delivered** to remote PEs. Every `Exchange::deliver` also
+//! `debug_assert!`s the per-round equality, so running this grid in a
+//! debug build exercises the assertion on every communication round of
+//! every algorithm.
+
+use rmps::algorithms::{Algorithm, Sorter};
+use rmps::config::RunConfig;
+use rmps::input::{generate, Distribution};
+use rmps::localsort::RustSort;
+use rmps::rng::Rng;
+use rmps::sim::Machine;
+
+/// Run one cell directly on a `Machine` (the `Runner` hides its machine,
+/// and the invariant counters live on the machine).
+fn charged_and_moved(alg: Algorithm, cfg: &RunConfig, dist: Distribution) -> (u64, u64, u64) {
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    mach.mem_cap_elems = cfg.mem_cap_elems();
+    let mut data = generate(cfg, dist);
+    let sorter = alg.sorter();
+    sorter.sort(&mut mach, &mut data, cfg, &mut RustSort);
+    (mach.exchange_charged(), mach.exchange_moved(), mach.stats.words)
+}
+
+#[test]
+fn charged_equals_moved_across_randomized_grid() {
+    let mut rng = Rng::seeded(0xE0C4A46E, 0);
+    let dists = Distribution::ALL;
+    for case in 0..60 {
+        let alg = Algorithm::ALL[rng.below(Algorithm::ALL.len() as u64) as usize];
+        let dist = dists[rng.below(dists.len() as u64) as usize];
+        let p = 1usize << (2 + rng.below(3)); // 4..16
+        let m = match alg {
+            Algorithm::Minisort => 1, // only valid at n = p
+            _ => 1usize << rng.below(7), // 1..64
+        };
+        let cfg = RunConfig::default()
+            .with_p(p)
+            .with_n_per_pe(m)
+            .with_seed(0xBEEF + case as u64);
+        let ctx = format!("case {case}: {alg:?}/{dist:?}/p={p}/m={m}");
+        let (charged, moved, words) = charged_and_moved(alg, &cfg, dist);
+        assert_eq!(charged, moved, "{ctx}: charged element count must equal moved");
+        assert!(
+            charged <= words,
+            "{ctx}: element words ({charged}) cannot exceed total words ({words})"
+        );
+    }
+}
+
+#[test]
+fn every_algorithm_moves_data_through_the_plane() {
+    // a dense run on p > 1 PEs must move elements — and every moved
+    // element must have been charged
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(16);
+    for alg in Algorithm::ALL {
+        if alg == Algorithm::Minisort {
+            continue; // requires n = p; covered below
+        }
+        let (charged, moved, _) = charged_and_moved(alg, &cfg, Distribution::Staggered);
+        assert_eq!(charged, moved, "{alg:?}");
+        assert!(charged > 0, "{alg:?} moved no elements through the data plane");
+    }
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(1);
+    let (charged, moved, _) = charged_and_moved(Algorithm::Minisort, &cfg, Distribution::Uniform);
+    assert_eq!(charged, moved, "Minisort");
+    assert!(charged > 0, "Minisort moved no elements through the data plane");
+}
+
+#[test]
+fn invariant_holds_under_memory_cap_crashes() {
+    // crashed runs abandon mid-superstep state; whatever was delivered
+    // before the crash must still balance what was charged
+    let mut cfg = RunConfig::default().with_p(16).with_n_per_pe(256);
+    cfg.mem_cap_factor = Some(4.0);
+    for dist in [Distribution::Zero, Distribution::DeterDupl] {
+        for alg in [Algorithm::HykSort, Algorithm::NtbQuick, Algorithm::NtbAms, Algorithm::SSort] {
+            let (charged, moved, _) = charged_and_moved(alg, &cfg, dist);
+            assert_eq!(charged, moved, "{alg:?}/{dist:?}");
+        }
+    }
+}
+
+#[test]
+fn runner_reuse_keeps_counters_per_run() {
+    // Machine::reset must zero the counters between batched runs
+    let cfg = RunConfig::default().with_p(8).with_n_per_pe(8);
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    let sorter = Algorithm::RQuick.sorter();
+    let mut data = generate(&cfg, Distribution::Uniform);
+    sorter.sort(&mut mach, &mut data, &cfg, &mut RustSort);
+    let first = mach.exchange_charged();
+    assert!(first > 0);
+    mach.reset(cfg.p, cfg.cost);
+    assert_eq!(mach.exchange_charged(), 0);
+    let mut data = generate(&cfg, Distribution::Uniform);
+    sorter.sort(&mut mach, &mut data, &cfg, &mut RustSort);
+    assert_eq!(mach.exchange_charged(), first, "deterministic rerun, pooled machine");
+    assert_eq!(mach.exchange_charged(), mach.exchange_moved());
+}
