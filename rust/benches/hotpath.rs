@@ -63,13 +63,25 @@ fn alloc_count() -> u64 {
     ALLOC_COUNT.load(Relaxed)
 }
 
+/// Intra-run parallelism measurement of one algorithm: serial vs pooled
+/// wallclock (same simulated results, asserted), plus the warm
+/// allocation count under each mode.
+struct PePar {
+    pe_jobs: usize,
+    ms_pe1: f64,
+    ms_pen: f64,
+    allocs_warm_pe1: u64,
+    allocs_warm_pen: u64,
+}
+
 /// One measured line: label, median ms, Melem/s, and (for end-to-end
-/// algorithm runs) cold/warm allocation counts.
+/// algorithm runs) cold/warm allocation counts and the pe-jobs split.
 struct Line {
     name: String,
     ms: f64,
     rate: f64,
     allocs: Option<(u64, u64)>,
+    pe_par: Option<PePar>,
 }
 
 fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Line>) {
@@ -78,8 +90,9 @@ fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Lin
 
     // allocation counting uses a lean runner (no reference clone, no kept
     // output) and clones the input *outside* the counted window, so the
-    // cold/warm delta isolates the data-plane pool warmup
-    let mut lean = Runner::new(cfg.clone()).validate(false).keep_output(false);
+    // cold/warm delta isolates the data-plane pool warmup. pe_jobs = 1
+    // keeps the historical serial counting semantics.
+    let mut lean = Runner::new(cfg.clone()).validate(false).keep_output(false).pe_jobs(1);
     // cold: fresh machine, empty data-plane pools
     let run_input = input.clone();
     let before = alloc_count();
@@ -102,9 +115,36 @@ fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Lin
     });
     let n = (p * m) as f64;
     let rate = n / ms / 1e3;
+
+    // intra-run parallelism: pe_jobs = 1 vs pe_jobs = host on a lean
+    // warmed runner — same simulated time (asserted bit-for-bit, the
+    // determinism contract), different host wallclock; the warm
+    // allocation count must not depend on the mode either
+    let pe_n = rmps::exec::available_jobs().max(2);
+    let measure = |pe_jobs: usize| -> (f64, u64, u64) {
+        let mut lean = Runner::new(cfg.clone()).validate(false).keep_output(false).pe_jobs(pe_jobs);
+        let r = lean.run_algorithm(alg, input.clone()); // warm the pools
+        let sim_time = r.time;
+        let before = alloc_count();
+        let r = lean.run_algorithm(alg, input.clone());
+        let allocs_warm = alloc_count() - before;
+        assert_eq!(r.time.to_bits(), sim_time.to_bits());
+        let ms = common::time_ms(reps, || {
+            let r = lean.run_algorithm(alg, input.clone());
+            assert!(r.crashed.is_none());
+            r.time
+        });
+        (ms, allocs_warm, sim_time.to_bits())
+    };
+    let (ms_pe1, allocs_warm_pe1, bits1) = measure(1);
+    let (ms_pen, allocs_warm_pen, bits_n) = measure(pe_n);
+    assert_eq!(bits1, bits_n, "{}: pe_jobs must not change simulated time", alg.name());
+    let speedup = ms_pe1 / ms_pen.max(1e-9);
+
     println!(
         "{:>10} p={p:<5} n/p={m:<6} {ms:>9.1} ms host   {rate:>7.2} Melem/s   \
-         allocs {allocs_cold:>8} cold / {allocs_warm:>8} warm",
+         allocs {allocs_cold:>8} cold / {allocs_warm:>8} warm   \
+         pe1 {ms_pe1:>8.1} ms / pe{pe_n} {ms_pen:>8.1} ms ({speedup:>4.2}x)",
         alg.name()
     );
     out.push(Line {
@@ -112,6 +152,7 @@ fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Lin
         ms,
         rate,
         allocs: Some((allocs_cold, allocs_warm)),
+        pe_par: Some(PePar { pe_jobs: pe_n, ms_pe1, ms_pen, allocs_warm_pe1, allocs_warm_pen }),
     });
 }
 
@@ -144,7 +185,7 @@ fn main() {
     });
     let rate = (2 * kn) as f64 / ms / 1e3;
     println!("merge_into 2-way       {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push(Line { name: format!("merge_into 2x{kn}"), ms, rate, allocs: None });
+    lines.push(Line { name: format!("merge_into 2x{kn}"), ms, rate, allocs: None, pe_par: None });
 
     let runs_n = 64;
     let run_len = sz(1 << 14, 1 << 8);
@@ -160,7 +201,7 @@ fn main() {
     let ms = common::time_ms(reps, || multiway_merge(&refs).len());
     let rate = (runs_n * run_len) as f64 / ms / 1e3;
     println!("multiway_merge 64-way  {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push(Line { name: format!("multiway_merge 64x{run_len}"), ms, rate, allocs: None });
+    lines.push(Line { name: format!("multiway_merge 64x{run_len}"), ms, rate, allocs: None, pe_par: None });
 
     let pn = sz(1 << 20, 1 << 13);
     let data: Vec<Elem> = (0..pn).map(|i| Elem::new(rng.next_u64(), 0, i)).collect();
@@ -171,11 +212,11 @@ fn main() {
     let ms = common::time_ms(reps, || partition(&data, &tree, true).len());
     let rate = pn as f64 / ms / 1e3;
     println!("partition s=127 TB     {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push(Line { name: format!("partition {pn} s=127 TB"), ms, rate, allocs: None });
+    lines.push(Line { name: format!("partition {pn} s=127 TB"), ms, rate, allocs: None, pe_par: None });
     let ms = common::time_ms(reps, || partition(&data, &tree, false).len());
     let rate = pn as f64 / ms / 1e3;
     println!("partition s=127        {ms:>9.1} ms   {rate:>7.2} Melem/s");
-    lines.push(Line { name: format!("partition {pn} s=127"), ms, rate, allocs: None });
+    lines.push(Line { name: format!("partition {pn} s=127"), ms, rate, allocs: None, pe_par: None });
 
     let results: Vec<String> = lines
         .iter()
@@ -186,8 +227,25 @@ fn main() {
                 }
                 None => String::new(),
             };
+            let pe_par = match &l.pe_par {
+                Some(pp) => {
+                    let speedup = pp.ms_pe1 / pp.ms_pen.max(1e-9);
+                    format!(
+                        ", \"pe_jobs\": {}, \"ms_pe1\": {:.3}, \"ms_pen\": {:.3}, \
+                         \"pe_speedup\": {:.3}, \"allocs_warm_pe1\": {}, \
+                         \"allocs_warm_pen\": {}",
+                        pp.pe_jobs,
+                        pp.ms_pe1,
+                        pp.ms_pen,
+                        speedup,
+                        pp.allocs_warm_pe1,
+                        pp.allocs_warm_pen
+                    )
+                }
+                None => String::new(),
+            };
             format!(
-                "{{\"name\": {}, \"ms\": {:.3}, \"melem_per_s\": {:.3}{allocs}}}",
+                "{{\"name\": {}, \"ms\": {:.3}, \"melem_per_s\": {:.3}{allocs}{pe_par}}}",
                 common::json_str(&l.name),
                 l.ms,
                 l.rate

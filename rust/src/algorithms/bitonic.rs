@@ -10,7 +10,7 @@
 use crate::config::RunConfig;
 use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
-use crate::sim::Machine;
+use crate::sim::{Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -87,18 +87,21 @@ pub fn sort(
                 }
             }
             let inboxes = ex.deliver(mach);
-            for (pe, slot) in data.iter_mut().enumerate() {
+            // compare-split: one PE task per member (each pair's runs are
+            // read back from both inboxes, so tasks share nothing mutable)
+            mach.par_pes(0, ParSpec::work(2 * m * p).bufs(1), &mut data[..], |ctx, slot| {
+                let pe = ctx.pe();
                 let partner = pe ^ bit;
                 let mine = inboxes.single(partner);
                 let theirs = inboxes.single(pe);
                 let ascending = pe & (1 << (i + 1)) == 0;
                 let keep_low = (pe & bit == 0) == ascending;
-                let mut out = mach.take_buf();
+                let mut out = ctx.take_buf();
                 compare_split_into(mine, theirs, keep_low, &mut out);
                 *slot = out;
-                mach.work_linear(pe, 2 * m);
-                mach.note_mem(pe, 2 * m, "bitonic compare-split");
-            }
+                ctx.work_linear(2 * m);
+                ctx.note_mem(2 * m, "bitonic compare-split");
+            });
             mach.recycle(inboxes);
         }
     }

@@ -11,10 +11,10 @@
 //!   but there is no shuffle, so worst-case placements still imbalance.
 
 use crate::config::RunConfig;
-use crate::elements::{multiway_merge, Elem, Key};
+use crate::elements::{multiway_merge_into, Elem, Key};
 use crate::localsort::{sort_all, SortBackend};
 use crate::rng::Rng;
-use crate::sim::{all_gather_merge, Cube, Machine};
+use crate::sim::{all_gather_merge, Cube, Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -109,32 +109,41 @@ fn level(
     // --- partition (key-only) and k-way exchange ----------------------
     // every bucket is posted straight to its target PE: the data plane
     // coalesces, charges the irregular round, and delivers — no
-    // per-level outgoing/incoming tables
+    // per-level outgoing/incoming tables. Bucket building runs as one PE
+    // task per member; posting keeps the historical (rank, bucket) order.
     let q_sub = q / k;
+    let base = group.base();
+    let total: usize = pes.iter().map(|&pe| data[pe].len()).sum();
+    let outs: Vec<Vec<Vec<Elem>>> =
+        mach.par_pes(base, ParSpec::work(total).bufs(k + 1), &mut data[base..base + q], |ctx, slot| {
+            let local = std::mem::take(slot);
+            ctx.work_classify(local.len(), k);
+            let mut buckets: Vec<Vec<Elem>> = (0..k).map(|_| ctx.take_buf()).collect();
+            for &e in &local {
+                let b = splitters.partition_point(|&s| s < e.key);
+                buckets[b].push(e);
+            }
+            ctx.recycle_buf(local);
+            buckets
+        });
     let mut ex = mach.exchange();
-    for r in 0..q {
-        let pe = pes[r];
-        let local = std::mem::take(&mut data[pe]);
-        mach.work_classify(pe, local.len(), k);
-        let mut buckets: Vec<Vec<Elem>> = (0..k).map(|_| mach.take_buf()).collect();
-        for e in local {
-            let b = splitters.partition_point(|&s| s < e.key);
-            buckets[b].push(e);
-        }
+    for (r, buckets) in outs.into_iter().enumerate() {
         // bucket b goes to subgroup b, target rank = own rank within sub
         for (b, bucket) in buckets.into_iter().enumerate() {
             let target = subgroups[b].pe(r % q_sub);
-            ex.post(pe, target, bucket);
+            ex.post(pes[r], target, bucket);
         }
     }
     let inboxes = ex.deliver(mach);
-    for &pe in &pes {
-        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
-        let merged = multiway_merge(&refs);
-        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (refs.len().max(2) as f64).log2());
-        mach.note_mem(pe, merged.len(), "HykSort k-way exchange");
-        data[pe] = merged;
-    }
+    let total_recv: usize = pes.iter().map(|&pe| inboxes.total(pe)).sum();
+    mach.par_pes(base, ParSpec::work(2 * total_recv).bufs(1), &mut data[base..base + q], |ctx, slot| {
+        let refs: Vec<&[Elem]> = inboxes.runs(ctx.pe()).iter().map(|(_, v)| v.as_slice()).collect();
+        let mut merged = ctx.take_buf();
+        multiway_merge_into(&refs, &mut merged, ctx.merge_scratch());
+        ctx.work(cfg.cost.cmp * merged.len() as f64 * (refs.len().max(2) as f64).log2());
+        ctx.note_mem(merged.len(), "HykSort k-way exchange");
+        *slot = merged;
+    });
     mach.recycle(inboxes);
 }
 

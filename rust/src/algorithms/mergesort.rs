@@ -13,10 +13,10 @@
 //! is robust against duplicates by construction.
 
 use crate::config::RunConfig;
-use crate::elements::{multiway_merge, Elem};
+use crate::elements::{multiway_merge_into, Elem};
 use crate::input::KEY_RANGE;
 use crate::localsort::{sort_all, SortBackend};
-use crate::sim::{allreduce_vec_u64, Cube, Machine};
+use crate::sim::{allreduce_vec_u64, Cube, Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -57,12 +57,17 @@ pub fn sort(
             break;
         }
         let mid: Vec<u128> = lo.iter().zip(&hi).map(|(l, h)| (l + h) / 2).collect();
-        // local counts below each mid (binary searches on sorted runs)
-        for (pe, local) in data.iter().enumerate() {
-            for (b, &m) in mid.iter().enumerate() {
-                counts[pe][b] = local.partition_point(|e| point(e) < m) as u64;
-            }
-            mach.work(pe, cfg.cost.cmp * nb as f64 * (local.len().max(2) as f64).log2());
+        // local counts below each mid (binary searches on sorted runs) —
+        // one PE task per member, reading its own run
+        {
+            let data_ref: &[Vec<Elem>] = data;
+            mach.par_pes(0, ParSpec::work(n + p * nb), &mut counts, |ctx, cnt| {
+                let local = &data_ref[ctx.pe()];
+                for (b, &m) in mid.iter().enumerate() {
+                    cnt[b] = local.partition_point(|e| point(e) < m) as u64;
+                }
+                ctx.work(cfg.cost.cmp * nb as f64 * (local.len().max(2) as f64).log2());
+            });
         }
         allreduce_vec_u64(mach, &pes, &mut counts, |a, b| a + b);
         let total = &counts[0];
@@ -83,15 +88,22 @@ pub fn sort(
     let splitters: Vec<u128> = hi;
 
     // --- perfect partition + direct delivery through the data plane ----
+    // bucket building runs as one PE task per member; posting (pure
+    // pointer moves, in the historical (pe, bucket) order) stays serial
+    let outs: Vec<Vec<Vec<Elem>>> =
+        mach.par_pes(0, ParSpec::work(n).bufs(p + 1), &mut *data, |ctx, slot| {
+            let local = std::mem::take(slot);
+            ctx.work_classify(local.len(), p);
+            let mut buckets: Vec<Vec<Elem>> = (0..p).map(|_| ctx.take_buf()).collect();
+            for &e in &local {
+                let b = splitters.partition_point(|&s| s <= point(&e));
+                buckets[b].push(e);
+            }
+            ctx.recycle_buf(local);
+            buckets
+        });
     let mut ex = mach.exchange();
-    for pe in 0..p {
-        let local = std::mem::take(&mut data[pe]);
-        mach.work_classify(pe, local.len(), p);
-        let mut buckets: Vec<Vec<Elem>> = (0..p).map(|_| mach.take_buf()).collect();
-        for e in local {
-            let b = splitters.partition_point(|&s| s <= point(&e));
-            buckets[b].push(e);
-        }
+    for (pe, buckets) in outs.into_iter().enumerate() {
         for (t, bucket) in buckets.into_iter().enumerate() {
             ex.post(pe, t, bucket);
         }
@@ -100,13 +112,15 @@ pub fn sort(
     for &pe in &pes {
         mach.note_mem(pe, inboxes.total(pe), "alltoallv");
     }
-    for &pe in &pes {
-        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
-        let merged = multiway_merge(&refs);
-        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
-        mach.note_mem(pe, merged.len(), "multiway mergesort receive");
-        data[pe] = merged;
-    }
+    let total_recv: usize = pes.iter().map(|&pe| inboxes.total(pe)).sum();
+    mach.par_pes(0, ParSpec::work(2 * total_recv).bufs(1), &mut *data, |ctx, slot| {
+        let refs: Vec<&[Elem]> = inboxes.runs(ctx.pe()).iter().map(|(_, v)| v.as_slice()).collect();
+        let mut merged = ctx.take_buf();
+        multiway_merge_into(&refs, &mut merged, ctx.merge_scratch());
+        ctx.work(cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
+        ctx.note_mem(merged.len(), "multiway mergesort receive");
+        *slot = merged;
+    });
     mach.recycle(inboxes);
 }
 

@@ -16,7 +16,7 @@ use crate::localsort::{sort_all, SortBackend};
 use crate::median::median_binary;
 use crate::rng::Rng;
 use crate::shuffle::hypercube_shuffle;
-use crate::sim::{bcast_cost, Cube, Machine};
+use crate::sim::{bcast_cost, Cube, Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -141,13 +141,12 @@ pub fn sort(
     sort_all(mach, data, backend);
 
     let mut cubes = vec![Cube::whole(p)];
-    let mut merge_buf: Vec<Elem> = Vec::new();
     while cubes[0].dim > 0 {
         let mut next = Vec::with_capacity(cubes.len() * 2);
         for cube in &cubes {
             let pes = cube.pe_vec();
             if let Some(s) = select_pivot(mach, &pes, data, qc, &mut rng) {
-                exchange_level(mach, cube, data, s, qc.tie_break, &mut merge_buf);
+                exchange_level(mach, cube, data, s, qc.tie_break);
             }
             // ISEMPTY(s): nothing to split — members keep (empty) data
             let (lo, hi) = cube.split();
@@ -162,54 +161,56 @@ pub fn sort(
 }
 
 /// One quicksort exchange along the cube's highest dimension.
-fn exchange_level(
-    mach: &mut Machine,
-    cube: &Cube,
-    data: &mut [Vec<Elem>],
-    s: Key,
-    tie_break: bool,
-    merge_buf: &mut Vec<Elem>,
-) {
+fn exchange_level(mach: &mut Machine, cube: &Cube, data: &mut [Vec<Elem>], s: Key, tie_break: bool) {
     let j = cube.dim - 1;
     let bit = 1usize << j;
     let size = cube.size();
     let base = cube.base();
-    // split all members
-    let mut cuts: Vec<usize> = Vec::with_capacity(size);
-    for r in 0..size {
-        let a = &data[base + r];
-        let (_, cut) = split_run(a, s, tie_break);
-        mach.work(base + r, 2.0 * (a.len().max(2) as f64).log2()); // two binary searches
-        cuts.push(cut);
-    }
+    let total: usize = data[base..base + size].iter().map(Vec::len).sum();
+    // split + outgoing-half staging, one PE task per member (settled in
+    // PE order — the historical split-loop charge sequence)
+    let outs: Vec<Vec<Elem>> = mach.par_pes(
+        base,
+        ParSpec::work(total).bufs(1),
+        &mut data[base..base + size],
+        |ctx, run| {
+            let (_, cut) = split_run(run, s, tie_break);
+            ctx.work(2.0 * (run.len().max(2) as f64).log2()); // two binary searches
+            let keep_low = ctx.rank() & bit == 0;
+            let mut out = ctx.take_buf();
+            if keep_low {
+                out.extend_from_slice(&run[cut..]); // ship R
+                run.truncate(cut);
+            } else {
+                out.extend_from_slice(&run[..cut]); // ship L, keep R
+                let keep = run.len() - cut;
+                run.copy_within(cut.., 0);
+                run.truncate(keep);
+            }
+            out
+        },
+    );
     // pairwise exchange through the data plane: the low partner ships its
     // R half, the high partner its L half, in one pooled payload each —
     // charging and movement are the same call
     let mut ex = mach.exchange();
-    for r in 0..size {
-        let pe = base + r;
-        let keep_low = r & bit == 0;
-        let run = &mut data[pe];
-        let mut out = mach.take_buf();
-        if keep_low {
-            out.extend_from_slice(&run[cuts[r]..]); // ship R
-            run.truncate(cuts[r]);
-        } else {
-            out.extend_from_slice(&run[..cuts[r]]); // ship L, keep R
-            let keep = run.len() - cuts[r];
-            run.copy_within(cuts[r].., 0);
-            run.truncate(keep);
-        }
-        ex.xchg_leg(pe, base + (r ^ bit), out);
+    for (r, out) in outs.into_iter().enumerate() {
+        ex.xchg_leg(base + r, base + (r ^ bit), out);
     }
     let inboxes = ex.deliver(mach);
-    for r in 0..size {
-        let pe = base + r;
-        merge_into(&data[pe], inboxes.single(pe), merge_buf);
-        std::mem::swap(&mut data[pe], merge_buf);
-        mach.work_linear(pe, data[pe].len());
-        mach.note_mem(pe, data[pe].len(), "quicksort exchange");
-    }
+    let total_recv: usize = (0..size).map(|r| inboxes.total(base + r)).sum();
+    mach.par_pes(
+        base,
+        ParSpec::work(total + total_recv).bufs(1),
+        &mut data[base..base + size],
+        |ctx, run| {
+            let mut merged = ctx.take_buf();
+            merge_into(run, inboxes.single(ctx.pe()), &mut merged);
+            ctx.recycle_buf(std::mem::replace(run, merged));
+            ctx.work_linear(run.len());
+            ctx.note_mem(run.len(), "quicksort exchange");
+        },
+    );
     mach.recycle(inboxes);
 }
 

@@ -23,11 +23,11 @@
 //! 6. receivers merge their runs; recurse into the subgroups.
 
 use crate::config::RunConfig;
-use crate::elements::{multiway_merge, Elem};
+use crate::elements::{multiway_merge_into, Elem};
 use crate::localsort::{sort_all, SortBackend};
-use crate::partition::{partition_pooled, pick_splitters, SplitterTree};
+use crate::partition::{partition_ctx, pick_splitters, SplitterTree};
 use crate::rng::Rng;
-use crate::sim::{all_gather_merge, prefix_sum_vec, Cube, Machine};
+use crate::sim::{all_gather_merge, prefix_sum_vec, Cube, Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -130,7 +130,8 @@ fn level(
 
     // --- sampling with position tie-breakers ---------------------------
     // total sample ≈ 4·nb, but never more than what a PE's memory budget
-    // tolerates after the all-gather (the ranked sample is replicated)
+    // tolerates after the all-gather (the ranked sample is replicated).
+    // Sequential: every member draws from one shared RNG stream.
     let mut samples: Vec<Vec<Elem>> = vec![Vec::new(); data.len()];
     let budget = mach.mem_cap_elems.unwrap_or(usize::MAX).min(4 * nb.max(k));
     let s_loc_target = (budget as f64 / q as f64).ceil() as usize;
@@ -150,15 +151,27 @@ fn level(
     let tree = SplitterTree::new(&splitters);
 
     // --- local partition with (or without) tie-breaking ----------------
+    // the splitter-tree descent over every element is the level's hottest
+    // local phase: one PE task per member, buckets from the task stash
+    let base = group.base();
     let mut buckets: Vec<Vec<Vec<Elem>>> = vec![Vec::new(); data.len()];
     let mut counts: Vec<Vec<usize>> = Vec::with_capacity(q);
-    for &pe in &pes {
-        let local = std::mem::take(&mut data[pe]);
-        mach.work_classify(pe, local.len(), nb + 1);
-        let parts = partition_pooled(mach, &local, &tree, ac.tie_break);
-        mach.recycle_buf(local);
+    let total: usize = pes.iter().map(|&pe| data[pe].len()).sum();
+    let parts_list: Vec<Vec<Vec<Elem>>> = mach.par_pes(
+        base,
+        ParSpec::work(total).bufs(nb + 2),
+        &mut data[base..base + q],
+        |ctx, slot| {
+            let local = std::mem::take(slot);
+            ctx.work_classify(local.len(), nb + 1);
+            let parts = partition_ctx(ctx, &local, &tree, ac.tie_break);
+            ctx.recycle_buf(local);
+            parts
+        },
+    );
+    for (r, parts) in parts_list.into_iter().enumerate() {
         counts.push(parts.iter().map(Vec::len).collect());
-        buckets[pe] = parts;
+        buckets[base + r] = parts;
     }
 
     // --- histograms + greedy contiguous bucket→subgroup assignment -----
@@ -213,7 +226,11 @@ fn level(
         end: usize,
     }
     let mut msgs: Vec<Msg> = Vec::new();
+    // per-sender range within `msgs` (sender-major build order) — the
+    // unit of the parallel payload-staging tasks below
+    let mut sender_spans: Vec<(usize, usize)> = Vec::with_capacity(q);
     for (r, &pe) in pes.iter().enumerate() {
+        let span_start = msgs.len();
         let pre = &prefixes[r].0;
         for bkt in 0..=nb {
             let len = buckets[pe][bkt].len();
@@ -240,6 +257,7 @@ fn level(
                 local_start = local_end;
             }
         }
+        sender_spans.push((span_start, msgs.len()));
     }
 
     // --- DMA decision (fan-in of the direct wire pattern) ---------------
@@ -283,25 +301,42 @@ fn level(
         // scatter round to the final targets. Runs are tagged with their
         // final target so the entry PE can forward them — every PE sends
         // and receives Θ(k) messages, at the price of the group-internal
-        // second hop.
+        // second hop. The payload staging (the element copies) runs as one
+        // PE task per sender; posting stays serial in the historical
+        // sender-major msgs order.
+        let sender_runs: Vec<Vec<(usize, u64, Vec<Elem>)>> = mach.par_pes_on(
+            &pes,
+            ParSpec::work(grand_total).bufs(2 * k),
+            &mut sender_spans,
+            |ctx, span| {
+                let (lo, hi) = *span;
+                let from = ctx.pe();
+                let mut out: Vec<(usize, u64, Vec<Elem>)> = Vec::with_capacity(hi - lo);
+                let mut i = lo;
+                while i < hi {
+                    // msgs are sender-major with nondecreasing bucket, so
+                    // the (sender, subgroup) aggregates are contiguous
+                    let g = assignment[msgs[i].bucket];
+                    let entry = subgroups[g].pe(group.rank(from) % q_sub);
+                    let mut total = 0usize;
+                    while i < hi && assignment[msgs[i].bucket] == g {
+                        let m = &msgs[i];
+                        let mut run = ctx.take_buf();
+                        run.extend_from_slice(&buckets[m.from_pe][m.bucket][m.start..m.end]);
+                        total += run.len();
+                        out.push((entry, m.to_pe as u64, run));
+                        i += 1;
+                    }
+                    ctx.note_mem_at(entry, total, "DMA subgroup entry");
+                }
+                out
+            },
+        );
         let mut ex = mach.exchange();
-        let mut i = 0usize;
-        while i < msgs.len() {
-            // msgs are sender-major with nondecreasing bucket, so the
-            // (sender, subgroup) aggregates are contiguous
-            let from = msgs[i].from_pe;
-            let g = assignment[msgs[i].bucket];
-            let entry = subgroups[g].pe(group.rank(from) % q_sub);
-            let mut total = 0usize;
-            while i < msgs.len() && msgs[i].from_pe == from && assignment[msgs[i].bucket] == g {
-                let m = &msgs[i];
-                let mut run = mach.take_buf();
-                run.extend_from_slice(&buckets[m.from_pe][m.bucket][m.start..m.end]);
-                total += run.len();
-                ex.post_tagged(from, entry, m.to_pe as u64, run);
-                i += 1;
+        for (r, runs) in sender_runs.into_iter().enumerate() {
+            for (entry, tag, run) in runs {
+                ex.post_tagged(pes[r], entry, tag, run);
             }
-            mach.note_mem(entry, total, "DMA subgroup entry");
         }
         let mut hop1 = ex.deliver(mach);
         let mut ex = mach.exchange();
@@ -315,12 +350,29 @@ fn level(
         inboxes
     } else {
         // direct per-(sender, target) messages: adversarial inputs
-        // (AllToOne) serialize Ω(min(p, n/p)) receives on one PE
+        // (AllToOne) serialize Ω(min(p, n/p)) receives on one PE. Payload
+        // staging per sender task, posting serial in msgs order.
+        let sender_runs: Vec<Vec<(usize, Vec<Elem>)>> = mach.par_pes_on(
+            &pes,
+            ParSpec::work(grand_total).bufs(2 * k),
+            &mut sender_spans,
+            |ctx, span| {
+                let (lo, hi) = *span;
+                msgs[lo..hi]
+                    .iter()
+                    .map(|m| {
+                        let mut run = ctx.take_buf();
+                        run.extend_from_slice(&buckets[m.from_pe][m.bucket][m.start..m.end]);
+                        (m.to_pe, run)
+                    })
+                    .collect()
+            },
+        );
         let mut ex = mach.exchange();
-        for m in &msgs {
-            let mut run = mach.take_buf();
-            run.extend_from_slice(&buckets[m.from_pe][m.bucket][m.start..m.end]);
-            ex.post(m.from_pe, m.to_pe, run);
+        for (r, runs) in sender_runs.into_iter().enumerate() {
+            for (to, run) in runs {
+                ex.post(pes[r], to, run);
+            }
         }
         ex.deliver(mach)
     };
@@ -329,16 +381,23 @@ fn level(
             mach.recycle_buf(bucket);
         }
     }
-    for &pe in &pes {
-        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
-        let merged = multiway_merge(&refs);
-        mach.work(
-            pe,
-            cfg.cost.cmp * merged.len() as f64 * (refs.len().max(2) as f64).log2(),
-        );
-        mach.note_mem(pe, merged.len(), "AMS data exchange");
-        data[pe] = merged;
-    }
+    // receivers merge their runs: one PE task per member, ping-pong
+    // multiway merge over pooled buffers
+    let total_recv: usize = pes.iter().map(|&pe| inboxes.total(pe)).sum();
+    mach.par_pes(
+        base,
+        ParSpec::work(2 * total_recv).bufs(2),
+        &mut data[base..base + q],
+        |ctx, slot| {
+            let refs: Vec<&[Elem]> =
+                inboxes.runs(ctx.pe()).iter().map(|(_, v)| v.as_slice()).collect();
+            let mut merged = ctx.take_buf();
+            multiway_merge_into(&refs, &mut merged, ctx.merge_scratch());
+            ctx.work(cfg.cost.cmp * merged.len() as f64 * (refs.len().max(2) as f64).log2());
+            ctx.note_mem(merged.len(), "AMS data exchange");
+            *slot = merged;
+        },
+    );
     mach.recycle(inboxes);
 
     subgroups

@@ -20,7 +20,7 @@
 use crate::config::RunConfig;
 use crate::elements::Elem;
 use crate::localsort::{sort_all, SortBackend};
-use crate::sim::{all_gather_merge, allreduce_vec_u64, Machine};
+use crate::sim::{all_gather_merge, allreduce_vec_u64, GatheredRuns, Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -90,57 +90,66 @@ pub fn sort(
 
     // --- per-PE ranking of row elements against column elements ------
     // The annotated row sequence (canonical (key,id) order — identical on
-    // every PE of the row) with provenance classes.
-    let mut ranks: Vec<Vec<u64>> = vec![Vec::new(); p];
-    let mut row_merged: Vec<Vec<Elem>> = vec![Vec::new(); p];
-    for pe in 0..p {
-        let row = row_runs[pe].take().expect("row gather ran");
-        let col = col_runs[pe].take().expect("col gather ran");
-        // merge the three tagged row runs in (key, id) order
-        let mut annotated: Vec<(Elem, RowClass)> =
-            Vec::with_capacity(row.total());
-        {
-            let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
-            let (l, o, r) = (&row.left, &row.own, &row.right);
-            while i < l.len() || j < o.len() || k < r.len() {
-                let lv = l.get(i);
-                let ov = o.get(j);
-                let rv = r.get(k);
-                let pick_l = lv.is_some()
-                    && ov.map_or(true, |x| lv.unwrap() <= x)
-                    && rv.map_or(true, |x| lv.unwrap() <= x);
-                if pick_l {
-                    annotated.push((l[i], RowClass::Left));
-                    i += 1;
-                } else if ov.is_some() && rv.map_or(true, |x| ov.unwrap() <= x) {
-                    annotated.push((o[j], RowClass::Own(j)));
-                    j += 1;
-                } else {
-                    annotated.push((r[k], RowClass::Right));
-                    k += 1;
+    // every PE of the row) with provenance classes. Each PE's ranking
+    // reads only its own (row, col) gathers — one pool-scheduled PE task
+    // per member, the hottest local phase of RFIS.
+    let mut gathers: Vec<(GatheredRuns, GatheredRuns)> = row_runs
+        .into_iter()
+        .zip(col_runs)
+        .map(|(row, col)| (row.expect("row gather ran"), col.expect("col gather ran")))
+        .collect();
+    let gather_total: usize = gathers.iter().map(|(row, col)| row.total() + col.total()).sum();
+    let results: Vec<(Vec<u64>, Vec<Elem>)> =
+        mach.par_pes(0, ParSpec::work(gather_total), &mut gathers, |ctx, (row, col)| {
+            // merge the three tagged row runs in (key, id) order
+            let mut annotated: Vec<(Elem, RowClass)> = Vec::with_capacity(row.total());
+            {
+                let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+                let (l, o, r) = (&row.left, &row.own, &row.right);
+                while i < l.len() || j < o.len() || k < r.len() {
+                    let lv = l.get(i);
+                    let ov = o.get(j);
+                    let rv = r.get(k);
+                    let pick_l = lv.is_some()
+                        && ov.map_or(true, |x| lv.unwrap() <= x)
+                        && rv.map_or(true, |x| lv.unwrap() <= x);
+                    if pick_l {
+                        annotated.push((l[i], RowClass::Left));
+                        i += 1;
+                    } else if ov.is_some() && rv.map_or(true, |x| ov.unwrap() <= x) {
+                        annotated.push((o[j], RowClass::Own(j)));
+                        j += 1;
+                    } else {
+                        annotated.push((r[k], RowClass::Right));
+                        k += 1;
+                    }
                 }
             }
-        }
-        // rank each row element within the column data via the App. F table
-        let (up, own_col, down) = (&col.left, &col.own, &col.right);
-        let mut rk = Vec::with_capacity(annotated.len());
-        for (e, class) in &annotated {
-            let r = match class {
-                RowClass::Left => ub(up, e.key) + lb(own_col, e.key) + lb(down, e.key),
-                RowClass::Right => ub(up, e.key) + ub(own_col, e.key) + lb(down, e.key),
-                RowClass::Own(i) => ub(up, e.key) + *i as u64 + lb(down, e.key),
-            };
-            rk.push(r);
-        }
-        let total = annotated.len() + col.total();
-        mach.work(
-            pe,
-            cfg.cost.cmp * annotated.len() as f64
-                * ((col.total().max(2)) as f64).log2(),
-        );
-        mach.note_mem(pe, total, "RFIS gather footprint");
+            // rank each row element within the column data via the App. F
+            // table
+            let (up, own_col, down) = (&col.left, &col.own, &col.right);
+            let mut rk = Vec::with_capacity(annotated.len());
+            for (e, class) in &annotated {
+                let r = match class {
+                    RowClass::Left => ub(up, e.key) + lb(own_col, e.key) + lb(down, e.key),
+                    RowClass::Right => ub(up, e.key) + ub(own_col, e.key) + lb(down, e.key),
+                    RowClass::Own(i) => ub(up, e.key) + *i as u64 + lb(down, e.key),
+                };
+                rk.push(r);
+            }
+            let total = annotated.len() + col.total();
+            ctx.work(
+                cfg.cost.cmp * annotated.len() as f64
+                    * ((col.total().max(2)) as f64).log2(),
+            );
+            ctx.note_mem(total, "RFIS gather footprint");
+            (rk, annotated.into_iter().map(|(e, _)| e).collect::<Vec<Elem>>())
+        });
+    let mut ranks: Vec<Vec<u64>> = vec![Vec::new(); p];
+    let mut row_merged: Vec<Vec<Elem>> = vec![Vec::new(); p];
+    for (pe, (rk, merged)) in results.into_iter().enumerate() {
         ranks[pe] = rk;
-        row_merged[pe] = annotated.into_iter().map(|(e, _)| e).collect();
+        row_merged[pe] = merged;
     }
 
     // --- all-reduce partial ranks along each row ----------------------
@@ -152,21 +161,27 @@ pub fn sort(
     }
 
     // --- delivery: keep own column's targets, route within the column -
-    // element with global rank i goes to PE ⌊i·p/n⌋
+    // element with global rank i goes to PE ⌊i·p/n⌋; the full-row scan is
+    // per-PE independent — one PE task per member
     let dest_pe = |rank: u64| -> usize { ((rank as u128 * p as u128) / n as u128) as usize };
-    let mut in_flight: Vec<Vec<(Elem, usize)>> = vec![Vec::new(); p]; // (elem, dest_row)
-    for pe in 0..p {
-        let c = pe % cols;
-        let merged = std::mem::take(&mut row_merged[pe]);
-        let rk = std::mem::take(&mut ranks[pe]);
-        mach.work_linear(pe, merged.len());
-        for (e, r) in merged.into_iter().zip(rk) {
-            let dest = dest_pe(r);
-            if dest % cols == c {
-                in_flight[pe].push((e, dest / cols));
+    let mut items: Vec<(Vec<Elem>, Vec<u64>)> =
+        row_merged.into_iter().zip(ranks).collect();
+    let scan_total: usize = items.iter().map(|(m, _)| m.len()).sum();
+    let mut in_flight: Vec<Vec<(Elem, usize)>> = // (elem, dest_row)
+        mach.par_pes(0, ParSpec::work(scan_total), &mut items, |ctx, (merged, rk)| {
+            let c = ctx.pe() % cols;
+            ctx.work_linear(merged.len());
+            let mut keep: Vec<(Elem, usize)> = Vec::new();
+            for (e, r) in merged.drain(..).zip(rk.drain(..)) {
+                let dest = dest_pe(r);
+                if dest % cols == c {
+                    keep.push((e, dest / cols));
+                }
             }
-        }
-        data[pe].clear();
+            keep
+        });
+    for run in data.iter_mut() {
+        run.clear();
     }
     // hypercube bit-fixing over the rows of each column: misrouted
     // elements travel through the data plane as runs tagged with their
@@ -209,10 +224,16 @@ pub fn sort(
             mach.recycle(inboxes);
         }
     }
-    for pe in 0..p {
-        let mut v: Vec<Elem> = std::mem::take(&mut in_flight[pe]).into_iter().map(|(e, _)| e).collect();
-        mach.work_sort(pe, v.len());
-        v.sort_unstable();
+    // final local sort of the delivered targets: one PE task per member
+    let sort_total: usize = in_flight.iter().map(Vec::len).sum();
+    let sorted: Vec<Vec<Elem>> =
+        mach.par_pes(0, ParSpec::work(sort_total), &mut in_flight, |ctx, fl| {
+            let mut v: Vec<Elem> = std::mem::take(fl).into_iter().map(|(e, _)| e).collect();
+            ctx.work_sort(v.len());
+            v.sort_unstable();
+            v
+        });
+    for (pe, v) in sorted.into_iter().enumerate() {
         data[pe] = v;
     }
 }

@@ -46,6 +46,16 @@ impl Runner {
         Self { cfg, backend: Box::new(RustSort), validate: true, keep_output: true, mach }
     }
 
+    /// Override the intra-run PE-task parallelism of the owned machine
+    /// (see [`Machine::set_pe_jobs`]). Host scheduling only — reports are
+    /// bit-identical for every value; the default comes from
+    /// `--pe-jobs` / `RMPS_PE_JOBS` / the host core count
+    /// ([`crate::exec::default_pe_jobs`]).
+    pub fn pe_jobs(mut self, jobs: usize) -> Self {
+        self.mach.set_pe_jobs(jobs);
+        self
+    }
+
     /// Replace the node-local sort backend (e.g. the PJRT `XlaSort` from
     /// [`crate::runtime`], available with the `xla` cargo feature).
     pub fn backend(mut self, backend: Box<dyn SortBackend>) -> Self {

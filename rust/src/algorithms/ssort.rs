@@ -10,10 +10,10 @@
 //! the data directly".
 
 use crate::config::RunConfig;
-use crate::elements::{multiway_merge, Elem, Key};
+use crate::elements::{multiway_merge_into, Elem, Key};
 use crate::localsort::{sort_all, SortBackend};
 use crate::rng::Rng;
-use crate::sim::{bcast_cost, Cube, Machine};
+use crate::sim::{bcast_cost, Cube, Machine, ParSpec};
 
 use super::{OutputShape, Sorter};
 
@@ -76,16 +76,24 @@ pub fn sort(
     }
 
     // --- partition + direct delivery through the data plane -----------
+    // bucket building as one PE task per member; posting keeps the
+    // historical (pe, bucket) order
+    let total: usize = data.iter().map(Vec::len).sum();
+    let outs: Vec<Vec<Vec<Elem>>> =
+        mach.par_pes(0, ParSpec::work(total).bufs(p + 1), &mut *data, |ctx, slot| {
+            let local = std::mem::take(slot);
+            ctx.work_classify(local.len(), p);
+            let mut buckets: Vec<Vec<Elem>> = (0..p).map(|_| ctx.take_buf()).collect();
+            for &e in &local {
+                // nonrobust: key-only binary search (duplicates pile up)
+                let b = splitters.partition_point(|&s| s < e.key);
+                buckets[b].push(e);
+            }
+            ctx.recycle_buf(local);
+            buckets
+        });
     let mut ex = mach.exchange();
-    for pe in 0..p {
-        let local = std::mem::take(&mut data[pe]);
-        mach.work_classify(pe, local.len(), p);
-        let mut buckets: Vec<Vec<Elem>> = (0..p).map(|_| mach.take_buf()).collect();
-        for e in local {
-            // nonrobust: key-only binary search (duplicates pile up)
-            let b = splitters.partition_point(|&s| s < e.key);
-            buckets[b].push(e);
-        }
+    for (pe, buckets) in outs.into_iter().enumerate() {
         for (t, bucket) in buckets.into_iter().enumerate() {
             ex.post(pe, t, bucket);
         }
@@ -95,14 +103,16 @@ pub fn sort(
         mach.note_mem(pe, inboxes.total(pe), "alltoallv");
     }
 
-    // --- local merge of received runs --------------------------------
-    for &pe in &pes {
-        let refs: Vec<&[Elem]> = inboxes.runs(pe).iter().map(|(_, v)| v.as_slice()).collect();
-        let merged = multiway_merge(&refs);
-        mach.work(pe, cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
-        mach.note_mem(pe, merged.len(), "sample sort receive");
-        data[pe] = merged;
-    }
+    // --- local merge of received runs: one PE task per member ---------
+    let total_recv: usize = pes.iter().map(|&pe| inboxes.total(pe)).sum();
+    mach.par_pes(0, ParSpec::work(2 * total_recv).bufs(1), &mut *data, |ctx, slot| {
+        let refs: Vec<&[Elem]> = inboxes.runs(ctx.pe()).iter().map(|(_, v)| v.as_slice()).collect();
+        let mut merged = ctx.take_buf();
+        multiway_merge_into(&refs, &mut merged, ctx.merge_scratch());
+        ctx.work(cfg.cost.cmp * merged.len() as f64 * (p.max(2) as f64).log2());
+        ctx.note_mem(merged.len(), "sample sort receive");
+        *slot = merged;
+    });
     mach.recycle(inboxes);
 }
 

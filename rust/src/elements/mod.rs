@@ -78,6 +78,13 @@ pub fn merge(a: &[Elem], b: &[Elem]) -> Vec<Elem> {
 /// merge — the hot path of every hypercube exchange step.
 pub fn merge_into(a: &[Elem], b: &[Elem], out: &mut Vec<Elem>) {
     out.clear();
+    merge_append(a, b, out);
+}
+
+/// [`merge_into`] without the clear: appends the merged sequence to `out`.
+/// The cascade passes of [`multiway_merge_into`] write consecutive merged
+/// segments into one buffer through this.
+fn merge_append(a: &[Elem], b: &[Elem], out: &mut Vec<Elem>) {
     out.reserve(a.len() + b.len());
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
@@ -94,31 +101,80 @@ pub fn merge_into(a: &[Elem], b: &[Elem], out: &mut Vec<Elem>) {
     out.extend_from_slice(&b[j..]);
 }
 
-/// k-way merge of sorted runs (used by gather-merge trees and RAMS data
-/// receipt). Cascade of two-way merges: ⌈log k⌉ passes of the branch-light
-/// two-finger merge — ~2-3× faster than a binary-heap merge at the k ≤ 64
-/// of all call sites (§Perf, EXPERIMENTS.md).
-pub fn multiway_merge(runs: &[&[Elem]]) -> Vec<Elem> {
-    let mut level: Vec<Vec<Elem>> = runs
-        .iter()
-        .filter(|r| !r.is_empty())
-        .map(|r| r.to_vec())
-        .collect();
-    if level.is_empty() {
-        return Vec::new();
-    }
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(2));
-        let mut it = level.into_iter();
+/// Reusable scratch for [`multiway_merge_into`]: the ping-pong partner
+/// buffer plus the two segment-boundary tables. Every `Vec` keeps its
+/// capacity across calls, so a warm scratch makes the k-way merge
+/// allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct MergeScratch {
+    tmp: Vec<Elem>,
+    bounds: Vec<usize>,
+    bounds_next: Vec<usize>,
+}
+
+/// k-way merge of sorted runs into `out` (cleared first), ping-ponging
+/// between `out` and the scratch buffer: ⌈log k⌉ passes of the
+/// branch-light two-finger merge with **O(total)** buffer space and zero
+/// allocations once the scratch is warm — this replaced a cascade that
+/// copied every run into fresh `Vec`s at every level.
+///
+/// The merge tree has exactly the shape of the historical implementation
+/// (adjacent pairs of the non-empty runs, an unpaired last segment carried
+/// verbatim to the next pass), so the output — bit for bit, including the
+/// order of fully-equal elements — is unchanged.
+pub fn multiway_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut MergeScratch) {
+    out.clear();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    out.reserve(total);
+    let MergeScratch { tmp, bounds, bounds_next } = scratch;
+    bounds.clear();
+    bounds.push(0);
+    // pass 0 reads straight from the input runs (no up-front copy): merge
+    // adjacent non-empty pairs into `out`, recording segment boundaries
+    {
+        let mut it = runs.iter().filter(|r| !r.is_empty());
         while let Some(a) = it.next() {
             match it.next() {
-                Some(b) => next.push(merge(&a, &b)),
-                None => next.push(a),
+                Some(b) => merge_append(a, b, out),
+                None => out.extend_from_slice(a),
             }
+            bounds.push(out.len());
         }
-        level = next;
     }
-    level.pop().unwrap()
+    // cascade: merge adjacent segments, ping-ponging between the buffers
+    while bounds.len() > 2 {
+        tmp.clear();
+        tmp.reserve(total);
+        bounds_next.clear();
+        bounds_next.push(0);
+        let segs = bounds.len() - 1;
+        let mut s = 0;
+        while s < segs {
+            if s + 1 < segs {
+                // split_at so the two segment borrows and the write
+                // target are provably disjoint
+                let (a, rest) = out[bounds[s]..bounds[s + 2]].split_at(bounds[s + 1] - bounds[s]);
+                merge_append(a, rest, tmp);
+                s += 2;
+            } else {
+                tmp.extend_from_slice(&out[bounds[s]..bounds[s + 1]]);
+                s += 1;
+            }
+            bounds_next.push(tmp.len());
+        }
+        std::mem::swap(out, tmp);
+        std::mem::swap(bounds, bounds_next);
+    }
+}
+
+/// k-way merge of sorted runs (used by gather-merge trees and RAMS data
+/// receipt), allocating its result and scratch — convenience wrapper over
+/// [`multiway_merge_into`], which hot paths call with pooled buffers.
+pub fn multiway_merge(runs: &[&[Elem]]) -> Vec<Elem> {
+    let mut out = Vec::new();
+    let mut scratch = MergeScratch::default();
+    multiway_merge_into(runs, &mut out, &mut scratch);
+    out
 }
 
 /// `true` iff `v` is sorted in full `(key, id)` order.
@@ -189,5 +245,47 @@ mod tests {
         let mut flat: Vec<Elem> = runs.iter().flatten().copied().collect();
         flat.sort();
         assert_eq!(merged, flat);
+    }
+
+    /// The ping-pong cascade over a reused scratch matches the allocating
+    /// wrapper (and a plain sort) for every run count — even/odd segment
+    /// counts exercise the carried-segment path, and back-to-back calls
+    /// exercise scratch reuse.
+    #[test]
+    fn multiway_merge_into_matches_for_all_run_counts() {
+        let mut scratch = MergeScratch::default();
+        let mut out = Vec::new();
+        for k in 0..12usize {
+            let runs: Vec<Vec<Elem>> = (0..k)
+                .map(|r| {
+                    let len = (r * 7 + 3) % 9; // includes empty runs
+                    let mut v: Vec<Elem> = (0..len)
+                        .map(|i| Elem::new(((i * 31 + r * 17) % 23) as u64, r, i))
+                        .collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            let refs: Vec<&[Elem]> = runs.iter().map(|r| r.as_slice()).collect();
+            multiway_merge_into(&refs, &mut out, &mut scratch);
+            assert_eq!(out, multiway_merge(&refs), "k = {k}");
+            let mut flat: Vec<Elem> = runs.iter().flatten().copied().collect();
+            flat.sort();
+            assert_eq!(out, flat, "k = {k}");
+        }
+    }
+
+    /// Fully-equal elements (same key *and* id — duplicated samples) keep
+    /// the historical first-run-first order through the rewrite.
+    #[test]
+    fn multiway_merge_into_is_stable_on_equal_elements() {
+        let a = vec![Elem::with_id(5, 1); 3];
+        let b = vec![Elem::with_id(5, 1); 2];
+        let c = vec![Elem::with_id(5, 1); 4];
+        let refs: Vec<&[Elem]> = vec![&a, &b, &c];
+        let mut out = Vec::new();
+        multiway_merge_into(&refs, &mut out, &mut MergeScratch::default());
+        assert_eq!(out.len(), 9);
+        assert_eq!(out, multiway_merge(&refs));
     }
 }

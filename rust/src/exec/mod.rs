@@ -1,12 +1,31 @@
-//! Dependency-free parallel execution for the experiment driver.
+//! Dependency-free parallel execution shared by the experiment driver and
+//! the intra-run PE tasks.
 //!
 //! The figure sweeps are embarrassingly parallel across (algorithm,
-//! distribution, n/p) cells, but the build environment is offline, so no
-//! rayon: this is a scoped-thread self-scheduling pool. Workers pull the
-//! next job index from a shared atomic counter (the classic work-stealing
-//! degenerate case where the "deque" is a single global index — optimal
-//! here because every job is coarse), so long cells never leave the other
-//! workers idle behind a static partition.
+//! distribution, n/p) cells, and every superstep of a single run is
+//! embarrassingly parallel across PEs, but the build environment is
+//! offline, so no rayon: this is a scoped-thread self-scheduling pool.
+//! Workers pull the next job index from a shared atomic counter (the
+//! classic work-stealing degenerate case where the "deque" is a single
+//! global index — optimal here because every job is coarse), so long jobs
+//! never leave the other workers idle behind a static partition.
+//!
+//! **One pool, two levels.** Cell-level fan-out (`--jobs`, the experiment
+//! drivers) and PE-level fan-out (`--pe-jobs`, [`crate::sim::Machine::par_pes`])
+//! share a single process-wide worker budget sized to the host's available
+//! parallelism. Every [`parallel_map`] call acquires worker tokens from
+//! that budget before spawning and returns them when its scope ends; a
+//! call that finds the budget exhausted (e.g. a PE-task round nested
+//! inside a cell worker that already holds all tokens) degrades to running
+//! inline on the caller's thread. This is the work-depth guard: when
+//! fig-grids and PE tasks nest, the total number of live workers stays
+//! bounded by the host core count instead of multiplying.
+//!
+//! The budget also caps a *top-level* `--jobs` request above the core
+//! count — a deliberate behavior change from the PR 2 driver, which
+//! spawned exactly N workers: every job here is CPU-bound simulation, so
+//! oversubscribing cores only adds scheduler churn. Results are identical
+//! either way; only the worker count changes.
 //!
 //! Determinism: results are returned **in index order** regardless of which
 //! worker computed what or in which interleaving, so `jobs = 1` and
@@ -14,7 +33,8 @@
 //! is itself a pure function of its index (every `run_cell` is: all
 //! randomness derives from per-config seeds).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicIsize, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Number of worker threads to use by default: the host's available
 /// parallelism (the `--jobs` CLI default), or 1 if it cannot be queried.
@@ -22,16 +42,97 @@ pub fn available_jobs() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+// ---- the shared worker budget (work-depth guard) -----------------------
+
+/// Tokens remaining in the process-wide worker budget. Initialized to the
+/// host's available parallelism; every spawned worker holds one token for
+/// its lifetime.
+fn budget() -> &'static AtomicIsize {
+    static BUDGET: OnceLock<AtomicIsize> = OnceLock::new();
+    BUDGET.get_or_init(|| AtomicIsize::new(available_jobs() as isize))
+}
+
+/// RAII worker-token grant: `n` tokens taken from the shared budget,
+/// returned on drop (panic-safe — a propagating worker panic still
+/// releases them when the scope unwinds).
+struct Tokens {
+    n: usize,
+}
+
+impl Tokens {
+    /// Take up to `want` tokens (possibly zero when the budget is
+    /// exhausted by outer parallel levels).
+    fn acquire(want: usize) -> Tokens {
+        let want = want as isize;
+        let prev = budget().fetch_sub(want, Ordering::AcqRel);
+        let got = prev.clamp(0, want);
+        let refund = want - got;
+        if refund > 0 {
+            budget().fetch_add(refund, Ordering::AcqRel);
+        }
+        Tokens { n: got as usize }
+    }
+}
+
+impl Drop for Tokens {
+    fn drop(&mut self) {
+        if self.n > 0 {
+            budget().fetch_add(self.n as isize, Ordering::AcqRel);
+        }
+    }
+}
+
+// ---- pe-jobs configuration ---------------------------------------------
+
+/// Process-wide `--pe-jobs` override; 0 = unset.
+static PE_JOBS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default for intra-run PE-task parallelism (the
+/// CLI `--pe-jobs` flag). Takes precedence over the `RMPS_PE_JOBS`
+/// environment variable; `0` clears the override and restores the
+/// env/all-cores default. Affects host scheduling only — simulation
+/// results are bit-identical for every value.
+pub fn set_pe_jobs(jobs: usize) {
+    PE_JOBS_OVERRIDE.store(jobs, Ordering::Relaxed);
+}
+
+/// The default intra-run PE-task parallelism a new
+/// [`crate::sim::Machine`] starts with: the [`set_pe_jobs`] override if
+/// one was given, else `RMPS_PE_JOBS`, else the host's available
+/// parallelism.
+pub fn default_pe_jobs() -> usize {
+    let over = PE_JOBS_OVERRIDE.load(Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
+    std::env::var("RMPS_PE_JOBS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(available_jobs)
+}
+
+// ---- the pool ----------------------------------------------------------
+
 /// Map `f` over `0..n` on up to `jobs` scoped worker threads, returning the
 /// results in index order.
 ///
-/// `jobs` is clamped to `[1, n]`; `jobs <= 1` (or `n <= 1`) runs inline on
-/// the caller's thread with no pool overhead, so the serial path is exactly
-/// the pre-pool code path. A panic in any job is propagated to the caller
-/// with its original payload once the remaining workers have drained.
+/// `jobs` is clamped to `[1, n]` and then to the tokens left in the shared
+/// worker budget (see the module docs); `jobs <= 1` (or `n <= 1`, or an
+/// exhausted budget) runs inline on the caller's thread with no pool
+/// overhead, so the serial path is exactly the pre-pool code path. A panic
+/// in any job is propagated to the caller with its original payload once
+/// the remaining workers have drained.
 pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
     let jobs = jobs.clamp(1, n.max(1));
     if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let tokens = Tokens::acquire(jobs);
+    let workers = tokens.n;
+    if workers <= 1 {
+        // budget exhausted (or down to one token — a single worker plus an
+        // idle caller is strictly worse than inline)
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
@@ -40,7 +141,7 @@ pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Syn
     let mut slots: Vec<Option<R>> = Vec::new();
     slots.resize_with(n, || None);
     std::thread::scope(|s| {
-        let handles: Vec<_> = (0..jobs)
+        let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(move || {
                     let mut done: Vec<(usize, R)> = Vec::new();
@@ -66,7 +167,49 @@ pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Syn
             }
         }
     });
+    drop(tokens);
     slots.into_iter().map(|r| r.expect("pool covered every index")).collect()
+}
+
+/// Shared view of a `&mut [T]` for **index-disjoint** parallel writes: the
+/// self-scheduling counter in [`parallel_map`] hands out each index exactly
+/// once, so the `&mut T` references produced through this pointer are
+/// never aliased.
+///
+/// Crate-internal building block for the `Machine` PE-task scheduler and
+/// the exchange's parallel inbox materialization — every use site states
+/// its disjointness argument at the `unsafe` block.
+pub(crate) struct SliceCells<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Sync for SliceCells<T> {}
+unsafe impl<T: Send> Send for SliceCells<T> {}
+
+impl<T> SliceCells<T> {
+    pub(crate) fn new(slice: &mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// # Safety
+    /// The caller must guarantee no two live `&mut T` to the same index
+    /// (in [`parallel_map`] bodies: each index is claimed exactly once by
+    /// the shared atomic counter).
+    // the &self → &mut T shape is this type's entire point: disjointness
+    // is the documented contract of this unsafe fn, not derivable by the
+    // borrow checker
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub(crate) unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
 }
 
 #[cfg(test)]
@@ -115,7 +258,72 @@ mod tests {
     }
 
     #[test]
+    fn worker_panic_returns_tokens() {
+        // after a panicking round the budget must be whole again, or every
+        // later call would silently run inline
+        for _ in 0..3 {
+            let _ = std::panic::catch_unwind(|| {
+                parallel_map(4, 16, |i| {
+                    if i == 0 {
+                        panic!("boom");
+                    }
+                    i
+                })
+            });
+        }
+        assert_eq!(parallel_map(4, 32, |i| i), (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_levels_share_the_budget() {
+        // outer cells × inner PE-style maps: correctness must hold whether
+        // the inner level got worker tokens or degraded to inline
+        let out = parallel_map(4, 8, |cell| {
+            let inner = parallel_map(4, 16, move |pe| (cell * 100 + pe) as u64);
+            inner.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> =
+            (0..8).map(|c| (0..16).map(|p| (c * 100 + p) as u64).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    /// The disjoint-index write primitive behind the PE-task scheduler
+    /// and the parallel inbox materialization: every index mutated
+    /// exactly once, in any worker interleaving.
+    #[test]
+    fn slice_cells_disjoint_parallel_writes() {
+        for jobs in [1, 3, 8] {
+            let mut items: Vec<u64> = (0..50).collect();
+            let cells = SliceCells::new(&mut items);
+            let doubled: Vec<(u64, u64)> = parallel_map(jobs, cells.len(), |i| {
+                // SAFETY: parallel_map claims each index exactly once.
+                let v = unsafe { cells.get_mut(i) };
+                *v *= 2;
+                (i as u64, *v)
+            });
+            assert_eq!(items, (0..50).map(|i| i * 2).collect::<Vec<u64>>(), "jobs={jobs}");
+            for (i, (idx, val)) in doubled.iter().enumerate() {
+                assert_eq!(*idx, i as u64);
+                assert_eq!(*val, items[i]);
+            }
+        }
+    }
+
+    #[test]
     fn available_jobs_is_positive() {
         assert!(available_jobs() >= 1);
+    }
+
+    #[test]
+    fn pe_jobs_override_round_trips_and_clears() {
+        // the override is process-global; every value keeps results
+        // identical, so flipping it here cannot disturb other tests —
+        // but it MUST be cleared afterwards, or this test would silently
+        // defeat an RMPS_PE_JOBS value set for the whole suite run
+        set_pe_jobs(3);
+        assert_eq!(default_pe_jobs(), 3);
+        set_pe_jobs(0); // clear: back to env / all-cores
+        let restored = default_pe_jobs();
+        assert!(restored >= 1);
     }
 }

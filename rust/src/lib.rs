@@ -97,5 +97,5 @@ pub mod prelude {
     pub use crate::elements::Elem;
     pub use crate::input::Distribution;
     pub use crate::model::CostModel;
-    pub use crate::sim::{Exchange, Inboxes, Machine};
+    pub use crate::sim::{Exchange, Inboxes, Machine, ParSpec, PeCtx};
 }

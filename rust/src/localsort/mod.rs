@@ -11,12 +11,22 @@
 //! is what the §Perf benchmarks measure.
 
 use crate::elements::Elem;
+use crate::sim::ParSpec;
 
 /// A batched local-sort backend. Sorts each run ascending in full
 /// `(key, id)` order.
 pub trait SortBackend {
     fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]);
     fn name(&self) -> &'static str;
+
+    /// A stateless per-run sort function, if the backend supports
+    /// dispatching one run at a time — [`sort_all`] then fans the runs
+    /// out over the PE-task pool. `None` (the default) keeps the batched
+    /// [`SortBackend::sort_runs`] path, which backends that fuse all
+    /// fragments into one launch (the PJRT `XlaSort`) require.
+    fn par_run_sort(&self) -> Option<fn(&mut Vec<Elem>)> {
+        None
+    }
 }
 
 /// Pure-Rust backend: `slice::sort_unstable` (pdqsort) per run.
@@ -33,20 +43,40 @@ impl SortBackend for RustSort {
     fn name(&self) -> &'static str {
         "rust-pdqsort"
     }
+
+    fn par_run_sort(&self) -> Option<fn(&mut Vec<Elem>)> {
+        Some(|run| run.sort_unstable())
+    }
 }
 
 /// Sort all of a machine's per-PE fragments with `backend`, charging each
 /// PE the model's sort cost.
+///
+/// Per-run backends ([`SortBackend::par_run_sort`]) execute as one
+/// pool-scheduled PE task per fragment, with the `work_sort` charge
+/// recorded by the same task that sorts — cost and work originate from
+/// the same call, mirroring the Exchange charged == moved discipline —
+/// and settled in PE order, bit-identical to the historical
+/// charge-loop-then-sort sequence. Batch-only backends keep the two-phase
+/// shape (the charge loop already was in PE order).
 pub fn sort_all(
     mach: &mut crate::sim::Machine,
     data: &mut [Vec<Elem>],
     backend: &mut dyn SortBackend,
 ) {
-    for (pe, run) in data.iter().enumerate() {
-        mach.work_sort(pe, run.len());
+    if let Some(sort_one) = backend.par_run_sort() {
+        let total: usize = data.iter().map(Vec::len).sum();
+        mach.par_pes(0, ParSpec::work(total), data, |ctx, run| {
+            ctx.work_sort(run.len());
+            sort_one(run);
+        });
+    } else {
+        for (pe, run) in data.iter().enumerate() {
+            mach.work_sort(pe, run.len());
+        }
+        let mut refs: Vec<&mut Vec<Elem>> = data.iter_mut().collect();
+        backend.sort_runs(&mut refs);
     }
-    let mut refs: Vec<&mut Vec<Elem>> = data.iter_mut().collect();
-    backend.sort_runs(&mut refs);
 }
 
 #[cfg(test)]
@@ -81,5 +111,43 @@ mod tests {
         sort_all(&mut mach, &mut data, &mut RustSort);
         assert!(data.iter().all(|r| crate::elements::is_sorted(r)));
         assert!(mach.clock(0) > 0.0 && mach.clock(1) > 0.0);
+    }
+
+    /// A batch-only backend (no `par_run_sort`, like `XlaSort`) and the
+    /// pool-scheduled per-run path must charge identical costs and produce
+    /// identical runs — large enough fragments to clear the inline gate.
+    #[test]
+    fn par_and_batch_paths_agree_bitwise() {
+        struct BatchOnly;
+        impl SortBackend for BatchOnly {
+            fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]) {
+                for run in runs {
+                    run.sort_unstable();
+                }
+            }
+            fn name(&self) -> &'static str {
+                "batch-only"
+            }
+        }
+        let p = 8;
+        let gen = |seed| -> Vec<Vec<Elem>> {
+            let mut rng = Rng::seeded(seed, 1);
+            (0..p).map(|pe| (0..1024).map(|i| Elem::new(rng.next_u64(), pe, i)).collect()).collect()
+        };
+        let mut batch_mach = Machine::new(p, CostModel::default());
+        let mut batch_data = gen(9);
+        sort_all(&mut batch_mach, &mut batch_data, &mut BatchOnly);
+        let mut par_mach = Machine::new(p, CostModel::default());
+        par_mach.set_pe_jobs(4);
+        let mut par_data = gen(9);
+        sort_all(&mut par_mach, &mut par_data, &mut RustSort);
+        assert_eq!(batch_data, par_data);
+        for pe in 0..p {
+            assert_eq!(batch_mach.clock(pe).to_bits(), par_mach.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(
+            batch_mach.stats.local_work.to_bits(),
+            par_mach.stats.local_work.to_bits()
+        );
     }
 }

@@ -68,9 +68,17 @@ MACHINE FLAGS (all commands)
   --beta B         per-word cost (default 13)
   --seed S         RNG seed (default 0xC0FFEE)
   --jobs N         worker threads for figure/table sweeps
-                   (default: available host parallelism; results are
-                   byte-identical for every N — see README § Parallel
-                   experiment driver)
+                   (default: available host parallelism; capped at the
+                   host core count by the shared worker budget — the
+                   simulator is CPU-bound, so oversubscription never
+                   helps; results are byte-identical for every N — see
+                   README § Parallel experiment driver)
+  --pe-jobs N      worker threads for the per-PE phases *inside* one run
+                   (default: RMPS_PE_JOBS, else available parallelism;
+                   shares one thread pool with --jobs — no
+                   oversubscription when both are active — and results
+                   are bit-identical for every N — see README
+                   § Two-level parallelism)
   --xla-local-sort use the PJRT/XLA batched local sorter
                    (needs artifacts/ and a build with --features xla)
 ";
@@ -165,6 +173,11 @@ fn main() -> Result<()> {
     };
     let a = Args::parse(&argv[1..])?;
     let jobs: usize = a.get("jobs", rmps::exec::available_jobs())?;
+    // 0 = "not given": keep the RMPS_PE_JOBS / all-cores default
+    let pe_jobs: usize = a.get("pe-jobs", 0usize)?;
+    if pe_jobs > 0 {
+        rmps::exec::set_pe_jobs(pe_jobs);
+    }
 
     match cmd.as_str() {
         "run" => {

@@ -109,21 +109,23 @@ pub fn partition(data: &[Elem], tree: &SplitterTree, tie_break: bool) -> Vec<Vec
     partition_with(data, tree, tie_break, Vec::with_capacity)
 }
 
-/// [`partition`] with bucket vectors drawn from the machine's data-plane
-/// buffer pool ([`crate::sim::Machine::take_buf`]) — the hot-path variant
-/// for algorithms that ship the buckets through an
-/// [`crate::sim::Exchange`] round (RAMS); the buffers cycle back to the
-/// pool when the delivered mail is recycled, so steady-state levels
-/// allocate nothing. Bucket contents and order are identical to
-/// [`partition`].
-pub fn partition_pooled(
-    mach: &mut crate::sim::Machine,
+/// [`partition`] with bucket vectors drawn from a pool-scheduled PE
+/// task's buffer stash ([`crate::sim::PeCtx::take_buf`], pre-seeded from
+/// the machine's data-plane pool via [`crate::sim::ParSpec::bufs`]) — the
+/// hot-path variant for algorithms that classify every element per
+/// superstep and ship the buckets through an [`crate::sim::Exchange`]
+/// round (RAMS): the per-PE partition phases run concurrently and the
+/// buffers cycle back to the pool when the delivered mail is recycled, so
+/// steady-state levels allocate nothing for buckets. Bucket contents and
+/// order are identical to [`partition`].
+pub fn partition_ctx(
+    ctx: &mut crate::sim::PeCtx,
     data: &[Elem],
     tree: &SplitterTree,
     tie_break: bool,
 ) -> Vec<Vec<Elem>> {
     partition_with(data, tree, tie_break, |c| {
-        let mut buf = mach.take_buf();
+        let mut buf = ctx.take_buf();
         buf.reserve(c);
         buf
     })

@@ -26,7 +26,10 @@ pub fn hypercube_shuffle(
         let bit = 1usize << j;
         // each member splits locally into keep/send halves; the send half
         // goes straight into the exchange as one pooled payload — no
-        // per-dimension outgoing table
+        // per-dimension outgoing table. The split loop stays sequential:
+        // all members draw from one shared RNG stream, so task-parallel
+        // execution would reorder the draws and change the (seeded,
+        // reproducible) permutation.
         let mut ex = mach.exchange();
         for r in 0..size {
             let pe = base + r;
@@ -51,11 +54,17 @@ pub fn hypercube_shuffle(
             ex.xchg_leg(pe, base + (r ^ bit), send);
         }
         let inboxes = ex.deliver(mach);
-        for r in 0..size {
-            let pe = base + r;
-            data[pe].extend_from_slice(inboxes.single(pe));
-            mach.note_mem(pe, data[pe].len(), "hypercube shuffle");
-        }
+        // receive-side materialization: one PE task per member
+        let total: usize = (0..size).map(|r| inboxes.total(base + r)).sum();
+        mach.par_pes(
+            base,
+            crate::sim::ParSpec::work(2 * total),
+            &mut data[base..base + size],
+            |ctx, run| {
+                run.extend_from_slice(inboxes.single(ctx.pe()));
+                ctx.note_mem(run.len(), "hypercube shuffle");
+            },
+        );
         mach.recycle(inboxes);
     }
 }

@@ -22,8 +22,8 @@
 //! dimension are disjoint — see the exactness contract on
 //! [`Machine::begin_superstep`].
 
-use crate::elements::{merge, Elem};
-use crate::sim::{rank_pairs, Machine};
+use crate::elements::{merge, merge_into, Elem};
+use crate::sim::{rank_pairs, Machine, ParSpec};
 
 fn assert_pow2(pes: &[usize]) -> u32 {
     assert!(pes.len().is_power_of_two(), "hypercube collective needs 2^d members");
@@ -64,12 +64,20 @@ pub fn all_gather_merge(
 ) -> Vec<GatheredRuns> {
     let dim = assert_pow2(pes);
     let size = pes.len();
-    let mut runs: Vec<GatheredRuns> = pes
+    /// Per-member round state, bundled so the post-delivery merge phase
+    /// runs as one pool-scheduled PE task per member.
+    struct AgmState {
+        runs: GatheredRuns,
+        /// full merged content, exchanged wholesale each round
+        full: Vec<Elem>,
+    }
+    let mut st: Vec<AgmState> = pes
         .iter()
-        .map(|&pe| GatheredRuns { own: local[pe].clone(), ..Default::default() })
+        .map(|&pe| AgmState {
+            runs: GatheredRuns { own: local[pe].clone(), ..Default::default() },
+            full: local[pe].clone(),
+        })
         .collect();
-    // full merged content per member, exchanged wholesale each round
-    let mut full: Vec<Vec<Elem>> = pes.iter().map(|&pe| local[pe].clone()).collect();
 
     for j in 0..dim {
         let bit = 1usize << j;
@@ -78,28 +86,35 @@ pub fn all_gather_merge(
         // runs are read back without cloning the payload (§Perf)
         let mut ex = mach.exchange();
         for (r, pr) in rank_pairs(size, j) {
-            let a = std::mem::take(&mut full[r]);
-            let b = std::mem::take(&mut full[pr]);
+            let a = std::mem::take(&mut st[r].full);
+            let b = std::mem::take(&mut st[pr].full);
             ex.xchg(pes[r], pes[pr], a, b);
         }
         let inboxes = ex.deliver(mach);
-        for (r, slot) in full.iter_mut().enumerate() {
+        let total: usize = pes.iter().map(|&pe| inboxes.total(pe)).sum();
+        mach.par_pes_on(pes, ParSpec::work(2 * total).bufs(2), &mut st, |ctx, s| {
+            let r = ctx.rank();
             let pr = r ^ bit;
             let incoming = inboxes.single(pes[r]);
             let own = inboxes.single(pes[pr]);
             if pr < r {
-                runs[r].left = merge(&runs[r].left, incoming);
+                let mut left = ctx.take_buf();
+                merge_into(&s.runs.left, incoming, &mut left);
+                ctx.recycle_buf(std::mem::replace(&mut s.runs.left, left));
             } else {
-                runs[r].right = merge(&runs[r].right, incoming);
+                let mut right = ctx.take_buf();
+                merge_into(&s.runs.right, incoming, &mut right);
+                ctx.recycle_buf(std::mem::replace(&mut s.runs.right, right));
             }
-            let merged = merge(own, incoming);
-            mach.work_linear(pes[r], merged.len());
-            mach.note_mem(pes[r], merged.len(), "all-gather-merge");
-            *slot = merged;
-        }
+            let mut merged = ctx.take_buf();
+            merge_into(own, incoming, &mut merged);
+            ctx.work_linear(merged.len());
+            ctx.note_mem(merged.len(), "all-gather-merge");
+            s.full = merged;
+        });
         mach.recycle(inboxes);
     }
-    runs
+    st.into_iter().map(|s| s.runs).collect()
 }
 
 /// Binomial-tree gather-merge to the group's rank-0 member (GatherM).
@@ -125,12 +140,25 @@ pub fn gather_merge(mach: &mut Machine, pes: &[usize], local: &[Vec<Elem>]) -> V
             }
         }
         let inboxes = ex.deliver(mach);
-        for &dst in &dsts {
-            let acc = cur[dst].as_mut().expect("receiver must hold data");
-            let merged = merge(acc, inboxes.single(pes[dst]));
-            mach.work_linear(pes[dst], merged.len());
-            mach.note_mem(pes[dst], merged.len(), "gather-merge");
-            *acc = merged;
+        // pull each receiver's accumulator into a dense task list (cheap
+        // pointer moves — `cur` is rank-indexed and the receivers are
+        // strided), merge as one PE task per receiver, put back
+        let mut accs: Vec<Vec<Elem>> = dsts
+            .iter()
+            .map(|&dst| cur[dst].take().expect("receiver must hold data"))
+            .collect();
+        let task_pes: Vec<usize> = dsts.iter().map(|&dst| pes[dst]).collect();
+        let total: usize = accs.iter().map(Vec::len).sum::<usize>()
+            + task_pes.iter().map(|&pe| inboxes.total(pe)).sum::<usize>();
+        mach.par_pes_on(&task_pes, ParSpec::work(total).bufs(1), &mut accs, |ctx, acc| {
+            let mut merged = ctx.take_buf();
+            merge_into(acc, inboxes.single(ctx.pe()), &mut merged);
+            ctx.work_linear(merged.len());
+            ctx.note_mem(merged.len(), "gather-merge");
+            ctx.recycle_buf(std::mem::replace(acc, merged));
+        });
+        for (&dst, acc) in dsts.iter().zip(accs) {
+            cur[dst] = Some(acc);
         }
         mach.recycle(inboxes);
     }
@@ -202,7 +230,7 @@ pub fn allreduce_vec_u64(
     mach: &mut Machine,
     pes: &[usize],
     vals: &mut [Vec<u64>],
-    op: impl Fn(u64, u64) -> u64,
+    op: impl Fn(u64, u64) -> u64 + Sync,
 ) {
     let dim = assert_pow2(pes);
     let size = pes.len();
@@ -216,13 +244,22 @@ pub fn allreduce_vec_u64(
             mach.xchg(pes[r], pes[pr], len, len);
         }
         mach.settle();
-        for r in 0..size {
-            let pr = r ^ bit;
-            let dst = &mut vals[pes[r]];
+        // element-wise combine: one PE task per member — RFIS' rank
+        // reduction runs this over n/√p-length vectors. `vals` is
+        // global-PE-indexed and the group may be strided, so the vectors
+        // are taken out around the round (pointer moves).
+        let mut items: Vec<Vec<u64>> =
+            pes.iter().map(|&pe| std::mem::take(&mut vals[pe])).collect();
+        let op = &op;
+        mach.par_pes_on(pes, ParSpec::work(size * len), &mut items, |ctx, dst| {
+            let pr = ctx.rank() ^ bit;
             for (d, s) in dst.iter_mut().zip(snapshot[pr].iter()) {
                 *d = op(*d, *s);
             }
-            mach.work_linear(pes[r], len);
+            ctx.work_linear(len);
+        });
+        for (&pe, item) in pes.iter().zip(items) {
+            vals[pe] = item;
         }
     }
 }

@@ -126,6 +126,11 @@ pub(crate) struct PlanePool {
     route_sorted: Vec<(usize, usize, usize)>,
     /// Scratch list for empty payloads awaiting return to `bufs`.
     skipped: Vec<Vec<Elem>>,
+    /// Per-dest run counts for the parallel inbox materialization of
+    /// large rounds (see [`Exchange::deliver`]).
+    deliver_counts: Vec<u32>,
+    /// Per-run inbox slot (post order within its destination), same path.
+    deliver_slots: Vec<u32>,
 }
 
 impl PlanePool {
@@ -157,8 +162,15 @@ impl PlanePool {
         self.route_idx.clear();
         self.route.clear();
         self.route_sorted.clear();
+        self.deliver_counts.clear();
+        self.deliver_slots.clear();
     }
 }
+
+/// Posted-run count from which [`Exchange::deliver`] distributes the
+/// per-PE inbox materialization over the worker pool; below it the
+/// sequential drain wins (each move is a ~32-byte pointer relocation).
+const PAR_DELIVER_MIN_RUNS: usize = 1 << 14;
 
 /// An open payload round on one [`Machine`] — see the module docs.
 ///
@@ -343,11 +355,60 @@ impl Exchange {
             table.resize_with(self.p, Vec::new);
         }
         let mut moved: u64 = 0;
-        for run in self.posted.drain(..) {
-            if run.charged {
-                moved += run.payload.len() as u64;
+        if self.posted.len() >= PAR_DELIVER_MIN_RUNS && mach.pe_jobs() > 1 {
+            // Large round: materialize the inboxes on the worker pool. A
+            // counting pass assigns every run its (dest, slot) — slot =
+            // post order within the destination, so per-receiver run
+            // order is identical to the sequential drain — then the
+            // pre-sized slots are filled in parallel. The final table is
+            // bit-identical either way; only host wallclock changes.
+            let posted_len = self.posted.len();
+            let mut counts = std::mem::take(&mut mach.plane.deliver_counts);
+            counts.clear();
+            counts.resize(self.p, 0);
+            let mut slots = std::mem::take(&mut mach.plane.deliver_slots);
+            slots.clear();
+            slots.reserve(posted_len);
+            for run in &self.posted {
+                if run.charged {
+                    moved += run.payload.len() as u64;
+                }
+                slots.push(counts[run.dest]);
+                counts[run.dest] += 1;
             }
-            table[run.dest].push((run.tag, run.payload));
+            for (dest_box, &count) in table.iter_mut().zip(counts.iter()) {
+                // placeholder runs are overwritten below; `Vec::new` does
+                // not allocate, so pre-sizing is one table resize per dest
+                dest_box.resize_with(count as usize, || (0u64, Vec::new()));
+            }
+            {
+                let bases: Vec<crate::exec::SliceCells<Run>> = table
+                    .iter_mut()
+                    .map(|dest_box| crate::exec::SliceCells::new(dest_box.as_mut_slice()))
+                    .collect();
+                let posted_cells = crate::exec::SliceCells::new(&mut self.posted);
+                let bases = &bases;
+                let slots = &slots;
+                crate::exec::parallel_map(mach.pe_jobs(), posted_len, move |i| {
+                    // SAFETY: parallel_map claims each posted index exactly
+                    // once, and every (dest, slot) pair is unique (slots
+                    // are per-dest counters), so the two &mut borrows are
+                    // disjoint across workers.
+                    let run = unsafe { posted_cells.get_mut(i) };
+                    let target = unsafe { bases[run.dest].get_mut(slots[i] as usize) };
+                    *target = (run.tag, std::mem::take(&mut run.payload));
+                });
+            }
+            self.posted.clear();
+            mach.plane.deliver_counts = counts;
+            mach.plane.deliver_slots = slots;
+        } else {
+            for run in self.posted.drain(..) {
+                if run.charged {
+                    moved += run.payload.len() as u64;
+                }
+                table[run.dest].push((run.tag, run.payload));
+            }
         }
         debug_assert_eq!(
             charged_words, moved,
@@ -623,6 +684,45 @@ mod tests {
         mach.reset(2, CostModel { alpha: 100.0, beta: 1.0, cmp: 1.0, duplex: true });
         assert_eq!(mach.exchange_charged(), 0);
         assert_eq!(mach.exchange_moved(), 0);
+    }
+
+    /// Above the size gate, deliver materializes the inboxes on the
+    /// worker pool; the table (runs, per-receiver order, tags) and the
+    /// charges must match the sequential drain bit for bit.
+    #[test]
+    fn parallel_materialization_matches_sequential() {
+        let post_all = |mach: &mut Machine| -> Inboxes {
+            let p = mach.p();
+            let mut ex = mach.exchange();
+            for i in 0..PAR_DELIVER_MIN_RUNS {
+                let from = i % p;
+                // every 5th post is local (from == to), the rest remote
+                let to = if i % 5 == 0 { from } else { (i * 7 + 3) % p };
+                let mut run = mach.take_buf();
+                run.push(Elem::new(i as u64, from, i));
+                ex.post_tagged(from, to, i as u64, run);
+            }
+            ex.deliver(mach)
+        };
+        let mut seq = m(8);
+        seq.set_pe_jobs(1);
+        let seq_in = post_all(&mut seq);
+        let mut par = m(8);
+        par.set_pe_jobs(4);
+        let par_in = post_all(&mut par);
+        for pe in 0..8 {
+            assert_eq!(seq.clock(pe).to_bits(), par.clock(pe).to_bits(), "pe {pe}");
+            let (a, b) = (seq_in.runs(pe), par_in.runs(pe));
+            assert_eq!(a.len(), b.len(), "pe {pe} run count");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.0, y.0, "pe {pe} tag");
+                assert_eq!(x.1, y.1, "pe {pe} payload");
+            }
+        }
+        assert_eq!(seq.exchange_charged(), par.exchange_charged());
+        assert_eq!(seq.exchange_moved(), par.exchange_moved());
+        seq.recycle(seq_in);
+        par.recycle(par_in);
     }
 
     #[test]

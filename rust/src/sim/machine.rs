@@ -1,5 +1,11 @@
-//! Per-PE virtual clocks + the α-β accounting rules.
+//! Per-PE virtual clocks + the α-β accounting rules, plus the
+//! pool-scheduled **PE task** layer ([`Machine::par_pes`] /
+//! [`Machine::par_superstep`]) that lets the p independent local phases of
+//! a superstep run on worker threads while staying bit-identical to
+//! sequential execution.
 
+use crate::elements::{Elem, MergeScratch};
+use crate::exec;
 use crate::metrics::Stats;
 use crate::model::CostModel;
 use crate::sim::exchange::PlanePool;
@@ -74,6 +80,203 @@ struct Transcript {
 /// Process-unique id source for [`Machine::instance_id`].
 static MACHINE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
+/// Minimum total-work hint (elements touched across all tasks of one
+/// [`Machine::par_pes`] round) before worker threads are engaged; smaller
+/// rounds run inline, where spawning would cost more than it buys. The
+/// gate depends only on the hint — never on timing — so it cannot affect
+/// results, only host scheduling.
+pub const PAR_MIN_WORK: usize = 4096;
+
+/// Size/buffer hints for one [`Machine::par_pes`] round.
+///
+/// `work` is the round's total element count (summed over all tasks); it
+/// gates the inline-vs-pooled decision against [`PAR_MIN_WORK`]. `bufs`
+/// pre-seeds every task's [`PeCtx::take_buf`] stash with that many pooled
+/// buffers, keeping the warm path allocation-free without letting tasks
+/// touch the machine-owned pool concurrently.
+#[derive(Clone, Copy, Debug)]
+pub struct ParSpec {
+    work: usize,
+    bufs_each: usize,
+}
+
+impl ParSpec {
+    /// A spec with the given total-work hint and no pre-seeded buffers.
+    pub fn work(total_elems: usize) -> Self {
+        Self { work: total_elems, bufs_each: 0 }
+    }
+
+    /// Pre-seed each task's buffer stash with `k` pooled buffers.
+    pub fn bufs(mut self, k: usize) -> Self {
+        self.bufs_each = k;
+        self
+    }
+}
+
+/// One buffered charge of a task-local ledger (see [`PeCtx`]).
+#[derive(Clone, Debug)]
+enum PeCharge {
+    Work(f64),
+    Mem { at: usize, elems: usize, context: &'static str },
+    Fail { context: &'static str },
+    Xchg { with: usize, l_out: usize, l_in: usize },
+    Send { to: usize, words: usize },
+    Route { to: usize, words: usize },
+}
+
+/// Task-local charge ledger handed to every per-PE closure of a
+/// [`Machine::par_pes`] / [`Machine::par_superstep`] round.
+///
+/// A PE task cannot touch the machine (its clocks, stats, and pools are
+/// shared across all tasks of the round); instead it records its
+/// work/memory/communication charges here, and the machine **settles** all
+/// ledgers *in PE order* after the round — replaying each charge through
+/// the exact same `Machine` entry points a sequential `for pe in 0..p`
+/// loop would have called, in the exact same order. Settlement is
+/// therefore bit-identical to sequential execution (float addition order
+/// included), for every `pe_jobs` value and every thread interleaving:
+/// the ledger contents depend only on the task's own inputs, never on
+/// scheduling.
+///
+/// The ctx also carries a private buffer stash ([`PeCtx::take_buf`] /
+/// [`PeCtx::recycle_buf`]) pre-seeded from the machine's data-plane pool
+/// (see [`ParSpec::bufs`]) and a reusable [`MergeScratch`]; leftovers
+/// return to the machine pool at settlement. Ctx objects and the round's
+/// task container are pooled on the machine too, so the *element-buffer*
+/// path of a warm round allocates nothing — the remaining per-round
+/// allocations are the small result/collection vectors the closures
+/// return, same order as the task count, not the data.
+#[derive(Clone, Debug, Default)]
+pub struct PeCtx {
+    pe: usize,
+    rank: usize,
+    cost: CostModel,
+    charges: Vec<PeCharge>,
+    bufs: Vec<Vec<Elem>>,
+    merge: MergeScratch,
+}
+
+impl PeCtx {
+    /// Global PE number this task charges to.
+    #[inline]
+    pub fn pe(&self) -> usize {
+        self.pe
+    }
+
+    /// Task index within the round (the group *rank* for
+    /// [`Machine::par_pes_on`] call sites).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The machine's cost model (copied per round).
+    #[inline]
+    pub fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Charge raw local work (instruction units) to this PE.
+    #[inline]
+    pub fn work(&mut self, ops: f64) {
+        self.charges.push(PeCharge::Work(ops));
+    }
+
+    /// Charge a comparison-sort of `m` local elements.
+    #[inline]
+    pub fn work_sort(&mut self, m: usize) {
+        let ops = self.cost.sort_work(m);
+        self.work(ops);
+    }
+
+    /// Charge a linear pass over `m` elements.
+    #[inline]
+    pub fn work_linear(&mut self, m: usize) {
+        let ops = self.cost.linear_work(m);
+        self.work(ops);
+    }
+
+    /// Charge a branchless classifier pass over `m` elements, `k` buckets.
+    #[inline]
+    pub fn work_classify(&mut self, m: usize, k: usize) {
+        let ops = self.cost.classify_work(m, k);
+        self.work(ops);
+    }
+
+    /// Record that this PE currently holds `elems` elements
+    /// (→ [`Machine::note_mem`] at settlement).
+    #[inline]
+    pub fn note_mem(&mut self, elems: usize, context: &'static str) {
+        self.charges.push(PeCharge::Mem { at: self.pe, elems, context });
+    }
+
+    /// [`PeCtx::note_mem`] against another PE — for phases where a task
+    /// computes a *remote* PE's residency (RAMS' DMA entry accounting).
+    #[inline]
+    pub fn note_mem_at(&mut self, pe: usize, elems: usize, context: &'static str) {
+        self.charges.push(PeCharge::Mem { at: pe, elems, context });
+    }
+
+    /// Record an unconditional failure (→ [`Machine::fail`]).
+    #[inline]
+    pub fn fail(&mut self, context: &'static str) {
+        self.charges.push(PeCharge::Fail { context });
+    }
+
+    /// Buffer a pairwise exchange charge `self.pe() ↔ with`
+    /// (→ [`Machine::xchg`] at settlement, in PE order).
+    #[inline]
+    pub fn xchg(&mut self, with: usize, l_out: usize, l_in: usize) {
+        self.charges.push(PeCharge::Xchg { with, l_out, l_in });
+    }
+
+    /// Buffer a one-way message charge (→ [`Machine::send`]).
+    #[inline]
+    pub fn send(&mut self, to: usize, words: usize) {
+        self.charges.push(PeCharge::Send { to, words });
+    }
+
+    /// Buffer one routed message (→ [`Machine::route_round`]; inside a
+    /// [`Machine::par_superstep`] all routed charges of the round settle
+    /// as **one** combined h-relation).
+    #[inline]
+    pub fn route(&mut self, to: usize, words: usize) {
+        self.charges.push(PeCharge::Route { to, words });
+    }
+
+    /// A cleared element buffer from the task's pre-seeded stash (or a
+    /// fresh one once the stash is exhausted). The stash — including
+    /// everything recycled back — returns to the machine pool at
+    /// settlement.
+    #[inline]
+    pub fn take_buf(&mut self) -> Vec<Elem> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the task stash (cleared).
+    #[inline]
+    pub fn recycle_buf(&mut self, mut buf: Vec<Elem>) {
+        buf.clear();
+        self.bufs.push(buf);
+    }
+
+    /// The task's reusable multiway-merge scratch (for
+    /// [`crate::elements::multiway_merge_into`]).
+    #[inline]
+    pub fn merge_scratch(&mut self) -> &mut MergeScratch {
+        &mut self.merge
+    }
+}
+
+/// PE addressing of one parallel round.
+#[derive(Clone, Copy)]
+enum PeMap<'a> {
+    /// Task `i` charges PE `base + i` (contiguous subcubes).
+    From(usize),
+    /// Task `i` charges PE `pes[i]` (strided groups — RFIS rows/columns).
+    Of(&'a [usize]),
+}
+
 /// The simulated machine: `p` PEs, one virtual clock each.
 #[derive(Clone, Debug)]
 pub struct Machine {
@@ -99,6 +302,16 @@ pub struct Machine {
     elems_charged: u64,
     /// Cumulative elements delivered remotely through the data plane.
     elems_moved: u64,
+    /// Worker threads for PE-task rounds ([`Machine::par_pes`]); host
+    /// scheduling only — results are identical for every value.
+    pe_jobs: usize,
+    /// Pooled task contexts (drained ledgers, warm scratch), reused across
+    /// [`Machine::par_pes`] rounds.
+    ctx_pool: Vec<PeCtx>,
+    /// Spare round container for `par_core`'s task list (kept empty
+    /// between rounds) — warm rounds reuse its capacity instead of
+    /// allocating a fresh `Vec` per round.
+    ctx_round: Vec<PeCtx>,
 }
 
 impl Machine {
@@ -120,6 +333,9 @@ impl Machine {
             plane: PlanePool::default(),
             elems_charged: 0,
             elems_moved: 0,
+            pe_jobs: exec::default_pe_jobs(),
+            ctx_pool: Vec::new(),
+            ctx_round: Vec::new(),
         }
     }
 
@@ -155,6 +371,23 @@ impl Machine {
         self.plane.reset();
         self.elems_charged = 0;
         self.elems_moved = 0;
+        // pe_jobs and the ctx pool survive: both are host-execution state
+        // (scheduling + warm scratch), invisible to simulation results
+    }
+
+    /// Set the worker-thread count for PE-task rounds
+    /// ([`Machine::par_pes`] / [`Machine::par_superstep`]). Host
+    /// scheduling only: results are bit-identical for every value
+    /// (default: `RMPS_PE_JOBS` / CLI `--pe-jobs`, else all cores — see
+    /// [`crate::exec::default_pe_jobs`]). Survives [`Machine::reset`].
+    pub fn set_pe_jobs(&mut self, jobs: usize) {
+        self.pe_jobs = jobs.max(1);
+    }
+
+    /// Current PE-task worker count (see [`Machine::set_pe_jobs`]).
+    #[inline]
+    pub fn pe_jobs(&self) -> usize {
+        self.pe_jobs
     }
 
     /// Cumulative element-words the data plane has charged to the cost
@@ -376,6 +609,27 @@ impl Machine {
     ///   charges on the shared PE). Debug builds assert both disjointness
     ///   conditions.
     ///
+    /// # PE-task settlement ordering
+    ///
+    /// The pool-scheduled PE-task layer ([`Machine::par_pes`] /
+    /// [`Machine::par_superstep`]) builds on the same exactness argument.
+    /// Its ordering rules:
+    ///
+    /// 1. every task's charges replay at settlement in **(PE, call)
+    ///    order** — all of task 0's charges in the order it recorded
+    ///    them, then task 1's, … — which is exactly the order a
+    ///    sequential `for pe { … }` loop issues;
+    /// 2. crash selection inherits the first-crash-wins rule of
+    ///    [`Machine::note_mem`] under that replay order, so the crashing
+    ///    (PE, call site) is identical to sequential execution no matter
+    ///    which worker finished first;
+    /// 3. in [`Machine::par_superstep`], communication charges buffer
+    ///    into this transcript and settle as one batched round *after*
+    ///    all work/memory charges, under the same disjointness contract
+    ///    as hand-written supersteps;
+    /// 4. a raw superstep and a PE-task round never overlap (both
+    ///    assert), so there is exactly one charge stream to order.
+    ///
     /// [`xchg`]: Machine::xchg
     /// [`send`]: Machine::send
     /// [`route_round`]: Machine::route_round
@@ -535,6 +789,161 @@ impl Machine {
         let max = pes.iter().map(|&i| self.clock[i]).fold(0.0, f64::max);
         for &i in pes {
             self.clock[i] = max;
+        }
+    }
+
+    // ---- pool-scheduled PE tasks ---------------------------------------
+
+    /// Run one per-PE task for every item of `data` — task `i` gets
+    /// `&mut data[i]` and a [`PeCtx`] ledger charging PE `first_pe + i` —
+    /// on up to [`Machine::pe_jobs`] workers of the shared
+    /// [`crate::exec`] pool, then settle all ledgers **in PE order**.
+    ///
+    /// # Determinism contract
+    ///
+    /// The closure must be a pure function of its own item, the ctx, and
+    /// shared *immutable* captures. Charges are buffered per task and
+    /// replayed in (PE, call) order at settlement — the exact sequence a
+    /// sequential `for pe { … }` loop over the same bodies would have
+    /// issued — so results (clocks, stats, crash selection, float addition
+    /// order) are bit-identical for every `pe_jobs` value and every
+    /// thread interleaving. Rounds whose [`ParSpec::work`] hint is below
+    /// [`PAR_MIN_WORK`] run inline through the *same* ledger machinery,
+    /// so the inline and pooled paths cannot diverge.
+    ///
+    /// Communication charges recorded through [`PeCtx::xchg`] /
+    /// [`PeCtx::send`] / [`PeCtx::route`] settle **eagerly** in the same
+    /// replay order (each routed message as its own round); use
+    /// [`Machine::par_superstep`] to settle them as one batched
+    /// superstep instead. Panics if a raw superstep is already open.
+    pub fn par_pes<T: Send, R: Send>(
+        &mut self,
+        first_pe: usize,
+        spec: ParSpec,
+        data: &mut [T],
+        f: impl Fn(&mut PeCtx, &mut T) -> R + Sync,
+    ) -> Vec<R> {
+        self.par_core(PeMap::From(first_pe), spec, data, false, f)
+    }
+
+    /// [`Machine::par_pes`] with an explicit PE mapping: task `i` charges
+    /// PE `pes[i]` (strided groups — RFIS grid rows/columns, collectives
+    /// over arbitrary member lists). `pes.len()` must equal `data.len()`.
+    pub fn par_pes_on<T: Send, R: Send>(
+        &mut self,
+        pes: &[usize],
+        spec: ParSpec,
+        data: &mut [T],
+        f: impl Fn(&mut PeCtx, &mut T) -> R + Sync,
+    ) -> Vec<R> {
+        assert_eq!(pes.len(), data.len(), "one task per group member");
+        self.par_core(PeMap::Of(pes), spec, data, false, f)
+    }
+
+    /// [`Machine::par_pes`] whose communication charges settle as **one**
+    /// batched superstep: after the per-PE work/memory charges replay, all
+    /// [`PeCtx::xchg`]/[`PeCtx::send`]/[`PeCtx::route`] charges of the
+    /// round are applied inside a single
+    /// [`begin_superstep`]/[`settle`] window — pairwise ops in (PE, call)
+    /// order, routed messages merged into one h-relation. The superstep
+    /// exactness contract applies (disjoint pairwise PE pairs; see
+    /// [`Machine::begin_superstep`]).
+    ///
+    /// [`begin_superstep`]: Machine::begin_superstep
+    /// [`settle`]: Machine::settle
+    pub fn par_superstep<T: Send, R: Send>(
+        &mut self,
+        first_pe: usize,
+        spec: ParSpec,
+        data: &mut [T],
+        f: impl Fn(&mut PeCtx, &mut T) -> R + Sync,
+    ) -> Vec<R> {
+        self.par_core(PeMap::From(first_pe), spec, data, true, f)
+    }
+
+    fn par_core<T: Send, R: Send>(
+        &mut self,
+        map: PeMap<'_>,
+        spec: ParSpec,
+        data: &mut [T],
+        superstep: bool,
+        f: impl Fn(&mut PeCtx, &mut T) -> R + Sync,
+    ) -> Vec<R> {
+        assert!(
+            !self.in_superstep(),
+            "cannot run PE tasks inside an open raw superstep"
+        );
+        let n = data.len();
+        // reuse the spare round container: warm rounds allocate no task
+        // list (the ctx objects themselves come from ctx_pool)
+        let mut ctxs: Vec<PeCtx> = std::mem::take(&mut self.ctx_round);
+        debug_assert!(ctxs.is_empty());
+        ctxs.reserve(n);
+        for i in 0..n {
+            let pe = match map {
+                PeMap::From(base) => base + i,
+                PeMap::Of(pes) => pes[i],
+            };
+            debug_assert!(pe < self.p, "task PE {pe} out of range (p = {})", self.p);
+            let mut ctx = self.ctx_pool.pop().unwrap_or_default();
+            ctx.pe = pe;
+            ctx.rank = i;
+            ctx.cost = self.cost;
+            debug_assert!(ctx.charges.is_empty() && ctx.bufs.is_empty());
+            for _ in 0..spec.bufs_each {
+                // pooled buffers while they last; an exhausted pool hands
+                // out fresh (unallocated) empties
+                let buf = self.plane.take_buf();
+                ctx.bufs.push(buf);
+            }
+            ctxs.push(ctx);
+        }
+        let jobs = if spec.work >= PAR_MIN_WORK { self.pe_jobs } else { 1 };
+        let results: Vec<R> = {
+            let data_cells = exec::SliceCells::new(data);
+            let ctx_cells = exec::SliceCells::new(&mut ctxs);
+            let f = &f;
+            exec::parallel_map(jobs, n, move |i| {
+                // SAFETY: parallel_map claims each index exactly once, so
+                // these are the only &mut borrows of data[i] and ctxs[i].
+                let (ctx, item) = unsafe { (ctx_cells.get_mut(i), data_cells.get_mut(i)) };
+                f(ctx, item)
+            })
+        };
+        if superstep {
+            // work/mem charges apply eagerly inside the window; comm
+            // charges buffer into the transcript and settle as one round
+            self.begin_superstep();
+        }
+        for ctx in ctxs.iter_mut() {
+            self.settle_ctx_charges(ctx);
+        }
+        if superstep {
+            self.settle();
+        }
+        for mut ctx in ctxs.drain(..) {
+            for buf in ctx.bufs.drain(..) {
+                self.plane.recycle_buf(buf);
+            }
+            self.ctx_pool.push(ctx);
+        }
+        self.ctx_round = ctxs;
+        results
+    }
+
+    /// Replay one task ledger through the ordinary charge entry points —
+    /// the settlement half of the [`PeCtx`] determinism contract.
+    fn settle_ctx_charges(&mut self, ctx: &mut PeCtx) {
+        let pe = ctx.pe;
+        for charge in ctx.charges.drain(..) {
+            match charge {
+                PeCharge::Work(ops) => self.work(pe, ops),
+                PeCharge::Mem { at, elems, context } => self.note_mem(at, elems, context),
+                PeCharge::Fail { context } => self.fail(pe, context),
+                PeCharge::Xchg { with, l_out, l_in } => self.xchg(pe, with, l_out, l_in),
+                PeCharge::Send { to, words } => self.send(pe, to, words),
+                PeCharge::Route { to, words } => self.route_round(&[(pe, to, words)]),
+            }
         }
     }
 }
@@ -712,5 +1121,211 @@ mod tests {
         let mut mach = m(2);
         mach.begin_superstep();
         mach.begin_superstep();
+    }
+
+    /// The work/mem ledger settles bit-identically to the sequential loop
+    /// it replaces, for any pe_jobs value (forcing the pooled path with a
+    /// large work hint).
+    #[test]
+    fn par_pes_settlement_matches_sequential_loop() {
+        let lens: Vec<usize> = (0..16).map(|pe| 10 + 7 * pe).collect();
+
+        let mut eager = m(16);
+        eager.mem_cap_elems = Some(100);
+        for (pe, &len) in lens.iter().enumerate() {
+            eager.work_sort(pe, len);
+            eager.work_linear(pe, len / 2);
+            eager.note_mem(pe, len, "par test");
+        }
+
+        for pe_jobs in [1usize, 3, 8] {
+            let mut par = m(16);
+            par.mem_cap_elems = Some(100);
+            par.set_pe_jobs(pe_jobs);
+            let mut items = lens.clone();
+            par.par_pes(0, ParSpec::work(PAR_MIN_WORK), &mut items, |ctx, len| {
+                ctx.work_sort(*len);
+                ctx.work_linear(*len / 2);
+                ctx.note_mem(*len, "par test");
+            });
+            for pe in 0..16 {
+                assert_eq!(
+                    eager.clock(pe).to_bits(),
+                    par.clock(pe).to_bits(),
+                    "pe {pe} jobs {pe_jobs}"
+                );
+            }
+            assert_eq!(
+                eager.stats.local_work.to_bits(),
+                par.stats.local_work.to_bits(),
+                "jobs {pe_jobs}"
+            );
+            assert_eq!(eager.stats.max_mem_elems, par.stats.max_mem_elems);
+            // crash selection: the sequential first-crash-wins order
+            assert_eq!(
+                eager.crash().map(|c| c.to_string()),
+                par.crash().map(|c| c.to_string()),
+                "jobs {pe_jobs}"
+            );
+        }
+    }
+
+    /// Several tasks over the cap: the crash must name the *lowest* PE —
+    /// sequential order — not whichever worker raced there first.
+    #[test]
+    fn par_pes_crash_selection_is_pe_ordered() {
+        let mut mach = m(8);
+        mach.mem_cap_elems = Some(10);
+        mach.set_pe_jobs(8);
+        let mut items = vec![0usize; 8];
+        mach.par_pes(0, ParSpec::work(PAR_MIN_WORK), &mut items, |ctx, _| {
+            if ctx.pe() >= 3 {
+                ctx.note_mem(100 + ctx.pe(), "overflow");
+            }
+        });
+        let c = mach.crash().expect("over cap");
+        assert_eq!(c.pe, 3);
+        assert_eq!(c.resident_elems, 103);
+    }
+
+    /// par_superstep: communication charges of all tasks settle as one
+    /// batched round, identical to the hand-written superstep — one
+    /// hypercube dimension (PE t paired with t+4) as the canonical shape.
+    #[test]
+    fn par_superstep_comm_matches_hand_written_superstep() {
+        let mut eager = m(8);
+        for pe in 0..8 {
+            eager.work(pe, (pe * 13) as f64);
+        }
+        eager.begin_superstep();
+        for t in 0..4usize {
+            eager.work(t, 5.0);
+            eager.xchg(t, t + 4, 4, 2);
+        }
+        eager.settle();
+
+        let mut par = m(8);
+        par.set_pe_jobs(4);
+        for pe in 0..8 {
+            par.work(pe, (pe * 13) as f64);
+        }
+        let mut items = [(); 4];
+        par.par_superstep(0, ParSpec::work(PAR_MIN_WORK), &mut items, |ctx, _| {
+            ctx.work(5.0);
+            let partner = ctx.pe() + 4;
+            ctx.xchg(partner, 4, 2);
+        });
+        for pe in 0..8 {
+            assert_eq!(eager.clock(pe).to_bits(), par.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(eager.stats.messages, par.stats.messages);
+        assert_eq!(eager.stats.words, par.stats.words);
+    }
+
+    /// All tasks' routed ledger charges settle as **one** h-relation
+    /// under par_superstep: identical to an eager `route_round` over the
+    /// concatenated message list.
+    #[test]
+    fn par_superstep_merges_routed_ledger_charges() {
+        let msgs: Vec<(usize, usize, usize)> = (0..4).map(|t| (t, t + 4, 3 + t)).collect();
+        let mut eager = m(8);
+        eager.route_round(&msgs);
+
+        let mut par = m(8);
+        par.set_pe_jobs(4);
+        let mut items = [(); 4];
+        par.par_superstep(0, ParSpec::work(PAR_MIN_WORK), &mut items, |ctx, _| {
+            let to = ctx.pe() + 4;
+            ctx.route(to, 3 + ctx.pe());
+        });
+        for pe in 0..8 {
+            assert_eq!(eager.clock(pe).to_bits(), par.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(eager.stats.messages, par.stats.messages);
+        assert_eq!(eager.stats.words, par.stats.words);
+        assert_eq!(eager.stats.max_degree, par.stats.max_degree);
+    }
+
+    /// The send and fail ledger arms replay in (PE, call) order — the
+    /// eager sequence of the sequential loop they stand in for.
+    #[test]
+    fn par_pes_send_and_fail_settle_in_pe_order() {
+        let mut eager = m(4);
+        eager.send(0, 1, 5);
+        eager.fail(1, "task failure");
+        eager.send(2, 3, 7);
+
+        let mut par = m(4);
+        par.set_pe_jobs(4);
+        let mut items = [(); 4];
+        par.par_pes(0, ParSpec::work(PAR_MIN_WORK), &mut items, |ctx, _| {
+            match ctx.pe() {
+                0 => ctx.send(1, 5),
+                1 => ctx.fail("task failure"),
+                2 => ctx.send(3, 7),
+                _ => {}
+            }
+        });
+        for pe in 0..4 {
+            assert_eq!(eager.clock(pe).to_bits(), par.clock(pe).to_bits(), "pe {pe}");
+        }
+        assert_eq!(
+            eager.crash().map(|c| c.to_string()),
+            par.crash().map(|c| c.to_string())
+        );
+        assert_eq!(eager.stats.messages, par.stats.messages);
+    }
+
+    /// Task buffer stash: pre-seeded from the machine pool, leftovers (and
+    /// everything recycled into the ctx) return to the pool afterwards.
+    #[test]
+    fn par_pes_buffers_cycle_through_the_machine_pool() {
+        let mut mach = m(4);
+        // warm the pool with recognisable capacity
+        let mut warm = Vec::with_capacity(64);
+        warm.push(crate::elements::Elem::with_id(1, 1));
+        mach.recycle_buf(warm);
+        let mut items = [0usize; 4];
+        let produced = mach.par_pes(0, ParSpec::work(0).bufs(1), &mut items, |ctx, _| {
+            let mut b = ctx.take_buf();
+            b.push(crate::elements::Elem::with_id(2, 2));
+            ctx.recycle_buf(b);
+            let b2 = ctx.take_buf(); // stash: the recycled buffer again
+            ctx.recycle_buf(b2);
+            ctx.pe()
+        });
+        assert_eq!(produced, vec![0, 1, 2, 3]);
+        // pool holds the returned stash buffers: at least the warm one
+        let back = mach.take_buf();
+        assert!(back.is_empty(), "recycled buffers come back cleared");
+    }
+
+    /// Small rounds run inline, large rounds may use workers — both paths
+    /// go through the same ledger, so the results agree bitwise.
+    #[test]
+    fn par_pes_inline_and_pooled_agree() {
+        let run = |work_hint: usize, pe_jobs: usize| -> (Vec<u64>, f64) {
+            let mut mach = m(8);
+            mach.set_pe_jobs(pe_jobs);
+            let mut items: Vec<usize> = (0..8).collect();
+            let out = mach.par_pes(0, ParSpec::work(work_hint), &mut items, |ctx, v| {
+                ctx.work_linear(*v * 100);
+                (*v as u64) * 3
+            });
+            (out, mach.time())
+        };
+        let (a, ta) = run(0, 8); // inline (below PAR_MIN_WORK)
+        let (b, tb) = run(PAR_MIN_WORK, 8); // pooled
+        assert_eq!(a, b);
+        assert_eq!(ta.to_bits(), tb.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "inside an open raw superstep")]
+    fn par_pes_inside_superstep_panics() {
+        let mut mach = m(2);
+        mach.begin_superstep();
+        let mut items = [0usize; 2];
+        mach.par_pes(0, ParSpec::work(0), &mut items, |_, _| {});
     }
 }

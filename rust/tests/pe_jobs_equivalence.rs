@@ -1,0 +1,150 @@
+//! The intra-run parallelism determinism contract: every `pe_jobs` value
+//! must produce **bit-identical** [`RunReport`]s — the PE-task ledgers
+//! settle in PE order regardless of which worker ran what (see the
+//! `PeCtx` docs in `rmps::sim`), so `--pe-jobs 1`, `--pe-jobs 3`, and
+//! `--pe-jobs <all cores>` are indistinguishable in everything but host
+//! wallclock.
+//!
+//! Style of `exchange_equivalence.rs`: field-by-field equality (floats as
+//! raw bits) over all 15 registered sorters × a distributions/sizes grid,
+//! including out-of-range inputs and memory-capped **crash reports** —
+//! the crashing (PE, resident count, context) string must not depend on
+//! worker interleaving either.
+
+use rmps::algorithms::{Algorithm, RunReport, Runner};
+use rmps::config::RunConfig;
+use rmps::input::{generate, Distribution};
+
+/// Field-by-field byte comparison (floats as raw bits). `wall_ms` is host
+/// wallclock and exempt by nature.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm");
+    assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: time");
+    assert_eq!(a.stats.messages, b.stats.messages, "{ctx}: messages");
+    assert_eq!(a.stats.words, b.stats.words, "{ctx}: words");
+    assert_eq!(
+        a.stats.local_work.to_bits(),
+        b.stats.local_work.to_bits(),
+        "{ctx}: local_work"
+    );
+    assert_eq!(a.stats.max_mem_elems, b.stats.max_mem_elems, "{ctx}: max_mem_elems");
+    assert_eq!(a.stats.max_degree, b.stats.max_degree, "{ctx}: max_degree");
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed");
+    assert_eq!(a.output_shape, b.output_shape, "{ctx}: output_shape");
+    assert_eq!(a.is_globally_sorted, b.is_globally_sorted, "{ctx}: is_globally_sorted");
+    let (va, vb) = (&a.validation, &b.validation);
+    assert_eq!(va.locally_sorted, vb.locally_sorted, "{ctx}: locally_sorted");
+    assert_eq!(va.globally_sorted, vb.globally_sorted, "{ctx}: globally_sorted");
+    assert_eq!(va.multiset_preserved, vb.multiset_preserved, "{ctx}: multiset");
+    assert_eq!(va.balanced, vb.balanced, "{ctx}: balanced");
+    assert_eq!(va.imbalance.max_load, vb.imbalance.max_load, "{ctx}: max_load");
+    assert_eq!(va.imbalance.min_load, vb.imbalance.min_load, "{ctx}: min_load");
+    assert_eq!(
+        va.imbalance.epsilon.to_bits(),
+        vb.imbalance.epsilon.to_bits(),
+        "{ctx}: imbalance ε"
+    );
+    assert_eq!(a.output, b.output, "{ctx}: output");
+}
+
+/// The pe_jobs values under test: serial, a deliberately awkward odd
+/// count, and everything the host has.
+fn pe_jobs_values() -> Vec<usize> {
+    let host = rmps::exec::available_jobs();
+    let mut v = vec![1usize, 3];
+    if !v.contains(&host) {
+        v.push(host);
+    }
+    v
+}
+
+fn run_with_pe_jobs(alg: Algorithm, cfg: &RunConfig, input: Vec<Vec<rmps::elements::Elem>>, pe_jobs: usize) -> RunReport {
+    let mut runner = Runner::new(cfg.clone()).pe_jobs(pe_jobs);
+    runner.run_algorithm(alg, input)
+}
+
+/// All 15 algorithms × a (distribution, size) grid, serial as the
+/// reference. `m = 512` (8192 elements at p = 16) clears the
+/// `PAR_MIN_WORK` inline gate, so the pooled path really executes;
+/// `m ∈ {1, 4, 64}` cover the inline path and the out-of-range crash
+/// reports (Minisort on m ≠ 1).
+#[test]
+fn reports_identical_for_every_pe_jobs_value() {
+    let dists = [Distribution::Uniform, Distribution::Zero, Distribution::Staggered];
+    for &dist in &dists {
+        for m in [1usize, 4, 64, 512] {
+            let cfg = RunConfig::default().with_p(16).with_n_per_pe(m);
+            for alg in Algorithm::ALL {
+                let input = generate(&cfg, dist);
+                let reference = run_with_pe_jobs(alg, &cfg, input.clone(), 1);
+                for &jobs in &pe_jobs_values()[1..] {
+                    let ctx = format!("{alg:?}/{dist:?}/m={m}/pe_jobs={jobs}");
+                    let got = run_with_pe_jobs(alg, &cfg, input.clone(), jobs);
+                    assert_reports_identical(&reference, &got, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// The sparse regime (n < p): the selector hands off to GatherM, RFIS
+/// routes across a mostly-empty grid, Bitonic refuses the input.
+#[test]
+fn sparse_reports_identical_for_every_pe_jobs_value() {
+    let mut cfg = RunConfig::default().with_p(32).with_sparsity(8);
+    cfg.mem_cap_factor = None;
+    for alg in Algorithm::ALL {
+        let input = generate(&cfg, Distribution::Uniform);
+        let reference = run_with_pe_jobs(alg, &cfg, input.clone(), 1);
+        for &jobs in &pe_jobs_values()[1..] {
+            let ctx = format!("{alg:?}/sparse/pe_jobs={jobs}");
+            let got = run_with_pe_jobs(alg, &cfg, input.clone(), jobs);
+            assert_reports_identical(&reference, &got, &ctx);
+        }
+    }
+}
+
+/// Memory-capped hard instances: crash strings (PE, resident count,
+/// context) must be identical under parallel execution — the first-crash
+/// selection replays in PE order, not in worker-finish order. Sizes large
+/// enough that the crashing phases run on the pool.
+#[test]
+fn crash_reports_identical_for_every_pe_jobs_value() {
+    let mut cfg = RunConfig::default().with_p(16).with_n_per_pe(512);
+    cfg.mem_cap_factor = Some(4.0);
+    for dist in [Distribution::Zero, Distribution::DeterDupl] {
+        for alg in [
+            Algorithm::HykSort,
+            Algorithm::NtbQuick,
+            Algorithm::NtbAms,
+            Algorithm::SSort,
+            Algorithm::Rams,
+            Algorithm::RQuick,
+        ] {
+            let input = generate(&cfg, dist);
+            let reference = run_with_pe_jobs(alg, &cfg, input.clone(), 1);
+            for &jobs in &pe_jobs_values()[1..] {
+                let ctx = format!("{alg:?}/{dist:?}/capped/pe_jobs={jobs}");
+                let got = run_with_pe_jobs(alg, &cfg, input.clone(), jobs);
+                assert_reports_identical(&reference, &got, &ctx);
+            }
+        }
+    }
+}
+
+/// Machine reuse across pe_jobs switches: one Runner, flipping the knob
+/// between batched runs, still matches fresh runners bit for bit (the
+/// ctx pool and scratch survive `reset` without leaking state).
+#[test]
+fn pe_jobs_switch_on_a_reused_runner_is_clean() {
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(512);
+    let input = generate(&cfg, Distribution::Staggered);
+    let mut runner = Runner::new(cfg.clone()).pe_jobs(4);
+    let first = runner.run_algorithm(Algorithm::Rams, input.clone());
+    let mut runner = runner.pe_jobs(1);
+    let second = runner.run_algorithm(Algorithm::Rams, input.clone());
+    let mut runner = runner.pe_jobs(4);
+    let third = runner.run_algorithm(Algorithm::Rams, input);
+    assert_reports_identical(&first, &second, "pe_jobs 4 → 1 on one runner");
+    assert_reports_identical(&first, &third, "pe_jobs 1 → 4 on one runner");
+}
