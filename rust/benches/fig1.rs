@@ -1,8 +1,9 @@
 //! Bench: regenerate Figure 1 — running times of GatherM, AllGatherM,
-//! RFIS, RQuick, Bitonic, RAMS, HykSort, SSort over the n/p sweep on the
-//! four headline instances. Prints the paper-style table (simulated model
-//! time) plus host wallclock per sweep, and emits `BENCH_fig1.json` with
-//! the serial/parallel wallclocks (CI uploads it as an artifact).
+//! RFIS, RQuick, Bitonic, RAMS, HykSort, SSort, plus the successor
+//! paper's AMS-1/2/3 columns (1-factor exchange), over the n/p sweep on
+//! the four headline instances. Prints the paper-style table (simulated
+//! model time) plus host wallclock per sweep, and emits `BENCH_fig1.json`
+//! with the serial/parallel wallclocks (CI uploads it as an artifact).
 //!
 //! Knobs: RMPS_BENCH_P (default 512), RMPS_BENCH_MAXLOG (default 10),
 //!        RMPS_BENCH_REPS (default 1), RMPS_BENCH_JOBS (default: all
@@ -23,7 +24,7 @@ fn main() {
     let serial_too = common::env_usize("RMPS_BENCH_SERIAL", 1) != 0;
 
     let t = std::time::Instant::now();
-    let fig = fig1::run(&RunConfig::default().with_p(p), max_log, reps, jobs);
+    let fig = fig1::run_ams(&RunConfig::default().with_p(p), max_log, reps, jobs);
     let wall = t.elapsed().as_secs_f64();
     fig.print();
     println!(
@@ -42,7 +43,7 @@ fn main() {
     ];
     if serial_too && jobs > 1 {
         let t = std::time::Instant::now();
-        let serial = fig1::run(&RunConfig::default().with_p(p), max_log, reps, 1);
+        let serial = fig1::run_ams(&RunConfig::default().with_p(p), max_log, reps, 1);
         let serial_wall = t.elapsed().as_secs_f64();
         let identical = serial
             .cells

@@ -11,6 +11,7 @@
 //! reports, asserted in `rust/tests/runner_equivalence.rs`.
 
 pub mod all_gather_merge;
+pub mod ams;
 pub mod bitonic;
 pub mod gather_merge;
 pub mod hyksort;

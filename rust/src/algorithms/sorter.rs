@@ -7,7 +7,8 @@
 //! `RQuickSorter::nonrobust()` are two values of one type) and describes
 //! itself through metadata (`name`, `output_shape`, `is_robust`,
 //! `valid_range`). The built-in registry yields the 15 sorters of the
-//! paper's evaluation; [`register`] adds external implementations so they
+//! paper's evaluation plus the successor paper's `AMS-1`/`AMS-2`/`AMS-3`
+//! family; [`register`] adds external implementations so they
 //! appear in CLI parsing ([`find_sorter`]) and experiment enumeration
 //! (e.g. [`crate::experiments::fig1::run_with`]) without touching any
 //! dispatch table in this crate.
@@ -20,6 +21,7 @@ use crate::localsort::SortBackend;
 use crate::sim::Machine;
 
 use super::all_gather_merge::AllGatherMSorter;
+use super::ams::AmsSorter;
 use super::bitonic::BitonicSorter;
 use super::gather_merge::GatherMSorter;
 use super::hyksort::HykSorter;
@@ -116,13 +118,20 @@ fn extras() -> &'static RwLock<Vec<Arc<dyn Sorter>>> {
     EXTRAS.get_or_init(|| RwLock::new(Vec::new()))
 }
 
-/// The 15 built-in sorters of the paper's evaluation, in
-/// [`Algorithm::ALL`] order. Built once and cached — repeated registry
-/// lookups clone `Arc`s, not sorters.
+/// The built-in sorters: the 15 of the paper's evaluation in
+/// [`Algorithm::ALL`] order, followed by the successor paper's multi-level
+/// AMS family (`AMS-1`/`AMS-2`/`AMS-3` — [`AmsSorter::with_levels`] for
+/// k ∈ {1, 2, 3}, which has no legacy enum tag). Built once and cached —
+/// repeated registry lookups clone `Arc`s, not sorters.
 pub fn builtin_sorters() -> Vec<Arc<dyn Sorter>> {
     static BUILTINS: OnceLock<Vec<Arc<dyn Sorter>>> = OnceLock::new();
     BUILTINS
-        .get_or_init(|| Algorithm::ALL.iter().map(|a| a.sorter()).collect())
+        .get_or_init(|| {
+            let mut all: Vec<Arc<dyn Sorter>> =
+                Algorithm::ALL.iter().map(|a| a.sorter()).collect();
+            all.extend((1..=3).map(|k| Arc::new(AmsSorter::with_levels(k)) as Arc<dyn Sorter>));
+            all
+        })
         .clone()
 }
 
@@ -187,8 +196,16 @@ mod tests {
     }
 
     #[test]
-    fn builtins_cover_all_fifteen() {
-        assert_eq!(builtin_sorters().len(), Algorithm::ALL.len());
+    fn builtins_cover_the_enum_plus_the_ams_family() {
+        assert_eq!(builtin_sorters().len(), Algorithm::ALL.len() + 3);
+        for k in 1..=3 {
+            let s = find_sorter(&format!("ams{k}")).unwrap_or_else(|| panic!("AMS-{k}"));
+            assert_eq!(s.name(), format!("AMS-{k}"));
+            assert!(s.is_robust());
+            assert_eq!(s.output_shape(), OutputShape::Balanced);
+        }
+        // the family has no legacy enum tag — the registry is its home
+        assert!(Algorithm::parse("AMS-2").is_none());
     }
 
     #[test]

@@ -33,6 +33,22 @@ pub fn run(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig1 {
     )
 }
 
+/// Figure 1 extended with the successor paper's multi-level AMS family:
+/// the eight FIG1 algorithms plus `AMS-1`/`AMS-2`/`AMS-3`, so the sweep
+/// reports where the 1-factor AMS beats RAMS/HykSort on the simulated
+/// cost model. Kept separate from [`run`] — the paper's figure is the
+/// eight-algorithm set, and its winner structure is pinned by tests.
+pub fn run_ams(base: &RunConfig, max_log: u32, reps: usize, jobs: usize) -> Fig1 {
+    let mut algorithms: Vec<Arc<dyn Sorter>> =
+        Algorithm::FIG1.iter().map(|a| a.sorter()).collect();
+    algorithms.extend(
+        crate::algorithms::builtin_sorters()
+            .into_iter()
+            .filter(|s| s.name().starts_with("AMS-")),
+    );
+    run_with(base, algorithms, max_log, reps, jobs)
+}
+
 /// The same sweep over an arbitrary sorter set — e.g. (a subset of) the
 /// [`crate::algorithms::registry`], which includes externally registered
 /// sorters.
@@ -161,6 +177,30 @@ mod tests {
             ["RFIS", "GatherM"].contains(&tiny_winner),
             "tiny winner {tiny_winner:?}"
         );
+    }
+
+    /// The AMS-extended sweep carries a cell per AMS level count, every
+    /// cell is correct-or-crashed, and the grid is byte-identical for
+    /// every worker count (the determinism contract of [`run_with`]).
+    #[test]
+    fn ams_extended_sweep_is_correct_and_job_invariant() {
+        let base = RunConfig { p: 1 << 4, ..Default::default() };
+        let serial = run_ams(&base, 2, 1, 1);
+        assert_eq!(serial.algorithms.len(), Algorithm::FIG1.len() + 3);
+        for c in &serial.cells {
+            assert!(c.crashed || c.ok, "{} {:?} {:?}", c.algorithm, c.distribution, c.point);
+        }
+        for k in 1..=3 {
+            let name = format!("AMS-{k}");
+            let c = serial.cell(Distribution::Uniform, NpPoint::Dense(4), &name);
+            assert!(!c.crashed && c.ok, "{name}: {c:?}");
+        }
+        let parallel = run_ams(&base, 2, 1, 3);
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.algorithm, b.algorithm);
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{} {:?} {:?}", a.algorithm, a.distribution, a.point);
+            assert_eq!((a.crashed, a.ok), (b.crashed, b.ok), "{}", a.algorithm);
+        }
     }
 
     /// The O(1) grid lookup agrees with a full scan on every coordinate.

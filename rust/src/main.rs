@@ -41,8 +41,9 @@ COMMANDS
   run      one algorithm on one instance
              --algo A        (default Robust)   GatherM|AllGatherM|RFIS|RQuick|
                              NTB-Quick|Bitonic|RAMS|NTB-AMS|NDMA-AMS|HykSort|
-                             SSort|NS-SSort|Minisort|Mways|Robust — or any
-                             sorter registered with rmps::algorithms::register
+                             SSort|NS-SSort|Minisort|Mways|Robust|
+                             AMS-1|AMS-2|AMS-3 — or any sorter registered
+                             with rmps::algorithms::register
              --dist D        (default Uniform)  Uniform|Gaussian|BucketSorted|
                              DeterDupl|RandDupl|Zero|g-Group|Staggered|
                              Mirrored|AllToOne|Reverse
@@ -53,6 +54,8 @@ COMMANDS
                              instead of using the paper's JUQUEEN table
   fig1     running times of all algorithms over the n/p sweep
              --max-log L     (default 10)    --reps R (default 1)
+             --ams           add the multi-level AMS-1/2/3 columns
+                             (1-factor exchange, successor paper)
   fig2a    RQuick / NTB-Quick ratios        --max-log L
   fig2b    fig2a on a smaller default machine
   fig2c    RAMS / NDMA-AMS ratios           --max-log L
@@ -243,8 +246,12 @@ fn main() -> Result<()> {
         }
         "fig1" => {
             let cfg = machine_config(&a)?;
-            let fig =
-                experiments::fig1::run(&cfg, a.get("max-log", 10u32)?, a.get("reps", 1)?, jobs);
+            let (max_log, reps) = (a.get("max-log", 10u32)?, a.get("reps", 1)?);
+            let fig = if a.flag("ams") {
+                experiments::fig1::run_ams(&cfg, max_log, reps, jobs)
+            } else {
+                experiments::fig1::run(&cfg, max_log, reps, jobs)
+            };
             fig.print();
         }
         "fig2a" | "fig2b" => {

@@ -62,6 +62,16 @@
 //!   delivery) — matching the historical `route_round` call sites, which
 //!   never enqueued empty messages.
 //!
+//! Routed rounds have a second delivery flavour,
+//! [`Exchange::deliver_1factor`]: instead of charging the h-relation as
+//! one monolithic superstep, the irregular exchange is scheduled into
+//! [`one_factor_rounds`] lock-step pairwise rounds (the 1-factor
+//! algorithm of the successor paper, *Practical Massively Parallel
+//! Sorting*), each round a perfect matching charged as disjoint
+//! [`Machine::xchg`] calls. Charged and moved element totals are
+//! identical to [`Exchange::deliver`]; debug builds additionally assert
+//! charged == moved **per round**.
+//!
 //! Scalar/metadata traffic (pivot windows, splitter broadcasts, histogram
 //! reductions) moves no elements and stays on the raw
 //! `Machine::xchg`/`send`/`route_round` API — the invariant deliberately
@@ -95,6 +105,9 @@ struct PairOp {
 /// One payload run in flight, in post order.
 #[derive(Clone, Debug)]
 struct PostedRun {
+    /// Originating PE — the 1-factor delivery needs it to place the run
+    /// into its scheduled round; the monolithic path ignores it.
+    from: usize,
     dest: usize,
     tag: u64,
     /// Whether this run's words were charged to the cost model (false for
@@ -171,6 +184,71 @@ impl PlanePool {
 /// per-PE inbox materialization over the worker pool; below it the
 /// sequential drain wins (each move is a ~32-byte pointer relocation).
 const PAR_DELIVER_MIN_RUNS: usize = 1 << 14;
+
+/// Rounds in the 1-factorization of the complete graph on `q`
+/// participants: `q − 1` for even `q` (every round a perfect matching),
+/// `q` for odd `q` (one participant idles per round), `0` when there is
+/// at most one participant.
+pub fn one_factor_rounds(q: usize) -> usize {
+    match q {
+        0 | 1 => 0,
+        q if q % 2 == 0 => q - 1,
+        q => q,
+    }
+}
+
+/// The 1-factor partner of local rank `i` (of `q` participants) in round
+/// `r`, or `None` when `i` idles that round (odd `q` only).
+///
+/// The classic circle construction: for odd `q`, ranks `i` and `j` meet
+/// in round `(i + j) mod q` and the rank with `2i ≡ r (mod q)` idles; for
+/// even `q`, ranks `0..q−1` play the odd schedule over `q − 1` and the
+/// rank that would idle meets rank `q − 1` instead. Every unordered pair
+/// meets in exactly one of the [`one_factor_rounds`]`(q)` rounds
+/// (asserted over a q-grid in this module's tests).
+pub fn one_factor_partner(q: usize, r: usize, i: usize) -> Option<usize> {
+    debug_assert!(i < q && r < one_factor_rounds(q));
+    if q % 2 == 0 {
+        let m = q - 1;
+        if i == m {
+            // the rank self-paired in round r: the unique x with
+            // 2x ≡ r (mod m), m odd
+            Some(if r % 2 == 0 { r / 2 } else { (r + m) / 2 })
+        } else {
+            let j = (r + m - i) % m;
+            if j == i {
+                Some(m)
+            } else {
+                Some(j)
+            }
+        }
+    } else {
+        let j = (r + q - i) % q;
+        if j == i {
+            None
+        } else {
+            Some(j)
+        }
+    }
+}
+
+/// The round in which ranks `i` and `j` meet under
+/// [`one_factor_partner`]`(q, ..)`.
+pub fn one_factor_round_of(q: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < q && j < q && i != j);
+    if q % 2 == 0 {
+        let m = q - 1;
+        if i == m {
+            (2 * j) % m
+        } else if j == m {
+            (2 * i) % m
+        } else {
+            (i + j) % m
+        }
+    } else {
+        (i + j) % q
+    }
+}
 
 /// An open payload round on one [`Machine`] — see the module docs.
 ///
@@ -251,7 +329,7 @@ impl Exchange {
         if payload.is_empty() {
             self.skipped.push(payload);
         } else {
-            self.posted.push(PostedRun { dest: to, tag, charged: true, payload });
+            self.posted.push(PostedRun { from, dest: to, tag, charged: true, payload });
         }
     }
 
@@ -272,7 +350,7 @@ impl Exchange {
         if payload.is_empty() {
             self.skipped.push(payload);
         } else {
-            self.posted.push(PostedRun { dest: to, tag: 0, charged: true, payload });
+            self.posted.push(PostedRun { from, dest: to, tag: 0, charged: true, payload });
         }
     }
 
@@ -293,7 +371,7 @@ impl Exchange {
             return;
         }
         if from == to {
-            self.posted.push(PostedRun { dest: to, tag, charged: false, payload });
+            self.posted.push(PostedRun { from, dest: to, tag, charged: false, payload });
             return;
         }
         match self.route_idx.entry((from, to)) {
@@ -305,24 +383,14 @@ impl Exchange {
                 self.route.push((from, to, payload.len()));
             }
         }
-        self.posted.push(PostedRun { dest: to, tag, charged: true, payload });
+        self.posted.push(PostedRun { from, dest: to, tag, charged: true, payload });
     }
 
     /// Close the round: charge the machine (pairwise ops in call order,
     /// then the routed h-relation in sorted `(from, to)` order), move all
     /// payloads into per-PE inboxes, and assert charged == moved.
     pub fn deliver(mut self, mach: &mut Machine) -> Inboxes {
-        assert_eq!(
-            self.mach_id,
-            mach.instance_id(),
-            "exchange delivered on a different machine than opened it"
-        );
-        // the charges below must apply eagerly, not be buffered into (and
-        // reordered by) an unrelated scalar superstep's transcript
-        assert!(
-            !mach.in_superstep(),
-            "cannot deliver an exchange while a raw cost superstep is open"
-        );
+        self.check_deliverable(mach);
         // ---- charge ---------------------------------------------------
         let mut charged_words: u64 = 0;
         for op in &self.ops {
@@ -348,6 +416,110 @@ impl Exchange {
         mach.route_round(&self.route_sorted);
         charged_words += self.route_sorted.iter().map(|&(_, _, l)| l as u64).sum::<u64>();
 
+        self.finish(mach, charged_words)
+    }
+
+    /// Close the round with the **1-factor schedule** of the successor
+    /// paper (*Practical Massively Parallel Sorting*, Axtmann et al.):
+    /// instead of one monolithic [`Machine::route_round`], the irregular
+    /// h-relation is delivered in [`one_factor_rounds`]`(q)` lock-step
+    /// pairwise rounds over the `q` participants in `pes` — `q − 1`
+    /// rounds for even `q`, `q` for odd. Round `r` pairs local rank `i`
+    /// with [`one_factor_partner`]`(q, r, i)` and charges each pair as
+    /// one [`Machine::xchg`] (telephone model; the α is paid even when
+    /// neither direction has data — the schedule is oblivious), so a
+    /// receiver's fan-in is spread over rounds instead of serializing on
+    /// one PE. Startup is Θ(α·q) per participant regardless of sparsity;
+    /// the word volume charged is identical to [`Exchange::deliver`], as
+    /// are payload movement and per-receiver run order. Debug builds
+    /// assert charged == moved **per scheduled round** on top of the
+    /// usual round total.
+    ///
+    /// Only routed posts ([`Exchange::post`] / [`Exchange::post_tagged`])
+    /// may be staged — pairwise ops carry their own schedule (asserted).
+    /// Every remote post's endpoints must be listed in `pes`; posts to
+    /// self stay free local moves.
+    pub fn deliver_1factor(mut self, mach: &mut Machine, pes: &[usize]) -> Inboxes {
+        self.check_deliverable(mach);
+        assert!(
+            self.ops.is_empty(),
+            "a 1-factor delivery covers routed posts only (pairwise ops staged)"
+        );
+        let q = pes.len();
+        let mut rank = vec![u32::MAX; self.p];
+        for (r, &pe) in pes.iter().enumerate() {
+            assert!(pe < self.p, "participant {pe} outside the machine");
+            debug_assert!(rank[pe] == u32::MAX, "participant {pe} listed twice");
+            rank[pe] = r as u32;
+        }
+        for &(from, to, _) in &self.route {
+            assert!(
+                rank[from] != u32::MAX && rank[to] != u32::MAX,
+                "1-factor participants must cover every posted endpoint \
+                 (message {from}→{to})"
+            );
+        }
+        // ---- charge: one pairwise xchg per pair per round --------------
+        let rounds = one_factor_rounds(q);
+        let mut charged_words: u64 = 0;
+        #[cfg(debug_assertions)]
+        let mut charged_per_round = vec![0u64; rounds];
+        for r in 0..rounds {
+            for i in 0..q {
+                let Some(j) = one_factor_partner(q, r, i) else { continue };
+                if j < i {
+                    continue; // each pair charged once, low rank first
+                }
+                let (a, b) = (pes[i], pes[j]);
+                let len = |x: usize, y: usize| {
+                    self.route_idx.get(&(x, y)).map_or(0, |&k| self.route[k as usize].2)
+                };
+                let (l_ab, l_ba) = (len(a, b), len(b, a));
+                mach.xchg(a, b, l_ab, l_ba);
+                charged_words += (l_ab + l_ba) as u64;
+                #[cfg(debug_assertions)]
+                {
+                    charged_per_round[r] += (l_ab + l_ba) as u64;
+                }
+            }
+        }
+        #[cfg(debug_assertions)]
+        {
+            // per-round invariant: each round's charged words equal the
+            // words of the payloads whose (from, to) pair that round serves
+            let mut moved_per_round = vec![0u64; rounds];
+            for run in &self.posted {
+                if run.charged {
+                    let (i, j) = (rank[run.from] as usize, rank[run.dest] as usize);
+                    moved_per_round[one_factor_round_of(q, i, j)] += run.payload.len() as u64;
+                }
+            }
+            debug_assert_eq!(
+                charged_per_round, moved_per_round,
+                "1-factor schedule violated charged == moved within a round"
+            );
+        }
+        self.finish(mach, charged_words)
+    }
+
+    fn check_deliverable(&self, mach: &Machine) {
+        assert_eq!(
+            self.mach_id,
+            mach.instance_id(),
+            "exchange delivered on a different machine than opened it"
+        );
+        // charges must apply eagerly, not be buffered into (and reordered
+        // by) an unrelated scalar superstep's transcript
+        assert!(
+            !mach.in_superstep(),
+            "cannot deliver an exchange while a raw cost superstep is open"
+        );
+    }
+
+    /// Shared second half of every delivery flavour: move the posted runs
+    /// into per-PE inboxes, record and assert the charged == moved
+    /// invariant, and hand all staging back to the machine's pool.
+    fn finish(mut self, mach: &mut Machine, charged_words: u64) -> Inboxes {
         // ---- move -----------------------------------------------------
         let mut table = mach.plane.tables.pop().unwrap_or_default();
         debug_assert!(table.iter().all(|slot| slot.is_empty()));
@@ -743,5 +915,128 @@ mod tests {
         ex.xchg_touch(0, 1);
         ex.xchg_touch(1, 2);
         let _ = ex.deliver(&mut mach);
+    }
+
+    /// The circle construction really is a 1-factorization: every round a
+    /// (near-)perfect matching, every unordered pair met exactly once,
+    /// `one_factor_round_of` consistent with `one_factor_partner`.
+    #[test]
+    fn one_factor_schedule_is_a_1_factorization() {
+        assert_eq!(one_factor_rounds(0), 0);
+        assert_eq!(one_factor_rounds(1), 0);
+        for q in [2usize, 3, 4, 5, 6, 7, 8, 9, 16, 17] {
+            let rounds = one_factor_rounds(q);
+            assert_eq!(rounds, if q % 2 == 0 { q - 1 } else { q }, "q={q}");
+            let mut met = vec![vec![false; q]; q];
+            for r in 0..rounds {
+                let mut busy = 0usize;
+                for i in 0..q {
+                    match one_factor_partner(q, r, i) {
+                        Some(j) => {
+                            assert_ne!(i, j, "q={q} r={r}");
+                            assert_eq!(one_factor_partner(q, r, j), Some(i), "q={q} r={r} i={i}");
+                            assert_eq!(one_factor_round_of(q, i, j), r, "q={q} i={i} j={j}");
+                            if i < j {
+                                assert!(!met[i][j], "pair ({i},{j}) met twice, q={q}");
+                                met[i][j] = true;
+                            }
+                            busy += 1;
+                        }
+                        None => assert_eq!(q % 2, 1, "even q has no idle rank"),
+                    }
+                }
+                assert_eq!(q - busy, q % 2, "q={q} r={r}: idle count");
+            }
+            for i in 0..q {
+                for j in i + 1..q {
+                    assert!(met[i][j], "pair ({i},{j}) never met, q={q}");
+                }
+            }
+        }
+    }
+
+    /// The 1-factor delivery charges and moves the same word totals as
+    /// the monolithic path and fills identical mailboxes; the startup
+    /// profile differs (q−1 lock-step pairwise rounds, α paid per pair
+    /// per round).
+    #[test]
+    fn one_factor_delivery_matches_monolithic_mailboxes() {
+        let p = 6;
+        let post_all = |ex: &mut Exchange| {
+            ex.post(3, 0, elems(3, 1));
+            ex.post(0, 2, elems(0, 3));
+            ex.post(1, 2, elems(1, 2));
+            ex.post(0, 2, elems(0, 2)); // coalesces with the earlier 0→2
+            ex.post(2, 2, elems(2, 9)); // local: delivered, never charged
+            ex.post(1, 3, Vec::new()); // empty: skipped entirely
+            ex.post_tagged(4, 5, 7, elems(4, 4));
+        };
+        let mut mono = m(p);
+        let mut ex = mono.exchange();
+        post_all(&mut ex);
+        let mono_in = ex.deliver(&mut mono);
+
+        let mut fac = m(p);
+        let mut ex = fac.exchange();
+        post_all(&mut ex);
+        let pes: Vec<usize> = (0..p).collect();
+        let fac_in = ex.deliver_1factor(&mut fac, &pes);
+
+        assert_eq!(mono.exchange_charged(), fac.exchange_charged());
+        assert_eq!(mono.exchange_moved(), fac.exchange_moved());
+        assert_eq!(fac.exchange_charged(), fac.exchange_moved());
+        // lock-step schedule: every pair pays its xchg every round
+        let rounds = one_factor_rounds(p) as u64;
+        assert_eq!(fac.stats.messages, rounds * (p as u64 / 2) * 2);
+        assert_eq!(fac.stats.words, mono.stats.words);
+        for pe in 0..p {
+            let (a, b) = (mono_in.runs(pe), fac_in.runs(pe));
+            assert_eq!(a.len(), b.len(), "pe {pe} run count");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.0, y.0, "pe {pe} tag");
+                assert_eq!(x.1, y.1, "pe {pe} payload");
+            }
+        }
+        mono.recycle(mono_in);
+        fac.recycle(fac_in);
+    }
+
+    /// Odd participant counts get q rounds with one idle rank per round;
+    /// participants may be a strict subset of the machine.
+    #[test]
+    fn one_factor_delivery_on_an_odd_subset() {
+        let mut mach = m(8);
+        let mut ex = mach.exchange();
+        ex.post(0, 4, elems(0, 5));
+        ex.post(4, 2, elems(4, 3));
+        ex.post(2, 0, elems(2, 1));
+        let pes = [0usize, 2, 4];
+        let inboxes = ex.deliver_1factor(&mut mach, &pes);
+        assert_eq!(mach.exchange_charged(), 9);
+        assert_eq!(mach.exchange_moved(), 9);
+        // 3 rounds, one pair each (the third rank idles)
+        assert_eq!(mach.stats.messages, 3 * 2);
+        assert_eq!(inboxes.total(4), 5);
+        assert_eq!(inboxes.total(2), 3);
+        assert_eq!(inboxes.total(0), 1);
+        mach.recycle(inboxes);
+    }
+
+    #[test]
+    #[should_panic(expected = "routed posts only")]
+    fn one_factor_delivery_rejects_pairwise_ops() {
+        let mut mach = m(4);
+        let mut ex = mach.exchange();
+        ex.xchg(0, 1, elems(0, 2), Vec::new());
+        let _ = ex.deliver_1factor(&mut mach, &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover every posted endpoint")]
+    fn one_factor_delivery_rejects_uncovered_endpoints() {
+        let mut mach = m(4);
+        let mut ex = mach.exchange();
+        ex.post(0, 3, elems(0, 2));
+        let _ = ex.deliver_1factor(&mut mach, &[0, 1, 2]);
     }
 }

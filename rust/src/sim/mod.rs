@@ -20,7 +20,9 @@ mod machine;
 mod sparse;
 
 pub use collectives::*;
-pub use exchange::{Exchange, Inboxes, Run};
+pub use exchange::{
+    one_factor_partner, one_factor_round_of, one_factor_rounds, Exchange, Inboxes, Run,
+};
 pub use hypercube::*;
 pub use machine::*;
 pub use sparse::*;

@@ -6,8 +6,9 @@
 //! debug build exercises the assertion on every communication round of
 //! every algorithm.
 
-use rmps::algorithms::{Algorithm, Sorter};
+use rmps::algorithms::{find_sorter, Algorithm, Sorter};
 use rmps::config::RunConfig;
+use rmps::elements::Elem;
 use rmps::input::{generate, Distribution};
 use rmps::localsort::RustSort;
 use rmps::rng::Rng;
@@ -79,6 +80,88 @@ fn invariant_holds_under_memory_cap_crashes() {
         for alg in [Algorithm::HykSort, Algorithm::NtbQuick, Algorithm::NtbAms, Algorithm::SSort] {
             let (charged, moved, _) = charged_and_moved(alg, &cfg, dist);
             assert_eq!(charged, moved, "{alg:?}/{dist:?}");
+        }
+    }
+}
+
+/// Randomized irregular h-relations: the 1-factor round-scheduled
+/// delivery must charge and move totals identical to the monolithic
+/// `post` path — for even and odd participant counts, with self-posts,
+/// empty posts, coalescing repeats, and tagged runs in the mix — and
+/// fill byte-identical mailboxes. (Debug builds additionally assert the
+/// per-round charged == moved equality inside `deliver_1factor`.)
+#[test]
+fn one_factor_matches_monolithic_on_random_h_relations() {
+    let mut rng = Rng::seeded(0x1FAC_7012, 0);
+    for case in 0..40 {
+        let p = 2 + rng.below(13) as usize; // 2..14, even and odd
+        let n_posts = rng.below(40) as usize;
+        // record the post script, then replay it on both machines
+        let mut script: Vec<(usize, usize, u64, usize)> = Vec::new();
+        for _ in 0..n_posts {
+            let from = rng.below(p as u64) as usize;
+            let to = rng.below(p as u64) as usize; // may equal `from`
+            let tag = rng.below(4);
+            let len = rng.below(9) as usize; // empty posts included
+            script.push((from, to, tag, len));
+        }
+        let payload = |from: usize, len: usize, salt: usize| -> Vec<Elem> {
+            (0..len).map(|i| Elem::new((salt * 1000 + i) as u64, from, i)).collect()
+        };
+
+        let cfg = RunConfig::default();
+        let mut mono = Machine::new(p, cfg.cost);
+        let mut ex = mono.exchange();
+        for (s, &(from, to, tag, len)) in script.iter().enumerate() {
+            ex.post_tagged(from, to, tag, payload(from, len, s));
+        }
+        let mono_in = ex.deliver(&mut mono);
+
+        let mut fac = Machine::new(p, cfg.cost);
+        let mut ex = fac.exchange();
+        for (s, &(from, to, tag, len)) in script.iter().enumerate() {
+            ex.post_tagged(from, to, tag, payload(from, len, s));
+        }
+        let pes: Vec<usize> = (0..p).collect();
+        let fac_in = ex.deliver_1factor(&mut fac, &pes);
+
+        let ctx = format!("case {case}: p={p}, {n_posts} posts");
+        assert_eq!(mono.exchange_charged(), fac.exchange_charged(), "{ctx}: charged");
+        assert_eq!(mono.exchange_moved(), fac.exchange_moved(), "{ctx}: moved");
+        assert_eq!(fac.exchange_charged(), fac.exchange_moved(), "{ctx}: invariant");
+        assert_eq!(mono.stats.words, fac.stats.words, "{ctx}: word volume");
+        for pe in 0..p {
+            assert_eq!(mono_in.runs(pe), fac_in.runs(pe), "{ctx}: mailbox of pe {pe}");
+        }
+        mono.recycle(mono_in);
+        fac.recycle(fac_in);
+    }
+}
+
+/// The AMS family drives every data exchange through `deliver_1factor`;
+/// the machine-wide invariant must hold across a randomized grid exactly
+/// as it does for the monolithic path of the other 15 sorters.
+#[test]
+fn ams_family_upholds_the_invariant_via_the_1_factor_path() {
+    let mut rng = Rng::seeded(0x1FAC_7013, 0);
+    for k in 1..=3u32 {
+        let sorter = find_sorter(&format!("AMS-{k}")).expect("AMS family registered");
+        for case in 0..8 {
+            let p = 1usize << (2 + rng.below(3)); // 4..16
+            let m = 1usize << rng.below(8); // 1..128
+            let dist =
+                Distribution::ALL[rng.below(Distribution::ALL.len() as u64) as usize];
+            let cfg = RunConfig::default()
+                .with_p(p)
+                .with_n_per_pe(m)
+                .with_seed(0xA3 + case as u64);
+            let mut mach = Machine::new(cfg.p, cfg.cost);
+            mach.mem_cap_elems = cfg.mem_cap_elems();
+            let mut data = generate(&cfg, dist);
+            sorter.sort(&mut mach, &mut data, &cfg, &mut RustSort);
+            let ctx = format!("AMS-{k} case {case}: {dist:?}/p={p}/m={m}");
+            assert_eq!(mach.exchange_charged(), mach.exchange_moved(), "{ctx}");
+            assert!(mach.exchange_charged() <= mach.stats.words, "{ctx}");
         }
     }
 }

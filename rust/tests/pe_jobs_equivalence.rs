@@ -6,12 +6,13 @@
 //! wallclock.
 //!
 //! Style of `exchange_equivalence.rs`: field-by-field equality (floats as
-//! raw bits) over all 15 registered sorters × a distributions/sizes grid,
+//! raw bits) over the 15 enum sorters (the registry-only AMS family gets
+//! its own grid below) × a distributions/sizes grid,
 //! including out-of-range inputs and memory-capped **crash reports** —
 //! the crashing (PE, resident count, context) string must not depend on
 //! worker interleaving either.
 
-use rmps::algorithms::{Algorithm, RunReport, Runner};
+use rmps::algorithms::{find_sorter, Algorithm, RunReport, Runner};
 use rmps::config::RunConfig;
 use rmps::input::{generate, Distribution};
 
@@ -80,6 +81,33 @@ fn reports_identical_for_every_pe_jobs_value() {
                 for &jobs in &pe_jobs_values()[1..] {
                     let ctx = format!("{alg:?}/{dist:?}/m={m}/pe_jobs={jobs}");
                     let got = run_with_pe_jobs(alg, &cfg, input.clone(), jobs);
+                    assert_reports_identical(&reference, &got, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// The AMS family (registry-only, no enum tag): classify and merge run
+/// as pooled PE tasks and the 1-factor delivery charges one pairwise
+/// round per schedule step — all of it must stay bit-identical for every
+/// `pe_jobs` value, at sizes on both sides of the inline gate.
+#[test]
+fn ams_reports_identical_for_every_pe_jobs_value() {
+    for k in 1..=3 {
+        let sorter = find_sorter(&format!("AMS-{k}")).expect("AMS family registered");
+        for dist in [Distribution::Uniform, Distribution::Zero, Distribution::AllToOne] {
+            for m in [4usize, 512] {
+                let cfg = RunConfig::default().with_p(16).with_n_per_pe(m);
+                let input = generate(&cfg, dist);
+                let reference = Runner::new(cfg.clone())
+                    .pe_jobs(1)
+                    .run(sorter.as_ref(), input.clone());
+                for &jobs in &pe_jobs_values()[1..] {
+                    let ctx = format!("AMS-{k}/{dist:?}/m={m}/pe_jobs={jobs}");
+                    let got = Runner::new(cfg.clone())
+                        .pe_jobs(jobs)
+                        .run(sorter.as_ref(), input.clone());
                     assert_reports_identical(&reference, &got, &ctx);
                 }
             }

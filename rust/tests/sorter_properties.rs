@@ -1,0 +1,180 @@
+//! The semantic test layer over the whole registry: every sorter in
+//! `builtin_sorters()` — the 15 of the paper's evaluation **and** the
+//! successor paper's AMS-1/2/3 — must, on a randomized grid of seeds ×
+//! distributions × sizes (skewed, duplicate-heavy, and sparse included):
+//!
+//! * leave the output **globally sorted**,
+//! * keep it a **permutation of the input** (order-independent multiset
+//!   checksum on top of the element-exact `verify::validate`),
+//! * respect its **declared `output_shape`** (composite sorters may
+//!   legally degrade `Balanced` to a gather shape — the `Robust`
+//!   selector does on sparse inputs — but fixed-shape sorters may not
+//!   drift), and
+//! * end the run with **`exchange_charged == exchange_moved`** on the
+//!   machine-wide data-plane counters.
+//!
+//! Unlike the bit-identical oracle suites, these properties hold for any
+//! future sorter too — a new `register`ed algorithm inherits this
+//! coverage by being enumerable, with no per-algorithm pinning required.
+
+use rmps::algorithms::{builtin_sorters, find_sorter, OutputShape, Runner, Sorter};
+use rmps::config::RunConfig;
+use rmps::elements::Elem;
+use rmps::input::{generate, Distribution};
+use rmps::localsort::RustSort;
+use rmps::rng::Rng;
+use rmps::sim::Machine;
+use rmps::verify::{validate, validate_replicated};
+
+/// splitmix64 finalizer — the checksum must not cancel structured inputs
+/// (e.g. Mirrored pairs), so every element is mixed before folding.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Order-independent multiset checksum: (count, wrapping sum, xor fold)
+/// over mixed `(key, id)` pairs. Equal iff the multisets are equal with
+/// overwhelming probability — and cheap enough to run on every cell.
+fn multiset_checksum<'a>(elems: impl Iterator<Item = &'a Elem>) -> (usize, u64, u64) {
+    let mut count = 0usize;
+    let mut sum = 0u64;
+    let mut xor = 0u64;
+    for e in elems {
+        let h = mix(e.key ^ mix(e.id));
+        count += 1;
+        sum = sum.wrapping_add(h);
+        xor ^= h;
+    }
+    (count, sum, xor)
+}
+
+/// Run one cell directly on a [`Machine`] (the `Runner` hides its
+/// machine, and the data-plane invariant counters live on the machine)
+/// and assert every property the harness pins.
+fn check_sorter(sorter: &dyn Sorter, cfg: &RunConfig, dist: Distribution, ctx: &str) {
+    let input = generate(cfg, dist);
+    let mut mach = Machine::new(cfg.p, cfg.cost);
+    mach.mem_cap_elems = cfg.mem_cap_elems();
+    let mut data = input.clone();
+    let shape = sorter.sort(&mut mach, &mut data, cfg, &mut RustSort);
+
+    // the data-plane invariant holds at run end even for crashed runs —
+    // whatever was delivered before the crash was charged, and vice versa
+    assert_eq!(
+        mach.exchange_charged(),
+        mach.exchange_moved(),
+        "{ctx}: charged element count must equal moved"
+    );
+
+    if mach.crashed() {
+        assert!(
+            !sorter.is_robust(),
+            "{ctx}: a robust sorter crashed in range: {:?}",
+            mach.crash()
+        );
+        return; // mid-run state: output checks don't apply
+    }
+
+    // declared shape is honored: fixed-shape sorters return exactly what
+    // they promise; composite sorters (declared Balanced) may pick a
+    // gather-style delegate, which the shape-dispatched validation covers
+    let declared = sorter.output_shape();
+    assert!(
+        shape == declared || declared == OutputShape::Balanced,
+        "{ctx}: declared {declared:?} but produced {shape:?}"
+    );
+
+    // sorted + permutation, dispatched on the actual shape like the Runner
+    let (v, output_view): (_, Vec<Vec<Elem>>) = match shape {
+        OutputShape::Balanced => (validate(&input, &data, cfg.epsilon), data.clone()),
+        OutputShape::RootOnly => {
+            let mut proj = vec![Vec::new(); cfg.p];
+            proj[0] = data[0].clone();
+            (validate(&input, &proj, f64::INFINITY), proj)
+        }
+        OutputShape::Replicated => {
+            let v = validate_replicated(&input, &data);
+            (v, vec![data.first().cloned().unwrap_or_default()])
+        }
+    };
+    assert!(v.locally_sorted, "{ctx}: output not locally sorted");
+    assert!(v.globally_sorted, "{ctx}: output not globally sorted");
+    assert!(v.multiset_preserved, "{ctx}: output is not a permutation of the input");
+
+    // independent permutation witness: order-insensitive checksum
+    assert_eq!(
+        multiset_checksum(input.iter().flatten()),
+        multiset_checksum(output_view.iter().flatten()),
+        "{ctx}: multiset checksum diverged"
+    );
+}
+
+/// The dense grid: every builtin × eleven distributions × three sizes,
+/// with a per-cell randomized seed. Sizes straddle the inline/pooled
+/// per-PE execution gate and include the duplicate-heavy and skewed
+/// instances (Zero, DeterDupl, AllToOne) that kill nonrobust sorters.
+#[test]
+fn every_builtin_upholds_the_contract_on_the_dense_grid() {
+    let mut rng = Rng::seeded(0x50_52_4F_50, 0); // "PROP"
+    for sorter in builtin_sorters() {
+        for dist in Distribution::ALL {
+            for m in [1usize, 4, 64] {
+                let p = 1usize << (2 + rng.below(3)); // 4..16
+                let cfg = RunConfig::default()
+                    .with_p(p)
+                    .with_n_per_pe(m)
+                    .with_seed(0x5EED ^ rng.below(1 << 30));
+                if !sorter.valid_range(cfg.n_over_p(), p) {
+                    continue; // out-of-range refusals are covered elsewhere
+                }
+                let ctx = format!("{}/{dist:?}/p={p}/m={m}", sorter.name());
+                check_sorter(sorter.as_ref(), &cfg, dist, &ctx);
+            }
+        }
+    }
+}
+
+/// The sparse regime (n < p): gather delegates, mostly-empty exchanges.
+#[test]
+fn every_builtin_upholds_the_contract_on_sparse_inputs() {
+    let mut rng = Rng::seeded(0x50_52_4F_50, 1);
+    for sorter in builtin_sorters() {
+        for sparsity in [2usize, 8] {
+            let p = 32;
+            let cfg = RunConfig::default()
+                .with_p(p)
+                .with_sparsity(sparsity)
+                .with_seed(0x5EED ^ rng.below(1 << 30));
+            if !sorter.valid_range(cfg.n_over_p(), p) {
+                continue;
+            }
+            let ctx = format!("{}/sparse(1/{sparsity})", sorter.name());
+            check_sorter(sorter.as_ref(), &cfg, Distribution::Uniform, &ctx);
+        }
+    }
+}
+
+/// Acceptance pin for the tentpole: the AMS family sorts **all eleven
+/// distributions** through the full `Runner` validation path, for every
+/// registered level count.
+#[test]
+fn ams_family_passes_validation_on_all_eleven_distributions() {
+    for k in 1..=3 {
+        let sorter = find_sorter(&format!("AMS-{k}")).expect("AMS family registered");
+        let cfg = RunConfig::default().with_p(16).with_n_per_pe(256);
+        let mut runner = Runner::new(cfg.clone());
+        for dist in Distribution::ALL {
+            let report = runner.run(sorter.as_ref(), generate(&cfg, dist));
+            assert!(
+                report.succeeded(),
+                "AMS-{k}/{dist:?}: {:?} {:?}",
+                report.crashed,
+                report.validation
+            );
+        }
+    }
+}
