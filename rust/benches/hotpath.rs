@@ -13,6 +13,16 @@
 //! Exchange data plane; both land in the JSON so CI artifacts track
 //! allocation regressions across commits.
 //!
+//! The persistent-pool section measures the wake/park handshake of one
+//! pooled round (`pool_round_us`) against the pre-pool scoped
+//! spawn/join scheme on the identical round (`spawn_round_us`), then
+//! sweeps real `Machine::par_pes` rounds across the inline/pooled
+//! crossover (`pool_crossover`, one `{work, inline_us, pooled_us}` point
+//! per doubling of the round's total work) and reports the smallest work
+//! at which pooling wins (`measured_crossover_work`) — the empirical
+//! basis for the `sim::PAR_MIN_WORK` default and the `--par-min-work` /
+//! `RMPS_PAR_MIN_WORK` knob.
+//!
 //! Knobs: RMPS_BENCH_REPS (default 3); RMPS_BENCH_TINY=1 shrinks every
 //! size so a CI smoke run finishes in seconds while still driving the
 //! same code paths.
@@ -156,6 +166,125 @@ fn bench_algo(alg: Algorithm, p: usize, m: usize, reps: usize, out: &mut Vec<Lin
     });
 }
 
+/// One point of the inline-vs-pooled crossover sweep: µs per
+/// `Machine::par_pes` round of `work` total elements, with the gate
+/// forced inline (`usize::MAX`) vs forced pooled (`1`).
+struct CrossPoint {
+    work: usize,
+    inline_us: f64,
+    pooled_us: f64,
+}
+
+/// µs per real `par_pes` round (p = 64 tasks, `w` total elements, a
+/// deterministic fold kernel plus the `work_linear` ledger charge) at the
+/// given inline-vs-pooled threshold. Small rounds run many iterations per
+/// timed call so the median is resolvable.
+fn par_round_us(reps: usize, workers: usize, w: usize, threshold: usize) -> f64 {
+    use rmps::model::CostModel;
+    use rmps::sim::{Machine, ParSpec};
+    let p = 64usize;
+    let mut mach = Machine::new(p, CostModel::default());
+    mach.set_pe_jobs(workers);
+    mach.set_par_min_work(threshold);
+    let each = (w / p).max(1);
+    let mut items: Vec<Vec<u64>> =
+        (0..p).map(|t| (0..each).map(|i| (t * each + i) as u64).collect()).collect();
+    let iters = ((1usize << 16) / w.max(1)).clamp(1, 256);
+    let ms = common::time_ms(reps, || {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            let sums = mach.par_pes(0, ParSpec::work(w), &mut items, |ctx, v: &mut Vec<u64>| {
+                ctx.work_linear(v.len());
+                v.iter().fold(0u64, |a, &b| {
+                    a.wrapping_add(b.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                })
+            });
+            acc = acc.wrapping_add(sums.into_iter().fold(0u64, u64::wrapping_add));
+        }
+        acc
+    });
+    ms * 1e3 / iters as f64
+}
+
+/// The persistent-pool measurements: wake/park round cost vs the old
+/// scoped spawn/join scheme, and the swept inline/pooled crossover.
+fn bench_pool(reps: usize, tiny: bool) -> (f64, f64, Vec<CrossPoint>, Option<usize>) {
+    let workers = rmps::exec::available_jobs().max(2);
+    let n = 256usize;
+    let task = |i: usize| (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let rounds = 64usize;
+
+    // persistent pool: wake parked workers, self-schedule n trivial
+    // jobs, park again — the steady-state per-round overhead
+    let _ = rmps::exec::parallel_map(workers, n, task); // warm: spawn the team
+    let ms = common::time_ms(reps, || {
+        let mut acc = 0u64;
+        for _ in 0..rounds {
+            let sums = rmps::exec::parallel_map(workers, n, task);
+            acc = acc.wrapping_add(sums.into_iter().fold(0u64, u64::wrapping_add));
+        }
+        acc
+    });
+    let pool_round_us = ms * 1e3 / rounds as f64;
+
+    // the pre-pool scheme, emulated verbatim: scoped spawn per round,
+    // single-index self-scheduling, per-worker accumulation, join
+    let ms = common::time_ms(reps, || {
+        let mut acc = 0u64;
+        for _ in 0..rounds {
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let sum = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|_| {
+                        s.spawn(|| {
+                            let mut done = 0u64;
+                            loop {
+                                let i = next.fetch_add(1, Relaxed);
+                                if i >= n {
+                                    break;
+                                }
+                                done = done.wrapping_add(task(i));
+                            }
+                            done
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).fold(0u64, u64::wrapping_add)
+            });
+            acc = acc.wrapping_add(sum);
+        }
+        acc
+    });
+    let spawn_round_us = ms * 1e3 / rounds as f64;
+    println!(
+        "pool round n={n}        {pool_round_us:>9.1} µs   (old spawn/join {spawn_round_us:>9.1} µs)"
+    );
+
+    // crossover sweep: the same par_pes round forced inline vs forced
+    // pooled, doubling the total work until pooling clearly wins
+    let max_log = if tiny { 12u32 } else { 17 };
+    let mut points = Vec::new();
+    let mut w = 256usize;
+    while w <= 1usize << max_log {
+        let inline_us = par_round_us(reps, workers, w, usize::MAX);
+        let pooled_us = par_round_us(reps, workers, w, 1);
+        println!(
+            "par_pes W={w:<7}        inline {inline_us:>9.1} µs / pooled {pooled_us:>9.1} µs"
+        );
+        points.push(CrossPoint { work: w, inline_us, pooled_us });
+        w *= 2;
+    }
+    let crossover = points.iter().find(|pt| pt.pooled_us <= pt.inline_us).map(|pt| pt.work);
+    match crossover {
+        Some(w) => println!(
+            "measured crossover     {w} elements (sim::par_min_work default {})",
+            rmps::sim::par_min_work()
+        ),
+        None => println!("measured crossover     not reached in this sweep"),
+    }
+    (pool_round_us, spawn_round_us, points, crossover)
+}
+
 fn main() {
     let reps = common::env_usize("RMPS_BENCH_REPS", 3);
     let tiny = common::env_usize("RMPS_BENCH_TINY", 0) != 0;
@@ -170,6 +299,9 @@ fn main() {
     bench_algo(Algorithm::Bitonic, sz(1 << 8, 1 << 5), sz(1 << 10, 1 << 6), reps, &mut lines);
     bench_algo(Algorithm::HykSort, sz(1 << 9, 1 << 5), sz(1 << 12, 1 << 7), reps, &mut lines);
     bench_algo(Algorithm::Robust, sz(1 << 10, 1 << 5), sz(1 << 10, 1 << 6), reps, &mut lines);
+
+    println!("\n== persistent pool: round overhead and PAR_MIN_WORK crossover ==");
+    let (pool_round_us, spawn_round_us, cross, crossover) = bench_pool(reps, tiny);
 
     println!("\n== isolated hot kernels ==");
     let mut rng = Rng::seeded(1, 1);
@@ -252,12 +384,29 @@ fn main() {
             )
         })
         .collect();
+    let cross_json: Vec<String> = cross
+        .iter()
+        .map(|pt| {
+            format!(
+                "{{\"work\": {}, \"inline_us\": {:.3}, \"pooled_us\": {:.3}}}",
+                pt.work, pt.inline_us, pt.pooled_us
+            )
+        })
+        .collect();
     common::write_bench_json(
         "hotpath",
         &[
             ("bench", common::json_str("hotpath")),
             ("reps", reps.to_string()),
             ("tiny", tiny.to_string()),
+            ("par_min_work", rmps::sim::par_min_work().to_string()),
+            ("pool_round_us", format!("{pool_round_us:.3}")),
+            ("spawn_round_us", format!("{spawn_round_us:.3}")),
+            ("pool_crossover", format!("[{}]", cross_json.join(", "))),
+            (
+                "measured_crossover_work",
+                crossover.map_or_else(|| "null".to_string(), |w| w.to_string()),
+            ),
             ("results", format!("[{}]", results.join(", "))),
         ],
     );

@@ -56,6 +56,17 @@ impl Runner {
         self
     }
 
+    /// Override the owned machine's inline-vs-pooled work threshold for
+    /// PE-task rounds (see [`Machine::set_par_min_work`]; `0` restores
+    /// the process default from `--par-min-work` / `RMPS_PAR_MIN_WORK` /
+    /// [`crate::sim::PAR_MIN_WORK`]). Host scheduling only — reports are
+    /// bit-identical for every value, from `1` (every round pooled) to
+    /// `usize::MAX` (every round inline).
+    pub fn par_min_work(mut self, threshold: usize) -> Self {
+        self.mach.set_par_min_work(threshold);
+        self
+    }
+
     /// Replace the node-local sort backend (e.g. the PJRT `XlaSort` from
     /// [`crate::runtime`], available with the `xla` cargo feature).
     pub fn backend(mut self, backend: Box<dyn SortBackend>) -> Self {

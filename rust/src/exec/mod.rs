@@ -4,37 +4,61 @@
 //! The figure sweeps are embarrassingly parallel across (algorithm,
 //! distribution, n/p) cells, and every superstep of a single run is
 //! embarrassingly parallel across PEs, but the build environment is
-//! offline, so no rayon: this is a scoped-thread self-scheduling pool.
-//! Workers pull the next job index from a shared atomic counter (the
-//! classic work-stealing degenerate case where the "deque" is a single
-//! global index — optimal here because every job is coarse), so long jobs
-//! never leave the other workers idle behind a static partition.
+//! offline, so no rayon: this is a **persistent** self-scheduling worker
+//! pool. Long-lived `std::thread` workers are started lazily (at most
+//! [`available_jobs`] of them, ever) and **parked** on a Condvar between
+//! rounds, so a [`parallel_map`] round costs a wake/park handshake instead
+//! of a thread spawn/join — the difference that matters for many-small-round
+//! algorithms (bitonic's O(log²p) compare-split rounds, the AMS family's
+//! per-level exchanges), which used to pay spawn latency once per superstep.
+//!
+//! **Wake/park protocol.** A round is published under the pool mutex as a
+//! job-index counter plus an erased pointer to the caller's closure;
+//! parked workers are notified, join the round (up to the helper count the
+//! caller's worker tokens allow), and claim work until the counter is
+//! exhausted. The **caller participates too** — it claims chunks like any
+//! worker instead of blocking in a join — and returns only after every
+//! helper has left the round, which is what makes lending stack-borrowed
+//! closures to `'static` worker threads sound (see `Pool::run`).
+//!
+//! **Chunked self-scheduling.** Workers claim index *batches* from the
+//! shared counter when the round is large (`chunk_for`): giant-p PE
+//! rounds (262 144 tasks and beyond) would otherwise serialize on the
+//! atomic counter, while coarse rounds (figure cells, modest-p supersteps)
+//! keep single-index claiming for best load balance — a long job never
+//! strands work behind a static partition either way.
 //!
 //! **One pool, two levels.** Cell-level fan-out (`--jobs`, the experiment
 //! drivers) and PE-level fan-out (`--pe-jobs`, [`crate::sim::Machine::par_pes`])
 //! share a single process-wide worker budget sized to the host's available
 //! parallelism. Every [`parallel_map`] call acquires worker tokens from
-//! that budget before spawning and returns them when its scope ends; a
-//! call that finds the budget exhausted (e.g. a PE-task round nested
-//! inside a cell worker that already holds all tokens) degrades to running
-//! inline on the caller's thread. This is the work-depth guard: when
-//! fig-grids and PE tasks nest, the total number of live workers stays
-//! bounded by the host core count instead of multiplying.
+//! that budget (a lock-free compare-exchange loop — the budget is never
+//! observed negative, even mid-acquire) before engaging the pool and
+//! returns them when the round ends; a call that finds the budget
+//! exhausted (e.g. a PE-task round nested inside a cell worker that
+//! already holds all tokens) degrades to running inline on the caller's
+//! thread. This is the work-depth guard: when fig-grids and PE tasks
+//! nest, the total number of live computing threads stays bounded by the
+//! host core count instead of multiplying.
 //!
 //! The budget also caps a *top-level* `--jobs` request above the core
-//! count — a deliberate behavior change from the PR 2 driver, which
-//! spawned exactly N workers: every job here is CPU-bound simulation, so
-//! oversubscribing cores only adds scheduler churn. Results are identical
-//! either way; only the worker count changes.
+//! count — every job here is CPU-bound simulation, so oversubscribing
+//! cores only adds scheduler churn. Results are identical either way;
+//! only the worker count changes.
 //!
-//! Determinism: results are returned **in index order** regardless of which
-//! worker computed what or in which interleaving, so `jobs = 1` and
-//! `jobs = N` produce byte-identical experiment tables as long as each job
-//! is itself a pure function of its index (every `run_cell` is: all
-//! randomness derives from per-config seeds).
+//! Determinism: results are written **by index** into pre-sized slots
+//! (through `SliceCells` — no per-worker staging, no post-join copy)
+//! and returned in index order regardless of which worker computed what
+//! or in which interleaving, so `jobs = 1` and `jobs = N` produce
+//! byte-identical experiment tables as long as each job is itself a pure
+//! function of its index (every `run_cell` is: all randomness derives
+//! from per-config seeds). A panic in any job is re-raised on the caller
+//! with its original payload after the round's workers have left it; the
+//! panicking participant stops claiming, the rest drain the counter.
 
+use std::any::Any;
 use std::sync::atomic::{AtomicIsize, AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use by default: the host's available
 /// parallelism (the `--jobs` CLI default), or 1 if it cannot be queried.
@@ -45,16 +69,16 @@ pub fn available_jobs() -> usize {
 // ---- the shared worker budget (work-depth guard) -----------------------
 
 /// Tokens remaining in the process-wide worker budget. Initialized to the
-/// host's available parallelism; every spawned worker holds one token for
-/// its lifetime.
+/// host's available parallelism; every computing participant of a round
+/// (helpers and the caller alike) holds one token while the round runs.
 fn budget() -> &'static AtomicIsize {
     static BUDGET: OnceLock<AtomicIsize> = OnceLock::new();
     BUDGET.get_or_init(|| AtomicIsize::new(available_jobs() as isize))
 }
 
 /// RAII worker-token grant: `n` tokens taken from the shared budget,
-/// returned on drop (panic-safe — a propagating worker panic still
-/// releases them when the scope unwinds).
+/// returned on drop (panic-safe — a propagating round panic still
+/// releases them when the caller's frame unwinds).
 struct Tokens {
     n: usize,
 }
@@ -62,15 +86,28 @@ struct Tokens {
 impl Tokens {
     /// Take up to `want` tokens (possibly zero when the budget is
     /// exhausted by outer parallel levels).
+    ///
+    /// Lock-free claim via compare-exchange: a grant only ever subtracts
+    /// what the witnessed balance covers, so the budget is **never
+    /// negative, at any instant** — unlike a fetch-sub-then-refund
+    /// scheme, where two racing acquires can both witness a positive
+    /// balance, overshoot, and leave the budget transiently negative
+    /// until the refunds settle. The invariant is stress-asserted in
+    /// `token_budget_never_negative_under_contention`.
     fn acquire(want: usize) -> Tokens {
         let want = want as isize;
-        let prev = budget().fetch_sub(want, Ordering::AcqRel);
-        let got = prev.clamp(0, want);
-        let refund = want - got;
-        if refund > 0 {
-            budget().fetch_add(refund, Ordering::AcqRel);
+        let b = budget();
+        let mut cur = b.load(Ordering::Relaxed);
+        loop {
+            let got = cur.clamp(0, want);
+            if got == 0 {
+                return Tokens { n: 0 };
+            }
+            match b.compare_exchange_weak(cur, cur - got, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Tokens { n: got as usize },
+                Err(now) => cur = now,
+            }
         }
-        Tokens { n: got as usize }
     }
 }
 
@@ -112,17 +149,255 @@ pub fn default_pe_jobs() -> usize {
         .unwrap_or_else(available_jobs)
 }
 
-// ---- the pool ----------------------------------------------------------
+// ---- the persistent pool -----------------------------------------------
 
-/// Map `f` over `0..n` on up to `jobs` scoped worker threads, returning the
-/// results in index order.
+/// Erased pointer to a round's chunk runner (`Fn(lo, hi)` over job
+/// indices), callable from worker threads via a monomorphized trampoline.
+///
+/// # Safety
+/// The pointee lives on the submitting caller's stack. [`Pool::run`] does
+/// not return until the round is unreachable by every worker (removed
+/// from the pending list **and** zero active helpers, both witnessed
+/// under the pool mutex), which bounds every dereference by the pointee's
+/// lifetime.
+struct TaskRef {
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+}
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+impl TaskRef {
+    fn new<F: Fn(usize, usize) + Sync>(f: &F) -> Self {
+        unsafe fn trampoline<F: Fn(usize, usize)>(data: *const (), lo: usize, hi: usize) {
+            (*data.cast::<F>())(lo, hi)
+        }
+        Self { data: (f as *const F).cast(), call: trampoline::<F> }
+    }
+}
+
+/// One published round: a shared claim counter over `n` job indices plus
+/// the erased chunk runner. Workers that joined the round claim
+/// `chunk`-sized index batches until the counter is exhausted.
+struct Round {
+    task: TaskRef,
+    n: usize,
+    chunk: usize,
+    /// Next unclaimed job index (may overshoot `n` by up to one chunk per
+    /// participant — claims at or past `n` are empty).
+    next: AtomicUsize,
+    /// Helpers currently inside the round (joined, not yet left). Only
+    /// mutated under the pool mutex; the done-Condvar handshake relies on
+    /// that.
+    active: AtomicUsize,
+    /// First panic payload raised by any participant, re-thrown on the
+    /// caller once the round has quiesced.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Round {
+    /// Claim and run chunks until the counter is exhausted. Never
+    /// unwinds: a panicking job stops *this* participant's claiming and
+    /// parks its payload for the caller; other participants keep
+    /// draining the counter (the pre-pool behavior, where a panicking
+    /// scoped worker died and the rest finished the remaining jobs).
+    fn run_chunks(&self) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let lo = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+            if lo >= self.n {
+                break;
+            }
+            let hi = (lo + self.chunk).min(self.n);
+            // SAFETY: see TaskRef — the pointee outlives the round.
+            unsafe { (self.task.call)(self.task.data, lo, hi) };
+        }));
+        if let Err(payload) = result {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+/// A round waiting for helpers, still listed in [`PoolQueue::pending`].
+struct PendingRound {
+    round: Arc<Round>,
+    /// Helper slots not yet claimed by a worker; the entry is delisted
+    /// when this reaches zero (or the round's counter is exhausted).
+    helpers_wanted: usize,
+}
+
+/// Mutex-guarded pool state: the rounds seeking helpers plus worker
+/// bookkeeping.
+#[derive(Default)]
+struct PoolQueue {
+    pending: Vec<PendingRound>,
+    /// Worker threads ever spawned (they never exit; see module docs).
+    spawned: usize,
+    /// Workers currently parked on [`Pool::work`].
+    idle: usize,
+}
+
+/// The process-wide persistent pool singleton.
+struct Pool {
+    q: Mutex<PoolQueue>,
+    /// Parked workers wait here; notified when a round is published.
+    work: Condvar,
+    /// Round submitters wait here for their last helper to leave.
+    done: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        q: Mutex::new(PoolQueue::default()),
+        work: Condvar::new(),
+        done: Condvar::new(),
+    })
+}
+
+/// Number of persistent worker threads started so far. Monotone, bounded
+/// by [`available_jobs`] for the life of the process — the no-thread-leak
+/// half of the pool lifecycle contract (asserted across 1 000 rounds in
+/// this module's tests). Diagnostics/tests only.
+pub fn pool_workers() -> usize {
+    pool().q.lock().unwrap().spawned
+}
+
+/// Index-batch size for one round: single-index claiming for coarse
+/// rounds (figure cells, modest-p supersteps — a batch of two heavy cells
+/// would undo the self-scheduling balance), batches for giant rounds so a
+/// 2^18-task PE round performs a few hundred counter claims instead of a
+/// quarter million.
+fn chunk_for(n: usize, workers: usize) -> usize {
+    /// Target claims per worker per round once chunking engages — enough
+    /// slack for self-scheduling to absorb skew, few enough to keep the
+    /// counter cold.
+    const CHUNKS_PER_WORKER: usize = 16;
+    /// Hard batch cap, so even million-task rounds rebalance.
+    const MAX_CHUNK: usize = 4096;
+    let per_worker = n / workers.max(1);
+    if per_worker < 2 * CHUNKS_PER_WORKER {
+        1
+    } else {
+        (per_worker / CHUNKS_PER_WORKER).min(MAX_CHUNK)
+    }
+}
+
+/// Take one round off the pending list, if any round still wants helpers.
+/// Called under the pool mutex. Drained rounds encountered on the way are
+/// delisted (their submitter no longer benefits from helpers).
+fn pick_round(q: &mut PoolQueue) -> Option<Arc<Round>> {
+    let mut i = 0;
+    while i < q.pending.len() {
+        if q.pending[i].round.next.load(Ordering::Relaxed) >= q.pending[i].round.n {
+            q.pending.remove(i);
+            continue;
+        }
+        let entry = &mut q.pending[i];
+        entry.helpers_wanted -= 1;
+        // the join (active += 1) happens under the mutex, so a submitter
+        // that delists its round and reads active == 0 cannot race a
+        // late joiner
+        entry.round.active.fetch_add(1, Ordering::Relaxed);
+        let round = Arc::clone(&entry.round);
+        if entry.helpers_wanted == 0 {
+            q.pending.remove(i);
+        }
+        return Some(round);
+    }
+    None
+}
+
+/// Body of one persistent worker: pick a round or park, forever. Workers
+/// never exit — a parked worker costs one stack and zero CPU, and the
+/// next round reuses it instead of paying a spawn.
+fn worker_loop() {
+    let pool = pool();
+    let mut q = pool.q.lock().unwrap();
+    loop {
+        if let Some(round) = pick_round(&mut q) {
+            drop(q);
+            round.run_chunks();
+            q = pool.q.lock().unwrap();
+            round.active.fetch_sub(1, Ordering::Relaxed);
+            // wake every submitter; each re-checks its own round
+            pool.done.notify_all();
+        } else {
+            q.idle += 1;
+            q = pool.work.wait(q).unwrap();
+            q.idle -= 1;
+        }
+    }
+}
+
+impl Pool {
+    /// Publish one round over `0..n` and run it to completion with up to
+    /// `helpers` pool workers assisting the calling thread. Missing
+    /// workers are spawned lazily (never beyond [`available_jobs`]
+    /// process-wide; a failed spawn just means fewer helpers). Returns
+    /// after the round has quiesced, re-raising the first job panic with
+    /// its original payload.
+    fn run(&'static self, task: TaskRef, n: usize, helpers: usize, chunk: usize) {
+        debug_assert!(n > 0 && chunk > 0);
+        let round = Arc::new(Round {
+            task,
+            n,
+            chunk,
+            next: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.q.lock().unwrap();
+            let deficit = helpers.saturating_sub(q.idle);
+            let spawnable = available_jobs().saturating_sub(q.spawned).min(deficit);
+            for _ in 0..spawnable {
+                let spawned = std::thread::Builder::new()
+                    .name("rmps-pool".into())
+                    .spawn(worker_loop)
+                    .is_ok();
+                if !spawned {
+                    break;
+                }
+                q.spawned += 1;
+            }
+            q.pending.push(PendingRound { round: Arc::clone(&round), helpers_wanted: helpers });
+            self.work.notify_all();
+        }
+        // the caller is a full participant, not a blocked joiner
+        round.run_chunks();
+        {
+            // delist (helpers that never joined are no longer wanted),
+            // then wait for the ones that did to leave — after this
+            // block no worker can reach the round, which is what lets
+            // `task` borrow from the caller's stack
+            let mut q = self.q.lock().unwrap();
+            if let Some(pos) = q.pending.iter().position(|p| Arc::ptr_eq(&p.round, &round)) {
+                q.pending.remove(pos);
+            }
+            let _q = self
+                .done
+                .wait_while(q, |_| round.active.load(Ordering::Relaxed) > 0)
+                .unwrap();
+        }
+        if let Some(payload) = round.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Map `f` over `0..n` with up to `jobs` participants (the calling thread
+/// plus parked pool workers), returning the results in index order.
 ///
 /// `jobs` is clamped to `[1, n]` and then to the tokens left in the shared
 /// worker budget (see the module docs); `jobs <= 1` (or `n <= 1`, or an
 /// exhausted budget) runs inline on the caller's thread with no pool
 /// overhead, so the serial path is exactly the pre-pool code path. A panic
 /// in any job is propagated to the caller with its original payload once
-/// the remaining workers have drained.
+/// the round's workers have left it.
 pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
     let jobs = jobs.clamp(1, n.max(1));
     if jobs <= 1 || n <= 1 {
@@ -131,42 +406,28 @@ pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Syn
     let tokens = Tokens::acquire(jobs);
     let workers = tokens.n;
     if workers <= 1 {
-        // budget exhausted (or down to one token — a single worker plus an
-        // idle caller is strictly worse than inline)
+        // budget exhausted (or down to one token — a lone participant is
+        // exactly the inline path, minus the round overhead)
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let next = &next;
-    let f = &f;
     let mut slots: Vec<Option<R>> = Vec::new();
     slots.resize_with(n, || None);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                s.spawn(move || {
-                    let mut done: Vec<(usize, R)> = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        done.push((i, f(i)));
-                    }
-                    done
-                })
-            })
-            .collect();
-        for h in handles {
-            match h.join() {
-                Ok(done) => {
-                    for (i, r) in done {
-                        slots[i] = Some(r);
-                    }
-                }
-                Err(payload) => std::panic::resume_unwind(payload),
+    {
+        // results are written straight into their destination slots —
+        // no per-worker staging vectors, no copy-after-join
+        let cells = SliceCells::new(&mut slots);
+        let f = &f;
+        let run_chunk = move |lo: usize, hi: usize| {
+            debug_assert!(hi <= cells.len());
+            for i in lo..hi {
+                // SAFETY: the round counter hands out each index exactly
+                // once, so this is the only &mut borrow of slots[i].
+                let slot = unsafe { cells.get_mut(i) };
+                *slot = Some(f(i));
             }
-        }
-    });
+        };
+        pool().run(TaskRef::new(&run_chunk), n, workers - 1, chunk_for(n, workers));
+    }
     drop(tokens);
     slots.into_iter().map(|r| r.expect("pool covered every index")).collect()
 }
@@ -176,9 +437,10 @@ pub fn parallel_map<R: Send>(jobs: usize, n: usize, f: impl Fn(usize) -> R + Syn
 /// once, so the `&mut T` references produced through this pointer are
 /// never aliased.
 ///
-/// Crate-internal building block for the `Machine` PE-task scheduler and
-/// the exchange's parallel inbox materialization — every use site states
-/// its disjointness argument at the `unsafe` block.
+/// Crate-internal building block for [`parallel_map`]'s own result slots,
+/// the `Machine` PE-task scheduler, and the exchange's parallel inbox
+/// materialization — every use site states its disjointness argument at
+/// the `unsafe` block.
 pub(crate) struct SliceCells<T> {
     ptr: *mut T,
     len: usize,
@@ -192,7 +454,6 @@ impl<T> SliceCells<T> {
         Self { ptr: slice.as_mut_ptr(), len: slice.len() }
     }
 
-    #[allow(dead_code)]
     pub(crate) fn len(&self) -> usize {
         self.len
     }
@@ -200,7 +461,7 @@ impl<T> SliceCells<T> {
     /// # Safety
     /// The caller must guarantee no two live `&mut T` to the same index
     /// (in [`parallel_map`] bodies: each index is claimed exactly once by
-    /// the shared atomic counter).
+    /// the shared counter).
     // the &self → &mut T shape is this type's entire point: disjointness
     // is the documented contract of this unsafe fn, not derivable by the
     // borrow checker
@@ -211,6 +472,18 @@ impl<T> SliceCells<T> {
         &mut *self.ptr.add(i)
     }
 }
+
+// SliceCells<T> is a *mut-based view; Copy lets round closures capture it
+// by value without re-borrow gymnastics. Manual impls because derive
+// would bound T: Clone / T: Copy, which the raw-pointer view doesn't need.
+#[allow(clippy::expl_impl_clone_on_copy)]
+impl<T> Clone for SliceCells<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SliceCells<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -245,6 +518,28 @@ mod tests {
     }
 
     #[test]
+    fn chunking_covers_every_index_at_every_size() {
+        // exercise chunk sizes on both sides of the single-index cutoff,
+        // including n not divisible by the chunk
+        for n in [2usize, 31, 64, 65, 1000, 4097] {
+            for jobs in [2usize, 3, 8] {
+                let out = parallel_map(jobs, n, |i| i as u64 + 1);
+                assert_eq!(out, (0..n).map(|i| i as u64 + 1).collect::<Vec<_>>(), "n={n} jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_for_is_single_index_when_coarse_and_batched_when_giant() {
+        assert_eq!(chunk_for(30, 8), 1, "figure-cell rounds claim singly");
+        assert_eq!(chunk_for(64, 4), 1);
+        assert!(chunk_for(1 << 18, 8) > 1, "giant rounds claim batches");
+        assert!(chunk_for(1 << 18, 8) <= 4096, "batches stay bounded");
+        assert!(chunk_for(usize::MAX / 2, 1) <= 4096);
+        assert!(chunk_for(5, 0) >= 1, "workers clamped, chunk stays positive");
+    }
+
+    #[test]
     fn worker_panic_propagates() {
         let caught = std::panic::catch_unwind(|| {
             parallel_map(4, 16, |i| {
@@ -254,7 +549,10 @@ mod tests {
                 i
             })
         });
-        assert!(caught.is_err());
+        let payload = caught.expect_err("panic must propagate");
+        // original payload, not a wrapper
+        let msg = payload.downcast_ref::<&str>().copied();
+        assert_eq!(msg, Some("job 5 failed"));
     }
 
     #[test]
@@ -274,6 +572,79 @@ mod tests {
         assert_eq!(parallel_map(4, 32, |i| i), (0..32).collect::<Vec<_>>());
     }
 
+    /// Pool lifecycle: 1 000 pooled rounds reuse the same parked workers.
+    /// The spawn count is monotone and can never exceed the host core
+    /// count — under the old spawn-per-round pool this loop would have
+    /// created and destroyed thousands of threads.
+    #[test]
+    fn pool_reuses_workers_across_rounds() {
+        // warm: force helpers into existence
+        for _ in 0..8 {
+            parallel_map(available_jobs(), 256, |i| i);
+        }
+        let before = pool_workers();
+        assert!(before <= available_jobs(), "spawn cap: {before}");
+        for round in 0..1000 {
+            let out = parallel_map(4, 64, |i| i + round);
+            assert_eq!(out.len(), 64);
+        }
+        let after = pool_workers();
+        assert!(after <= available_jobs(), "spawn cap after 1000 rounds: {after}");
+        assert!(after >= before, "spawn count is monotone");
+        if before == available_jobs() {
+            assert_eq!(after, before, "saturated pool must not grow");
+        }
+    }
+
+    /// Panicking rounds must not leak workers or wedge the pool: the same
+    /// parked team serves the next round.
+    #[test]
+    fn pool_survives_panicking_rounds_with_stable_workers() {
+        parallel_map(4, 64, |i| i); // ensure the pool exists
+        let before = pool_workers();
+        for _ in 0..50 {
+            let _ = std::panic::catch_unwind(|| {
+                parallel_map(4, 32, |i| {
+                    if i == 7 {
+                        panic!("boom");
+                    }
+                    i
+                })
+            });
+        }
+        assert!(pool_workers() <= available_jobs());
+        assert!(pool_workers() >= before);
+        assert_eq!(parallel_map(4, 128, |i| i * 2), (0..128).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    /// The compare-exchange budget never goes negative — not even
+    /// transiently mid-acquire, which the old fetch-sub-then-refund
+    /// scheme could not guarantee. Hammer it from several threads while
+    /// sampling the balance.
+    #[test]
+    fn token_budget_never_negative_under_contention() {
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                s.spawn(move || {
+                    for i in 0..20_000usize {
+                        let want = 1 + (i + t) % 4;
+                        let tokens = Tokens::acquire(want);
+                        assert!(tokens.n <= want, "grant exceeds request");
+                        assert!(
+                            budget().load(Ordering::Relaxed) >= 0,
+                            "budget observed negative while holding a grant"
+                        );
+                        drop(tokens);
+                        assert!(
+                            budget().load(Ordering::Relaxed) >= 0,
+                            "budget observed negative after refund"
+                        );
+                    }
+                });
+            }
+        });
+    }
+
     #[test]
     fn nested_levels_share_the_budget() {
         // outer cells × inner PE-style maps: correctness must hold whether
@@ -287,9 +658,28 @@ mod tests {
         assert_eq!(out, expect);
     }
 
-    /// The disjoint-index write primitive behind the PE-task scheduler
-    /// and the parallel inbox materialization: every index mutated
-    /// exactly once, in any worker interleaving.
+    /// Concurrent top-level rounds (two threads submitting to the one
+    /// pool at once) must not cross-deliver results or deadlock — the
+    /// shape of a figure sweep running beside a deep single run.
+    #[test]
+    fn concurrent_rounds_on_the_shared_pool_stay_isolated() {
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for round in 0..50usize {
+                        let out = parallel_map(3, 40, |i| t * 10_000 + round * 100 + i);
+                        let expect: Vec<usize> =
+                            (0..40).map(|i| t * 10_000 + round * 100 + i).collect();
+                        assert_eq!(out, expect, "thread {t} round {round}");
+                    }
+                });
+            }
+        });
+    }
+
+    /// The disjoint-index write primitive behind the PE-task scheduler,
+    /// the parallel inbox materialization, and parallel_map's own result
+    /// slots: every index mutated exactly once, in any interleaving.
     #[test]
     fn slice_cells_disjoint_parallel_writes() {
         for jobs in [1, 3, 8] {

@@ -23,7 +23,7 @@ use crate::input::{generate, Distribution};
 /// which point of the n/p axis.
 pub type SorterSpec = (Arc<dyn Sorter>, Distribution, NpPoint);
 
-/// Run a batch of cells across the scoped-thread worker pool
+/// Run a batch of cells across the persistent worker pool
 /// ([`crate::exec::parallel_map`]), returning results **in spec order**.
 ///
 /// Every cell is a pure function of its spec (all randomness derives from

@@ -115,7 +115,9 @@ mod tests {
 
     /// A batch-only backend (no `par_run_sort`, like `XlaSort`) and the
     /// pool-scheduled per-run path must charge identical costs and produce
-    /// identical runs — large enough fragments to clear the inline gate.
+    /// identical runs — the inline gate pinned low so the per-run path
+    /// really runs on the persistent pool whatever `RMPS_PAR_MIN_WORK`
+    /// says.
     #[test]
     fn par_and_batch_paths_agree_bitwise() {
         struct BatchOnly;
@@ -139,6 +141,7 @@ mod tests {
         sort_all(&mut batch_mach, &mut batch_data, &mut BatchOnly);
         let mut par_mach = Machine::new(p, CostModel::default());
         par_mach.set_pe_jobs(4);
+        par_mach.set_par_min_work(1);
         let mut par_data = gen(9);
         sort_all(&mut par_mach, &mut par_data, &mut RustSort);
         assert_eq!(batch_data, par_data);

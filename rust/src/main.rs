@@ -82,6 +82,12 @@ MACHINE FLAGS (all commands)
                    oversubscription when both are active — and results
                    are bit-identical for every N — see README
                    § Two-level parallelism)
+  --par-min-work W minimum total-work hint (elements) before a per-PE
+                   round engages pool workers; smaller rounds run inline
+                   (default: RMPS_PAR_MIN_WORK, else 4096 — the measured
+                   crossover tracked by the hotpath bench; 1 = always
+                   pooled. Host scheduling only: results are
+                   bit-identical for every W)
   --xla-local-sort use the PJRT/XLA batched local sorter
                    (needs artifacts/ and a build with --features xla)
 ";
@@ -180,6 +186,11 @@ fn main() -> Result<()> {
     let pe_jobs: usize = a.get("pe-jobs", 0usize)?;
     if pe_jobs > 0 {
         rmps::exec::set_pe_jobs(pe_jobs);
+    }
+    // 0 = "not given": keep the RMPS_PAR_MIN_WORK / compiled default
+    let par_min_work: usize = a.get("par-min-work", 0usize)?;
+    if par_min_work > 0 {
+        rmps::sim::set_par_min_work(par_min_work);
     }
 
     match cmd.as_str() {

@@ -180,10 +180,14 @@ impl PlanePool {
     }
 }
 
-/// Posted-run count from which [`Exchange::deliver`] distributes the
-/// per-PE inbox materialization over the worker pool; below it the
-/// sequential drain wins (each move is a ~32-byte pointer relocation).
-const PAR_DELIVER_MIN_RUNS: usize = 1 << 14;
+/// Posted-run multiplier over [`Machine::par_min_work`] from which
+/// [`Exchange::deliver`] distributes the per-PE inbox materialization
+/// over the worker pool (see [`Machine::par_deliver_min_runs`]); below
+/// it the sequential drain wins — each move is only a ~32-byte pointer
+/// relocation, so the break-even sits higher than for element-touching
+/// PE tasks. `4 ×` the default 4096-element threshold keeps the
+/// long-standing `1 << 14`-runs cutoff.
+const PAR_DELIVER_RUNS_FACTOR: usize = 4;
 
 /// Rounds in the 1-factorization of the complete graph on `q`
 /// participants: `q − 1` for even `q` (every round a perfect matching),
@@ -527,7 +531,7 @@ impl Exchange {
             table.resize_with(self.p, Vec::new);
         }
         let mut moved: u64 = 0;
-        if self.posted.len() >= PAR_DELIVER_MIN_RUNS && mach.pe_jobs() > 1 {
+        if self.posted.len() >= mach.par_deliver_min_runs() && mach.pe_jobs() > 1 {
             // Large round: materialize the inboxes on the worker pool. A
             // counting pass assigns every run its (dest, slot) — slot =
             // post order within the destination, so per-receiver run
@@ -683,6 +687,20 @@ impl Machine {
             route_sorted: std::mem::take(&mut self.plane.route_sorted),
             skipped: std::mem::take(&mut self.plane.skipped),
         }
+    }
+
+    /// Posted-run count from which [`Exchange::deliver`] materializes the
+    /// per-PE inboxes on the worker pool: `PAR_DELIVER_RUNS_FACTOR` ×
+    /// the machine's [`Machine::par_min_work`] threshold, so the one
+    /// `--par-min-work` / `RMPS_PAR_MIN_WORK` knob tunes both pooling
+    /// gates together (`RMPS_PAR_MIN_WORK=1` force-pools delivery too; the
+    /// default threshold reproduces the long-standing `1 << 14` cutoff).
+    /// Saturating, so `--par-min-work` near `usize::MAX` cleanly means
+    /// "never pooled". Like the PE-task gate, this affects host
+    /// scheduling only — inbox tables are bit-identical either way.
+    #[inline]
+    pub fn par_deliver_min_runs(&self) -> usize {
+        self.par_min_work().saturating_mul(PAR_DELIVER_RUNS_FACTOR)
     }
 
     /// A cleared element buffer from the data-plane pool (or a fresh one).
@@ -860,13 +878,16 @@ mod tests {
 
     /// Above the size gate, deliver materializes the inboxes on the
     /// worker pool; the table (runs, per-receiver order, tags) and the
-    /// charges must match the sequential drain bit for bit.
+    /// charges must match the sequential drain bit for bit. The gate is
+    /// pinned low via `set_par_min_work` so the pooled path really runs
+    /// (and the round stays small) regardless of the environment.
     #[test]
     fn parallel_materialization_matches_sequential() {
         let post_all = |mach: &mut Machine| -> Inboxes {
             let p = mach.p();
+            let runs = mach.par_deliver_min_runs();
             let mut ex = mach.exchange();
-            for i in 0..PAR_DELIVER_MIN_RUNS {
+            for i in 0..runs {
                 let from = i % p;
                 // every 5th post is local (from == to), the rest remote
                 let to = if i % 5 == 0 { from } else { (i * 7 + 3) % p };
@@ -878,9 +899,12 @@ mod tests {
         };
         let mut seq = m(8);
         seq.set_pe_jobs(1);
+        seq.set_par_min_work(256);
         let seq_in = post_all(&mut seq);
         let mut par = m(8);
         par.set_pe_jobs(4);
+        par.set_par_min_work(256);
+        assert_eq!(par.par_deliver_min_runs(), 256 * PAR_DELIVER_RUNS_FACTOR);
         let par_in = post_all(&mut par);
         for pe in 0..8 {
             assert_eq!(seq.clock(pe).to_bits(), par.clock(pe).to_bits(), "pe {pe}");

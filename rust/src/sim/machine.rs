@@ -80,17 +80,60 @@ struct Transcript {
 /// Process-unique id source for [`Machine::instance_id`].
 static MACHINE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
-/// Minimum total-work hint (elements touched across all tasks of one
-/// [`Machine::par_pes`] round) before worker threads are engaged; smaller
-/// rounds run inline, where spawning would cost more than it buys. The
-/// gate depends only on the hint — never on timing — so it cannot affect
-/// results, only host scheduling.
+/// Default minimum total-work hint (elements touched across all tasks of
+/// one [`Machine::par_pes`] round) before pool workers are engaged;
+/// smaller rounds run inline, where even a wake/park handshake costs more
+/// than it buys. The compiled-in default; the effective threshold is
+/// [`par_min_work`], runtime-tunable via [`set_par_min_work`] /
+/// `RMPS_PAR_MIN_WORK` / `--par-min-work` /
+/// [`crate::algorithms::Runner::par_min_work`]. The hotpath bench sweeps
+/// round sizes across the inline/pooled crossover
+/// (`pool_crossover` / `measured_crossover_work` in BENCH_hotpath.json)
+/// so this default can track the measured break-even on the CI runner.
+/// The gate depends only on the hint — never on timing — so it cannot
+/// affect results, only host scheduling.
 pub const PAR_MIN_WORK: usize = 4096;
+
+/// Process-wide [`set_par_min_work`] override; 0 = unset.
+static PAR_MIN_WORK_OVERRIDE: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// Set the process-wide default for the inline-vs-pooled work threshold
+/// (the CLI `--par-min-work` flag). Takes precedence over the
+/// `RMPS_PAR_MIN_WORK` environment variable; `0` clears the override and
+/// restores the env/compiled default. Affects machines constructed (or
+/// configured via [`Machine::set_par_min_work`] with `0`) afterwards.
+/// Host scheduling only — simulation results are bit-identical for every
+/// value.
+pub fn set_par_min_work(threshold: usize) {
+    PAR_MIN_WORK_OVERRIDE.store(threshold, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The effective default inline-vs-pooled work threshold a new
+/// [`Machine`] starts with: the [`set_par_min_work`] override if one was
+/// given, else `RMPS_PAR_MIN_WORK` (parsed once, first use), else
+/// [`PAR_MIN_WORK`]. Always ≥ 1 (a zero threshold would merely mean
+/// "always pooled", which `1` already expresses).
+pub fn par_min_work() -> usize {
+    let over = PAR_MIN_WORK_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
+    static ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    ENV.get_or_init(|| {
+        std::env::var("RMPS_PAR_MIN_WORK")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+    .unwrap_or(PAR_MIN_WORK)
+}
 
 /// Size/buffer hints for one [`Machine::par_pes`] round.
 ///
 /// `work` is the round's total element count (summed over all tasks); it
-/// gates the inline-vs-pooled decision against [`PAR_MIN_WORK`]. `bufs`
+/// gates the inline-vs-pooled decision against the machine's
+/// [`Machine::par_min_work`] threshold. `bufs`
 /// pre-seeds every task's [`PeCtx::take_buf`] stash with that many pooled
 /// buffers, keeping the warm path allocation-free without letting tasks
 /// touch the machine-owned pool concurrently.
@@ -305,6 +348,9 @@ pub struct Machine {
     /// Worker threads for PE-task rounds ([`Machine::par_pes`]); host
     /// scheduling only — results are identical for every value.
     pe_jobs: usize,
+    /// Inline-vs-pooled work threshold for PE-task rounds (see
+    /// [`par_min_work`]); host scheduling only, like `pe_jobs`.
+    par_min_work: usize,
     /// Pooled task contexts (drained ledgers, warm scratch), reused across
     /// [`Machine::par_pes`] rounds.
     ctx_pool: Vec<PeCtx>,
@@ -334,6 +380,7 @@ impl Machine {
             elems_charged: 0,
             elems_moved: 0,
             pe_jobs: exec::default_pe_jobs(),
+            par_min_work: par_min_work(),
             ctx_pool: Vec::new(),
             ctx_round: Vec::new(),
         }
@@ -371,8 +418,9 @@ impl Machine {
         self.plane.reset();
         self.elems_charged = 0;
         self.elems_moved = 0;
-        // pe_jobs and the ctx pool survive: both are host-execution state
-        // (scheduling + warm scratch), invisible to simulation results
+        // pe_jobs, par_min_work, and the ctx pool survive: all are
+        // host-execution state (scheduling + warm scratch), invisible to
+        // simulation results
     }
 
     /// Set the worker-thread count for PE-task rounds
@@ -388,6 +436,23 @@ impl Machine {
     #[inline]
     pub fn pe_jobs(&self) -> usize {
         self.pe_jobs
+    }
+
+    /// Set this machine's inline-vs-pooled work threshold: a
+    /// [`Machine::par_pes`] round engages pool workers only when its
+    /// [`ParSpec::work`] hint is at least this many elements. `0` restores
+    /// the process default ([`par_min_work`]). Host scheduling only:
+    /// results are bit-identical for every value. Survives
+    /// [`Machine::reset`].
+    pub fn set_par_min_work(&mut self, threshold: usize) {
+        self.par_min_work = if threshold == 0 { par_min_work() } else { threshold };
+    }
+
+    /// Current inline-vs-pooled work threshold (see
+    /// [`Machine::set_par_min_work`]).
+    #[inline]
+    pub fn par_min_work(&self) -> usize {
+        self.par_min_work
     }
 
     /// Cumulative element-words the data plane has charged to the cost
@@ -807,9 +872,19 @@ impl Machine {
     /// sequential `for pe { … }` loop over the same bodies would have
     /// issued — so results (clocks, stats, crash selection, float addition
     /// order) are bit-identical for every `pe_jobs` value and every
-    /// thread interleaving. Rounds whose [`ParSpec::work`] hint is below
-    /// [`PAR_MIN_WORK`] run inline through the *same* ledger machinery,
-    /// so the inline and pooled paths cannot diverge.
+    /// thread interleaving.
+    ///
+    /// # `par_min_work()` contract
+    ///
+    /// Rounds whose [`ParSpec::work`] hint is below the machine's
+    /// [`Machine::par_min_work`] threshold (default [`par_min_work`]:
+    /// `--par-min-work` / `RMPS_PAR_MIN_WORK` / [`PAR_MIN_WORK`]) run
+    /// inline through the *same* ledger machinery, so the inline and
+    /// pooled paths cannot diverge: the threshold — like `pe_jobs` — is
+    /// pure host scheduling, compared only against the static `work`
+    /// hint, never against timing. RunReports are bit-identical for every
+    /// threshold value, from `1` (everything pooled) to `usize::MAX`
+    /// (everything inline); `pe_jobs_equivalence.rs` pins this.
     ///
     /// Communication charges recorded through [`PeCtx::xchg`] /
     /// [`PeCtx::send`] / [`PeCtx::route`] settle **eagerly** in the same
@@ -898,7 +973,7 @@ impl Machine {
             }
             ctxs.push(ctx);
         }
-        let jobs = if spec.work >= PAR_MIN_WORK { self.pe_jobs } else { 1 };
+        let jobs = if spec.work >= self.par_min_work { self.pe_jobs } else { 1 };
         let results: Vec<R> = {
             let data_cells = exec::SliceCells::new(data);
             let ctx_cells = exec::SliceCells::new(&mut ctxs);
@@ -1300,24 +1375,81 @@ mod tests {
         assert!(back.is_empty(), "recycled buffers come back cleared");
     }
 
-    /// Small rounds run inline, large rounds may use workers — both paths
-    /// go through the same ledger, so the results agree bitwise.
+    /// Small rounds run inline, large rounds use pool workers — both
+    /// paths go through the same ledger, so the results agree bitwise.
+    /// Thresholds pinned per machine so the test forces each path
+    /// regardless of any `RMPS_PAR_MIN_WORK` in the environment.
     #[test]
     fn par_pes_inline_and_pooled_agree() {
-        let run = |work_hint: usize, pe_jobs: usize| -> (Vec<u64>, f64) {
+        let run = |threshold: usize, pe_jobs: usize| -> (Vec<u64>, f64) {
             let mut mach = m(8);
             mach.set_pe_jobs(pe_jobs);
+            mach.set_par_min_work(threshold);
             let mut items: Vec<usize> = (0..8).collect();
-            let out = mach.par_pes(0, ParSpec::work(work_hint), &mut items, |ctx, v| {
+            let out = mach.par_pes(0, ParSpec::work(64), &mut items, |ctx, v| {
                 ctx.work_linear(*v * 100);
                 (*v as u64) * 3
             });
             (out, mach.time())
         };
-        let (a, ta) = run(0, 8); // inline (below PAR_MIN_WORK)
-        let (b, tb) = run(PAR_MIN_WORK, 8); // pooled
+        let (a, ta) = run(usize::MAX, 8); // forced inline
+        let (b, tb) = run(1, 8); // forced pooled
         assert_eq!(a, b);
         assert_eq!(ta.to_bits(), tb.to_bits());
+    }
+
+    /// The tunable gate: `set_par_min_work` flips the same round between
+    /// inline and pooled with bit-identical settlement, `0` restores the
+    /// process default, and the knob — host-execution state — survives
+    /// `reset`.
+    #[test]
+    fn par_min_work_knob_round_trips_and_survives_reset() {
+        let mut mach = m(8);
+        mach.set_par_min_work(7);
+        assert_eq!(mach.par_min_work(), 7);
+        mach.reset(8, CostModel::default());
+        assert_eq!(mach.par_min_work(), 7, "survives reset like pe_jobs");
+        mach.set_par_min_work(0);
+        assert_eq!(mach.par_min_work(), par_min_work(), "0 restores the default");
+        assert!(Machine::new(8, CostModel::default()).par_min_work() >= 1);
+
+        // the process-global override (CLI `--par-min-work`): machines
+        // constructed under it inherit it; 0 clears back to env/compiled
+        // default. All in one test — the global is process-wide, and
+        // every value is results-invariant, so concurrent tests are
+        // undisturbed, but asserting the round trip needs one thread.
+        set_par_min_work(12_345);
+        assert_eq!(par_min_work(), 12_345);
+        assert_eq!(Machine::new(2, CostModel::default()).par_min_work(), 12_345);
+        set_par_min_work(0);
+        assert!(par_min_work() >= 1);
+    }
+
+    /// Nested cell × PE rounds on the persistent pool: outer cells fan
+    /// out through `exec::parallel_map` while every cell's own machine
+    /// runs force-pooled `par_pes` rounds — each cell must settle
+    /// bit-identically to the same cell run fully serial, whatever mix of
+    /// pool workers and inline degradation the budget hands out.
+    #[test]
+    fn nested_cell_pe_rounds_match_serial() {
+        let cell = |c: usize, pe_jobs: usize, threshold: usize| -> (Vec<u64>, f64) {
+            let mut mach = m(8);
+            mach.set_pe_jobs(pe_jobs);
+            mach.set_par_min_work(threshold);
+            let mut items: Vec<usize> = (0..8).map(|i| i + 10 * c).collect();
+            let out = mach.par_pes(0, ParSpec::work(64), &mut items, |ctx, v| {
+                ctx.work_sort(*v + 1);
+                ctx.work_linear(*v);
+                (*v as u64).wrapping_mul(2_654_435_761)
+            });
+            (out, mach.time())
+        };
+        let serial: Vec<(Vec<u64>, f64)> = (0..6).map(|c| cell(c, 1, usize::MAX)).collect();
+        let nested = crate::exec::parallel_map(4, 6, |c| cell(c, 4, 1));
+        for (c, (s, n)) in serial.iter().zip(nested.iter()).enumerate() {
+            assert_eq!(s.0, n.0, "cell {c} results");
+            assert_eq!(s.1.to_bits(), n.1.to_bits(), "cell {c} makespan");
+        }
     }
 
     #[test]

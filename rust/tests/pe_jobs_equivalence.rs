@@ -3,7 +3,10 @@
 //! settle in PE order regardless of which worker ran what (see the
 //! `PeCtx` docs in `rmps::sim`), so `--pe-jobs 1`, `--pe-jobs 3`, and
 //! `--pe-jobs <all cores>` are indistinguishable in everything but host
-//! wallclock.
+//! wallclock. The same contract covers the inline-vs-pooled gate:
+//! `--par-min-work` values from `1` to `usize::MAX` only move rounds
+//! between the caller's thread and the persistent pool, never the
+//! report (`reports_identical_for_every_par_min_work_value`).
 //!
 //! Style of `exchange_equivalence.rs`: field-by-field equality (floats as
 //! raw bits) over the 15 enum sorters (the registry-only AMS family gets
@@ -157,6 +160,55 @@ fn crash_reports_identical_for_every_pe_jobs_value() {
                 assert_reports_identical(&reference, &got, &ctx);
             }
         }
+    }
+}
+
+/// The inline-vs-pooled gate is host scheduling too: RunReports must be
+/// bit-identical for every `par_min_work` threshold — `1` (every round
+/// on the persistent pool, large deliveries parallel-materialized),
+/// the default, and `usize::MAX` (everything inline) — across sorters
+/// that stress every data-plane flavour, at a size whose rounds straddle
+/// the default gate.
+#[test]
+fn reports_identical_for_every_par_min_work_value() {
+    let cfg = RunConfig::default().with_p(16).with_n_per_pe(512);
+    for alg in [
+        Algorithm::RQuick,
+        Algorithm::Rams,
+        Algorithm::Bitonic,
+        Algorithm::Rfis,
+        Algorithm::HykSort,
+        Algorithm::Robust,
+    ] {
+        for dist in [Distribution::Uniform, Distribution::Staggered] {
+            let input = generate(&cfg, dist);
+            let reference = Runner::new(cfg.clone())
+                .pe_jobs(3)
+                .par_min_work(usize::MAX)
+                .run_algorithm(alg, input.clone());
+            for threshold in [1usize, rmps::sim::PAR_MIN_WORK] {
+                let ctx = format!("{alg:?}/{dist:?}/par_min_work={threshold}");
+                let got = Runner::new(cfg.clone())
+                    .pe_jobs(3)
+                    .par_min_work(threshold)
+                    .run_algorithm(alg, input.clone());
+                assert_reports_identical(&reference, &got, &ctx);
+            }
+        }
+    }
+    // and the AMS family's 1-factor delivery path
+    let sorter = find_sorter("AMS-2").expect("AMS family registered");
+    let input = generate(&cfg, Distribution::Uniform);
+    let reference = Runner::new(cfg.clone())
+        .pe_jobs(3)
+        .par_min_work(usize::MAX)
+        .run(sorter.as_ref(), input.clone());
+    for threshold in [1usize, rmps::sim::PAR_MIN_WORK] {
+        let got = Runner::new(cfg.clone())
+            .pe_jobs(3)
+            .par_min_work(threshold)
+            .run(sorter.as_ref(), input.clone());
+        assert_reports_identical(&reference, &got, &format!("AMS-2/par_min_work={threshold}"));
     }
 }
 
