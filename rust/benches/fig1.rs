@@ -32,6 +32,15 @@ fn main() {
         fig.cells.len()
     );
 
+    // the per-cell machine-reuse economy, surfaced for free by the
+    // Runner's RunMeta path: reps beyond a cell's first are reuse hits
+    let reuse_hits: u64 = fig.cells.iter().map(|c| c.machine_reuse_hits).sum();
+    let fresh_builds: u64 = fig.cells.iter().map(|c| c.machine_fresh_builds).sum();
+    println!(
+        "[fig1] machine reuse: {reuse_hits} hit(s) / {fresh_builds} fresh build(s) across {} cells",
+        fig.cells.len()
+    );
+
     let mut fields = vec![
         ("bench", common::json_str("fig1")),
         ("p", p.to_string()),
@@ -40,6 +49,8 @@ fn main() {
         ("jobs", jobs.to_string()),
         ("cells", fig.cells.len().to_string()),
         ("wall_s", format!("{wall:.3}")),
+        ("machine_reuse_hits", reuse_hits.to_string()),
+        ("machine_fresh_builds", fresh_builds.to_string()),
     ];
     if serial_too && jobs > 1 {
         let t = std::time::Instant::now();

@@ -1,0 +1,112 @@
+//! Bench: the sort-as-a-service front-end. Drains a deterministic mixed
+//! job stream (sizes, distributions, forced + untargeted sorters, one
+//! deliberate crash job) at `jobs = 1` and `jobs = host`, asserts the
+//! simulated results are bit-identical across the two concurrency levels
+//! (scheduling must never leak into results), and emits
+//! `BENCH_serve.json` with throughput, p50/p95/p99 queue/service/e2e
+//! latency, the machine-reuse economy, and crossover-cache traffic.
+//!
+//! Knobs: RMPS_BENCH_P (default 64), RMPS_BENCH_SERVE_JOBS (stream
+//!        length multiplier, default 8 → 48 jobs), RMPS_BENCH_JOBS
+//!        (service concurrency for the parallel drain, default: all
+//!        cores). RMPS_BENCH_TINY=1 shrinks everything for CI smoke.
+
+mod common;
+
+use rmps::config::RunConfig;
+use rmps::serve::{JobSpec, Service, ServeOptions};
+
+/// One deterministic stream: `rounds` repetitions of a 6-job mixed batch
+/// (dense small/large, sparse, untargeted, forced sorters, one crasher).
+fn stream(rounds: usize) -> Vec<JobSpec> {
+    let mut specs = Vec::new();
+    for r in 0..rounds {
+        let lines = [
+            format!(r#"{{"n_per_pe": 4, "seed": {}, "algo": "RQuick"}}"#, 100 + r),
+            format!(r#"{{"n_per_pe": 256, "seed": {}, "algo": "RAMS", "dist": "Staggered"}}"#, 200 + r),
+            format!(r#"{{"sparsity": 8, "seed": {}, "algo": "RFIS"}}"#, 300 + r),
+            format!(r#"{{"n_per_pe": 64, "seed": {}}}"#, 400 + r),
+            format!(r#"{{"n_per_pe": 32, "seed": {}, "dist": "Zero"}}"#, 500 + r),
+            // HykSort on Zero under a tight cap: the robustness crash path
+            format!(
+                r#"{{"n_per_pe": 128, "seed": {}, "algo": "HykSort", "dist": "Zero", "mem_cap": 0.001}}"#,
+                600 + r
+            ),
+        ];
+        for l in &lines {
+            specs.push(JobSpec::parse(l).expect("bench stream specs are valid"));
+        }
+    }
+    specs
+}
+
+fn main() {
+    let tiny = common::env_usize("RMPS_BENCH_TINY", 0) != 0;
+    let p = common::env_usize("RMPS_BENCH_P", if tiny { 16 } else { 64 });
+    let rounds = common::env_usize("RMPS_BENCH_SERVE_JOBS", if tiny { 2 } else { 8 });
+    let jobs = common::env_jobs();
+
+    let opts = |jobs: usize| ServeOptions {
+        jobs,
+        base: RunConfig::default().with_p(p).with_n_per_pe(64),
+        validate: true,
+        keep_output: false,
+        route_tuned: true,
+    };
+
+    // serial reference drain
+    let t = std::time::Instant::now();
+    let serial = Service::new(opts(1)).drain(stream(rounds));
+    let serial_wall = t.elapsed().as_secs_f64();
+    assert!(serial.errors.is_empty(), "bench stream must be fully admitted");
+
+    // concurrent drain of the same stream
+    let t = std::time::Instant::now();
+    let par = Service::new(opts(jobs)).drain(stream(rounds));
+    let wall = t.elapsed().as_secs_f64();
+
+    // scheduling must not leak into results: per-job simulated outcomes
+    // are bit-identical at every service concurrency
+    assert_eq!(serial.reports.len(), par.reports.len());
+    let identical = serial.reports.iter().zip(&par.reports).all(|(a, b)| {
+        a.algorithm == b.algorithm
+            && a.time.to_bits() == b.time.to_bits()
+            && a.stats.messages == b.stats.messages
+            && a.stats.words == b.stats.words
+            && a.crashed == b.crashed
+    });
+    assert!(identical, "serve results diverged across job-concurrency levels");
+
+    let n_jobs = par.stats.jobs;
+    println!(
+        "[serve] p={p} jobs={jobs}: {n_jobs} job(s) in {wall:.3}s \
+         ({:.1} jobs/s; jobs=1 baseline {serial_wall:.3}s, speedup ×{:.2}, identical={identical})",
+        par.stats.throughput_jobs_per_s,
+        serial_wall / wall.max(1e-9)
+    );
+    par.stats.print();
+
+    let s = &par.stats;
+    common::write_bench_json(
+        "serve",
+        &[
+            ("bench", common::json_str("serve")),
+            ("p", p.to_string()),
+            ("jobs", jobs.to_string()),
+            ("n_jobs", n_jobs.to_string()),
+            ("crashed", s.crashed.to_string()),
+            ("wall_s", format!("{wall:.6}")),
+            ("serial_wall_s", format!("{serial_wall:.6}")),
+            ("speedup", format!("{:.3}", serial_wall / wall.max(1e-9))),
+            ("identical_across_jobs", identical.to_string()),
+            ("throughput_jobs_per_s", format!("{:.3}", s.throughput_jobs_per_s)),
+            ("queue_us", s.queue.to_json()),
+            ("service_us", s.service.to_json()),
+            ("e2e_us", s.total.to_json()),
+            ("machine_reuse_hits", s.machine_reuse_hits.to_string()),
+            ("machine_fresh_builds", s.machine_fresh_builds.to_string()),
+            ("crossover_cache_hits", s.crossover_cache_hits.to_string()),
+            ("crossover_probes", s.crossover_probes.to_string()),
+        ],
+    );
+}

@@ -36,6 +36,28 @@ pub struct Runner {
     validate: bool,
     keep_output: bool,
     mach: Machine,
+    /// `p` of the previous run, if any — same `p` means `Machine::reset`
+    /// kept every per-PE allocation (a machine-reuse hit); a different `p`
+    /// re-dimensions the machine (a fresh build).
+    last_p: Option<usize>,
+    reuse_hits: u64,
+    fresh_builds: u64,
+}
+
+/// Host-side metadata of one [`Runner::run_with_meta`] call — the
+/// per-run breakdown batched callers (the serve front-end, the fig
+/// experiment cells) aggregate instead of discarding.
+#[derive(Clone, Copy, Debug)]
+pub struct RunMeta {
+    /// Host wallclock of the simulation window, ms (same value as the
+    /// report's `wall_ms`; duplicated here so meta survives after the
+    /// report is consumed).
+    pub wall_ms: f64,
+    /// Whether this run reused the machine's per-PE state from the
+    /// previous run (same `p` — scratch, route buffers, and data-plane
+    /// pools all survive `reset`) or had to build it fresh (first run on
+    /// this runner, or a `p` switch re-dimensioned the machine).
+    pub machine_reused: bool,
 }
 
 impl Runner {
@@ -43,7 +65,16 @@ impl Runner {
     /// validation on, and output retention on — the legacy `run` defaults.
     pub fn new(cfg: RunConfig) -> Self {
         let mach = Machine::new(cfg.p, cfg.cost);
-        Self { cfg, backend: Box::new(RustSort), validate: true, keep_output: true, mach }
+        Self {
+            cfg,
+            backend: Box::new(RustSort),
+            validate: true,
+            keep_output: true,
+            mach,
+            last_p: None,
+            reuse_hits: 0,
+            fresh_builds: 0,
+        }
     }
 
     /// Override the intra-run PE-task parallelism of the owned machine
@@ -107,9 +138,28 @@ impl Runner {
     /// [`Machine`] is reset — not reallocated — so batched runs reuse its
     /// route scratch and superstep buffers.
     pub fn run(&mut self, sorter: &dyn Sorter, input: Vec<Vec<Elem>>) -> RunReport {
+        self.run_with_meta(sorter, input).0
+    }
+
+    /// [`Runner::run`] plus the host-side [`RunMeta`] breakdown: the
+    /// run's wallclock and whether the machine was a reuse hit or a fresh
+    /// build. The report itself is bit-identical to [`Runner::run`] —
+    /// meta is observation, not behavior.
+    pub fn run_with_meta(
+        &mut self,
+        sorter: &dyn Sorter,
+        input: Vec<Vec<Elem>>,
+    ) -> (RunReport, RunMeta) {
+        let machine_reused = self.last_p == Some(self.cfg.p);
+        self.last_p = Some(self.cfg.p);
+        if machine_reused {
+            self.reuse_hits += 1;
+        } else {
+            self.fresh_builds += 1;
+        }
         self.mach.reset(self.cfg.p, self.cfg.cost);
         self.mach.mem_cap_elems = self.cfg.mem_cap_elems();
-        execute(
+        let report = execute(
             &mut self.mach,
             &self.cfg,
             sorter,
@@ -117,7 +167,16 @@ impl Runner {
             input,
             self.validate,
             self.keep_output,
-        )
+        );
+        let meta = RunMeta { wall_ms: report.wall_ms, machine_reused };
+        (report, meta)
+    }
+
+    /// Cumulative `(machine-reuse hits, fresh builds)` over this runner's
+    /// lifetime — the machine-reuse economy of a batch at a glance
+    /// (`hits + fresh == runs`).
+    pub fn reuse_counters(&self) -> (u64, u64) {
+        (self.reuse_hits, self.fresh_builds)
     }
 
     /// [`Runner::run`] addressed by the legacy enum tag.
@@ -136,11 +195,24 @@ impl Runner {
         sorter: &dyn Sorter,
         batch: impl IntoIterator<Item = (RunConfig, Vec<Vec<Elem>>)>,
     ) -> Vec<RunReport> {
+        self.run_many_with_meta(sorter, batch).into_iter().map(|(r, _)| r).collect()
+    }
+
+    /// [`Runner::run_many`] surfacing the per-run [`RunMeta`] instead of
+    /// discarding it: each item reports its wallclock and whether it hit
+    /// the reused machine (same `p` as the previous item) or forced a
+    /// fresh build — what [`crate::serve::Stats`] aggregates into the
+    /// service's machine-reuse economy.
+    pub fn run_many_with_meta(
+        &mut self,
+        sorter: &dyn Sorter,
+        batch: impl IntoIterator<Item = (RunConfig, Vec<Vec<Elem>>)>,
+    ) -> Vec<(RunReport, RunMeta)> {
         batch
             .into_iter()
             .map(|(cfg, input)| {
                 self.set_config(cfg);
-                self.run(sorter, input)
+                self.run_with_meta(sorter, input)
             })
             .collect()
     }
@@ -230,6 +302,56 @@ mod tests {
         assert_eq!(a.time.to_bits(), b.time.to_bits(), "reset must be complete");
         assert_eq!(a.stats.messages, b.stats.messages);
         assert_eq!(a.output, b.output);
+    }
+
+    /// Meta is observation only: the first run on a runner is a fresh
+    /// build, same-`p` successors are reuse hits, a `p` switch is fresh
+    /// again — and the counters tally exactly runs.
+    #[test]
+    fn run_meta_tracks_machine_reuse() {
+        let cfg = RunConfig::default().with_p(8).with_n_per_pe(16);
+        let mut runner = Runner::new(cfg.clone());
+        let input = generate(&cfg, Distribution::Uniform);
+        let (a, meta) = runner.run_with_meta(Algorithm::RQuick.sorter().as_ref(), input.clone());
+        assert!(!meta.machine_reused, "first run builds fresh");
+        assert!(meta.wall_ms >= 0.0);
+        assert_eq!(meta.wall_ms.to_bits(), a.wall_ms.to_bits());
+        let (_, meta) = runner.run_with_meta(Algorithm::RQuick.sorter().as_ref(), input.clone());
+        assert!(meta.machine_reused, "same p reuses the machine");
+        let wide = cfg.clone().with_p(16);
+        runner.set_config(wide.clone());
+        let (_, meta) =
+            runner.run_with_meta(Algorithm::RQuick.sorter().as_ref(), generate(&wide, Distribution::Uniform));
+        assert!(!meta.machine_reused, "p switch re-dimensions");
+        assert_eq!(runner.reuse_counters(), (1, 2));
+    }
+
+    /// run_many_with_meta: metas line up with reports and the plain
+    /// run_many stays byte-identical to the metadata path.
+    #[test]
+    fn run_many_with_meta_surfaces_the_breakdown() {
+        let base = RunConfig::default().with_p(8).with_n_per_pe(16);
+        let batch: Vec<_> = [1u64, 2, 3]
+            .iter()
+            .map(|&s| {
+                let cfg = base.clone().with_seed(s);
+                let input = generate(&cfg, Distribution::Uniform);
+                (cfg, input)
+            })
+            .collect();
+        let mut runner = Runner::new(base.clone());
+        let with_meta =
+            runner.run_many_with_meta(Algorithm::RQuick.sorter().as_ref(), batch.clone());
+        assert_eq!(with_meta.len(), 3);
+        assert!(!with_meta[0].1.machine_reused);
+        assert!(with_meta[1].1.machine_reused && with_meta[2].1.machine_reused);
+        let mut plain_runner = Runner::new(base.clone());
+        let plain = plain_runner.run_many(Algorithm::RQuick.sorter().as_ref(), batch);
+        for ((r, m), p) in with_meta.iter().zip(&plain) {
+            assert_eq!(r.time.to_bits(), p.time.to_bits());
+            assert_eq!(r.output, p.output);
+            assert_eq!(m.wall_ms.to_bits(), r.wall_ms.to_bits());
+        }
     }
 
     #[test]

@@ -119,6 +119,50 @@ impl Drop for Tokens {
     }
 }
 
+// ---- job-level admission (the serve front-end) -------------------------
+
+/// RAII grant of **job-level** worker tokens — the third parallelism
+/// level (cell × PE × job) on the same process-wide budget, used by the
+/// [`crate::serve`] front-end for admission control. Each admitted
+/// concurrent job holds one token for as long as it is being served, so
+/// jobs, figure-cell fan-out, and PE-task rounds can never oversubscribe
+/// the host together; inner levels that find the budget drained degrade
+/// to inline exactly as they do today.
+///
+/// Dropping the grant returns every token (panic-safe via [`Tokens`]).
+pub struct JobGrant {
+    tokens: Tokens,
+}
+
+impl JobGrant {
+    /// Number of tokens actually granted (possibly fewer than requested,
+    /// possibly zero when outer levels hold the whole budget — the caller
+    /// then serves inline on its own thread, which needs no token: that
+    /// thread is already accounted to whatever round it is nested in, or
+    /// is the process's root thread).
+    pub fn granted(&self) -> usize {
+        self.tokens.n
+    }
+}
+
+/// Take up to `want` job-level worker tokens from the shared budget.
+/// `want` is clamped to [`available_jobs`] first — a service asking for
+/// more concurrent jobs than the host has cores would only add scheduler
+/// churn, exactly like an oversized `--jobs` (and the clamp keeps the
+/// `usize → isize` conversion inside [`Tokens::acquire`] safe for any
+/// caller-supplied value).
+pub fn acquire_job_workers(want: usize) -> JobGrant {
+    JobGrant { tokens: Tokens::acquire(want.min(available_jobs())) }
+}
+
+/// Snapshot of the tokens currently unclaimed in the process-wide worker
+/// budget. Diagnostics/tests only: the serve soak test samples this
+/// during a concurrent drain and asserts it is **never negative** — the
+/// budget-never-oversubscribed invariant across all three levels.
+pub fn budget_remaining() -> isize {
+    budget().load(Ordering::Relaxed)
+}
+
 // ---- pe-jobs configuration ---------------------------------------------
 
 /// Process-wide `--pe-jobs` override; 0 = unset.
@@ -702,6 +746,37 @@ mod tests {
     #[test]
     fn available_jobs_is_positive() {
         assert!(available_jobs() >= 1);
+    }
+
+    /// Job-level grants draw from the same budget as the cell/PE levels:
+    /// a grant never exceeds the request, never drives the budget
+    /// negative, and dropping it restores what it took. (Exact balance
+    /// values cannot be asserted here — other tests in this binary hold
+    /// and release tokens concurrently — so the assertions are the
+    /// race-safe invariants.)
+    #[test]
+    fn job_grant_respects_the_shared_budget() {
+        let grant = acquire_job_workers(2);
+        assert!(grant.granted() <= 2);
+        assert!(budget_remaining() >= 0, "budget negative while grant held");
+        drop(grant);
+        assert!(budget_remaining() >= 0, "budget negative after grant release");
+        // an absurd request is clamped to the host width, not cast raw
+        let grant = acquire_job_workers(usize::MAX);
+        assert!(grant.granted() <= available_jobs());
+        assert!(budget_remaining() >= 0);
+    }
+
+    /// With a job-level grant pinning tokens, nested parallel_map rounds
+    /// must still complete correctly (degrading to inline when the grant
+    /// holds the whole budget) — the three-level no-oversubscription
+    /// story.
+    #[test]
+    fn nested_rounds_degrade_inline_under_a_job_grant() {
+        let grant = acquire_job_workers(available_jobs());
+        let out = parallel_map(4, 32, |i| i * 3);
+        assert_eq!(out, (0..32).map(|i| i * 3).collect::<Vec<_>>());
+        drop(grant);
     }
 
     #[test]

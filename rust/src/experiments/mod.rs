@@ -131,6 +131,8 @@ pub fn run_sorter_cell(
             crashed: true,
             ok: false,
             report: None,
+            machine_reuse_hits: 0,
+            machine_fresh_builds: 0,
         };
     }
 
@@ -148,8 +150,9 @@ pub fn run_sorter_cell(
         }
         let input = generate(&cfg, dist);
         runner.set_config(cfg);
-        let report = runner.run(sorter, input);
+        let (report, _meta) = runner.run_with_meta(sorter, input);
         if report.crashed.is_some() {
+            let (hits, fresh) = runner.reuse_counters();
             return CellResult {
                 algorithm,
                 distribution: dist,
@@ -158,12 +161,15 @@ pub fn run_sorter_cell(
                 crashed: true,
                 ok: false,
                 report: Some(report),
+                machine_reuse_hits: hits,
+                machine_fresh_builds: fresh,
             };
         }
         times.push(report.time);
         last = Some(report);
     }
     let report = last.unwrap();
+    let (hits, fresh) = runner.reuse_counters();
     CellResult {
         algorithm,
         distribution: dist,
@@ -172,6 +178,8 @@ pub fn run_sorter_cell(
         crashed: false,
         ok: report.validation.ok(),
         report: Some(report),
+        machine_reuse_hits: hits,
+        machine_fresh_builds: fresh,
     }
 }
 
@@ -186,6 +194,11 @@ pub struct CellResult {
     pub crashed: bool,
     pub ok: bool,
     pub report: Option<RunReport>,
+    /// Machine-reuse breakdown of the cell's repetitions (the runner is
+    /// shared, so reps after the first are reuse hits): from
+    /// [`Runner::reuse_counters`], for free via [`Runner::run_with_meta`].
+    pub machine_reuse_hits: u64,
+    pub machine_fresh_builds: u64,
 }
 
 impl CellResult {

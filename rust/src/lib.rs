@@ -83,6 +83,7 @@ pub mod model;
 pub mod partition;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod shuffle;
 pub mod sim;
 pub mod verify;

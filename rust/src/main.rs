@@ -64,6 +64,27 @@ COMMANDS
   fig5     ratios of each algorithm to the fastest --max-log L
   table1   empirical Table I footprint growth  --n-per-pe --p-small
   tuning   App. J2 parameter sweeps          --p
+  serve    sort-as-a-service: drain queued JSONL job specs through the
+           registry/Runner machinery with admission control
+             --drain FILE    read job specs from FILE (default: stdin),
+                             one JSON object per line; blank lines are
+                             skipped, bad lines are reported and counted
+                             as rejections (nonzero exit)
+             --jobs N        concurrent jobs admitted; shares the
+                             process-wide worker-token budget with the
+                             per-job --pe-jobs level, so the host is
+                             never oversubscribed (results identical
+                             for every N)
+             --no-validate   skip the Θ(n) output validation per job
+             --paper-crossovers  route untargeted jobs with the paper's
+                             JUQUEEN table instead of a tuned table
+                             probed once and cached per machine config
+             --json-out P    also write the aggregate digest (throughput,
+                             p50/p95/p99 queue/service/e2e latency µs,
+                             per-sorter counts, reuse/cache rates) to P
+           spec fields: p, n_per_pe, sparsity, dist, seed, algo, alpha,
+           beta, mem_cap (null lifts the cap); omitted fields inherit
+           the machine flags below
 
 MACHINE FLAGS (all commands)
   --p P            simulated PEs, power of two (default 1024)
@@ -310,6 +331,61 @@ fn main() -> Result<()> {
         }
         "tuning" => {
             experiments::tuning::run(a.get("p", 1usize << 8)?, &[16, 256, 4096], jobs).print();
+        }
+        "serve" => {
+            let opts = rmps::serve::ServeOptions {
+                jobs,
+                base: machine_config(&a)?,
+                validate: !a.flag("no-validate"),
+                // the CLI prints digests, never payloads — don't retain Θ(n)
+                keep_output: false,
+                route_tuned: !a.flag("paper-crossovers"),
+            };
+            let service = rmps::serve::Service::new(opts);
+            let outcome = match a.kv.get("drain") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| CliError(format!("cannot read {path}: {e}")))?;
+                    service.drain_lines(text.lines().map(str::to_string))
+                }
+                None => {
+                    use std::io::BufRead;
+                    let stdin = std::io::stdin();
+                    let lines = stdin.lock().lines().map_while(|l| l.ok());
+                    service.drain_lines(lines)
+                }
+            };
+            for (rec, rep) in outcome.records.iter().zip(&outcome.reports) {
+                let tail = match &rep.crashed {
+                    Some(c) => format!("  CRASHED: {c}"),
+                    None => String::new(),
+                };
+                println!(
+                    "job {:>4}  {:<12} p={:<6} n={:<9} sim={:<12.4e} queue {:>9.0} µs  \
+                     service {:>9.0} µs  e2e {:>9.0} µs{}",
+                    rec.id,
+                    rec.algorithm,
+                    rec.p,
+                    rec.n_total,
+                    rec.sim_time,
+                    rec.queue_us,
+                    rec.service_us,
+                    rec.total_us,
+                    tail
+                );
+            }
+            outcome.stats.print();
+            for (line, err) in &outcome.errors {
+                eprintln!("rejected job spec at input line {line}: {err}");
+            }
+            if let Some(path) = a.kv.get("json-out") {
+                std::fs::write(path, outcome.stats.to_json())
+                    .map_err(|e| CliError(format!("cannot write {path}: {e}")))?;
+                println!("wrote {path}");
+            }
+            if !outcome.errors.is_empty() {
+                bail!("{} job spec(s) rejected", outcome.errors.len());
+            }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),

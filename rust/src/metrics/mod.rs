@@ -28,6 +28,46 @@ impl Stats {
     }
 }
 
+/// Latency percentile summary — the tail-latency digest the serve
+/// front-end reports per drained job stream (queue wait, service, and
+/// end-to-end wall time each get one of these).
+///
+/// Percentiles use the **nearest-rank** definition (the ⌈q·N⌉-th smallest
+/// sample): every reported value is an actually observed latency, never
+/// an interpolation between two — the convention of SLO reporting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    /// Digest `samples` (any order; an empty slice yields all zeros —
+    /// "no data", not "zero latency", callers report the count alongside).
+    pub fn of(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let rank = |q: f64| {
+            let r = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            sorted[r - 1]
+        };
+        Self { p50: rank(0.50), p95: rank(0.95), p99: rank(0.99), max: sorted[sorted.len() - 1] }
+    }
+
+    /// The digest as a JSON object fragment (used by `BENCH_serve.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}",
+            self.p50, self.p95, self.p99, self.max
+        )
+    }
+}
+
 /// Load-imbalance summary over final PE loads.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Imbalance {
@@ -86,6 +126,42 @@ mod tests {
     fn imbalance_empty() {
         let im = Imbalance::from_loads([]);
         assert_eq!(im.max_load, 0);
+    }
+
+    /// Nearest-rank on a known sample: 1..=100 makes every percentile its
+    /// own index, so the expected values are exact.
+    #[test]
+    fn percentiles_nearest_rank_exact() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::of(&samples);
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p95, 95.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        // order-independent
+        let mut shuffled = samples.clone();
+        shuffled.reverse();
+        assert_eq!(Percentiles::of(&shuffled), p);
+    }
+
+    #[test]
+    fn percentiles_small_and_empty_samples() {
+        assert_eq!(Percentiles::of(&[]), Percentiles::default());
+        // a single sample is every percentile
+        let one = Percentiles::of(&[7.5]);
+        assert_eq!((one.p50, one.p95, one.p99, one.max), (7.5, 7.5, 7.5, 7.5));
+        // two samples: p50 is the lower (rank ⌈0.5·2⌉ = 1), the tail is the upper
+        let two = Percentiles::of(&[10.0, 20.0]);
+        assert_eq!((two.p50, two.p99, two.max), (10.0, 20.0, 20.0));
+    }
+
+    #[test]
+    fn percentiles_json_shape() {
+        let j = Percentiles::of(&[1.0, 2.0]).to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"p50\"", "\"p95\"", "\"p99\"", "\"max\""] {
+            assert!(j.contains(key), "{j}");
+        }
     }
 
     #[test]

@@ -1,0 +1,381 @@
+//! Job specifications for the sort-as-a-service front-end: one JSON
+//! object per line (JSONL), read from a file or stdin by `rmps serve`.
+//!
+//! The build environment is offline (no serde), so the parser is a
+//! hand-rolled reader for exactly the shape a job spec needs: one flat
+//! object of string / number / bool / null fields. Unknown fields are
+//! rejected — a typo'd `"ditst"` silently inheriting the default
+//! distribution would corrupt a latency study.
+//!
+//! ```text
+//! {"n_per_pe": 4096, "dist": "Staggered", "seed": 7, "algo": "RQuick"}
+//! {"sparsity": 8, "seed": 8}
+//! {"n_per_pe": 512, "dist": "Zero", "algo": "HykSort", "mem_cap": 2.0, "p": 64}
+//! ```
+//!
+//! Every field is optional; omitted fields inherit the service's base
+//! [`RunConfig`] (the CLI's machine flags). A job without `"algo"` is
+//! *untargeted*: the service routes it through the Robust selector (by
+//! default with a tuned crossover table cached per machine config — see
+//! [`crate::serve`]).
+
+use crate::config::RunConfig;
+use crate::input::Distribution;
+
+/// One queued sort job, as parsed from a JSONL line. `None` fields
+/// inherit the service's base config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Dense elements per PE. Ignored when `sparsity > 1`.
+    pub n_per_pe: Option<usize>,
+    /// Sparsity factor (`> 1` = one element per `s` PEs), like the CLI's
+    /// `--sparsity`; takes precedence over `n_per_pe`.
+    pub sparsity: Option<usize>,
+    /// Input distribution (default: the base config's generator default,
+    /// Uniform).
+    pub dist: Distribution,
+    /// Master RNG seed for this job's input.
+    pub seed: Option<u64>,
+    /// Registry name of a forced sorter; `None` (or JSON `null`) routes
+    /// through the Robust selector.
+    pub algo: Option<String>,
+    /// Simulated machine width (power of two).
+    pub p: Option<usize>,
+    /// Cost-model overrides.
+    pub alpha: Option<f64>,
+    pub beta: Option<f64>,
+    /// Memory-cap override: outer `None` = inherit, `Some(None)` (JSON
+    /// `null`) = lift the cap, `Some(Some(f))` = cap at `f · n/p`.
+    pub mem_cap: Option<Option<f64>>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            n_per_pe: None,
+            sparsity: None,
+            dist: Distribution::Uniform,
+            seed: None,
+            algo: None,
+            p: None,
+            alpha: None,
+            beta: None,
+            mem_cap: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// The effective run configuration: the service's base config with
+    /// this spec's overrides applied. Size semantics follow the CLI:
+    /// `sparsity > 1` makes the job sparse (ignoring `n_per_pe`),
+    /// otherwise the job is dense at `n_per_pe` (or the base's).
+    pub fn config(&self, base: &RunConfig) -> RunConfig {
+        let mut cfg = base.clone();
+        if let Some(p) = self.p {
+            cfg.p = p;
+        }
+        if let Some(seed) = self.seed {
+            cfg.seed = seed;
+        }
+        if let Some(alpha) = self.alpha {
+            cfg.cost.alpha = alpha;
+        }
+        if let Some(beta) = self.beta {
+            cfg.cost.beta = beta;
+        }
+        if let Some(cap) = self.mem_cap {
+            cfg.mem_cap_factor = cap;
+        }
+        match self.sparsity {
+            Some(s) if s > 1 => cfg.with_sparsity(s),
+            _ => {
+                let m = self.n_per_pe.unwrap_or(cfg.n_per_pe);
+                cfg.with_n_per_pe(m)
+            }
+        }
+    }
+
+    /// Parse one JSONL line. Errors name the offending field; unknown
+    /// fields are errors too.
+    pub fn parse(line: &str) -> Result<JobSpec, String> {
+        let mut spec = JobSpec::default();
+        for (key, val) in parse_flat_object(line)? {
+            match key.as_str() {
+                "n_per_pe" => spec.n_per_pe = Some(as_usize(&key, &val)?),
+                "sparsity" => spec.sparsity = Some(as_usize(&key, &val)?),
+                "p" => spec.p = Some(as_usize(&key, &val)?),
+                "seed" => spec.seed = Some(as_u64(&key, &val)?),
+                "alpha" => spec.alpha = Some(as_f64(&key, &val)?),
+                "beta" => spec.beta = Some(as_f64(&key, &val)?),
+                "dist" => {
+                    let name = as_str(&key, &val)?;
+                    spec.dist = Distribution::parse(&name)
+                        .ok_or_else(|| format!("unknown distribution {name:?}"))?;
+                }
+                "algo" => {
+                    spec.algo = match val {
+                        JsonVal::Null => None,
+                        other => Some(as_str(&key, &other)?),
+                    }
+                }
+                "mem_cap" => {
+                    spec.mem_cap = Some(match val {
+                        JsonVal::Null => None,
+                        other => Some(as_f64(&key, &other)?),
+                    })
+                }
+                other => return Err(format!("unknown field {other:?}")),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// A parsed JSON scalar — all a flat job spec can hold.
+#[derive(Clone, Debug, PartialEq)]
+enum JsonVal {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+fn as_f64(key: &str, v: &JsonVal) -> Result<f64, String> {
+    match v {
+        JsonVal::Num(n) => Ok(*n),
+        other => Err(format!("field {key:?} must be a number, got {other:?}")),
+    }
+}
+
+/// Integer fields ride in JSON numbers; require a non-negative integral
+/// value inside f64's exact range (2^53 — seeds and sizes both fit).
+fn as_u64(key: &str, v: &JsonVal) -> Result<u64, String> {
+    let n = as_f64(key, v)?;
+    if n.fract() != 0.0 || !(0.0..=9007199254740992.0).contains(&n) {
+        return Err(format!("field {key:?} must be a non-negative integer, got {n}"));
+    }
+    Ok(n as u64)
+}
+
+fn as_usize(key: &str, v: &JsonVal) -> Result<usize, String> {
+    Ok(as_u64(key, v)? as usize)
+}
+
+fn as_str(key: &str, v: &JsonVal) -> Result<String, String> {
+    match v {
+        JsonVal::Str(s) => Ok(s.clone()),
+        other => Err(format!("field {key:?} must be a string, got {other:?}")),
+    }
+}
+
+/// Parse `{"key": value, ...}` with scalar values only. Positions in
+/// error messages are byte offsets into the line.
+fn parse_flat_object(line: &str) -> Result<Vec<(String, JsonVal)>, String> {
+    let bytes = line.as_bytes();
+    let mut pos = 0usize;
+    let mut fields = Vec::new();
+
+    fn skip_ws(bytes: &[u8], pos: &mut usize) {
+        while *pos < bytes.len() && bytes[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+    }
+
+    fn expect(bytes: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+        skip_ws(bytes, pos);
+        if *pos < bytes.len() && bytes[*pos] == c {
+            *pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, *pos))
+        }
+    }
+
+    fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+        expect(bytes, pos, b'"')?;
+        let mut out = String::new();
+        while *pos < bytes.len() {
+            match bytes[*pos] {
+                b'"' => {
+                    *pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    *pos += 1;
+                    let esc = *bytes.get(*pos).ok_or("unterminated escape")?;
+                    out.push(match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        other => {
+                            return Err(format!(
+                                "unsupported escape \\{} at byte {}",
+                                other as char, *pos
+                            ))
+                        }
+                    });
+                    *pos += 1;
+                }
+                _ => {
+                    // multi-byte UTF-8 sequences pass through verbatim
+                    let start = *pos;
+                    *pos += 1;
+                    while *pos < bytes.len() && bytes[*pos] & 0xC0 == 0x80 {
+                        *pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&bytes[start..*pos]).map_err(|e| e.to_string())?,
+                    );
+                }
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<JsonVal, String> {
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b'"') => Ok(JsonVal::Str(parse_string(bytes, pos)?)),
+            Some(b't') if bytes[*pos..].starts_with(b"true") => {
+                *pos += 4;
+                Ok(JsonVal::Bool(true))
+            }
+            Some(b'f') if bytes[*pos..].starts_with(b"false") => {
+                *pos += 5;
+                Ok(JsonVal::Bool(false))
+            }
+            Some(b'n') if bytes[*pos..].starts_with(b"null") => {
+                *pos += 4;
+                Ok(JsonVal::Null)
+            }
+            Some(_) => {
+                let start = *pos;
+                while *pos < bytes.len()
+                    && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    *pos += 1;
+                }
+                let tok = std::str::from_utf8(&bytes[start..*pos]).map_err(|e| e.to_string())?;
+                tok.parse::<f64>()
+                    .map(JsonVal::Num)
+                    .map_err(|_| format!("invalid JSON value {tok:?} at byte {start}"))
+            }
+            None => Err(format!("expected a value at byte {}", *pos)),
+        }
+    }
+
+    expect(bytes, &mut pos, b'{')?;
+    skip_ws(bytes, &mut pos);
+    if pos < bytes.len() && bytes[pos] == b'}' {
+        pos += 1;
+    } else {
+        loop {
+            skip_ws(bytes, &mut pos);
+            let key = parse_string(bytes, &mut pos)?;
+            expect(bytes, &mut pos, b':')?;
+            let val = parse_value(bytes, &mut pos)?;
+            fields.push((key, val));
+            skip_ws(bytes, &mut pos);
+            match bytes.get(pos) {
+                Some(b',') => pos += 1,
+                Some(b'}') => {
+                    pos += 1;
+                    break;
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+            }
+        }
+    }
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing content after object at byte {pos}"));
+    }
+    Ok(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_spec_round_trips() {
+        let spec = JobSpec::parse(
+            r#"{"n_per_pe": 4096, "dist": "Staggered", "seed": 7, "algo": "RQuick",
+                "p": 64, "alpha": 2000, "beta": 8.5, "mem_cap": 4.0}"#
+                .replace('\n', " ")
+                .as_str(),
+        )
+        .unwrap();
+        assert_eq!(spec.n_per_pe, Some(4096));
+        assert_eq!(spec.dist, Distribution::Staggered);
+        assert_eq!(spec.seed, Some(7));
+        assert_eq!(spec.algo.as_deref(), Some("RQuick"));
+        assert_eq!(spec.p, Some(64));
+        assert_eq!(spec.alpha, Some(2000.0));
+        assert_eq!(spec.beta, Some(8.5));
+        assert_eq!(spec.mem_cap, Some(Some(4.0)));
+    }
+
+    #[test]
+    fn minimal_and_null_fields() {
+        let spec = JobSpec::parse("{}").unwrap();
+        assert_eq!(spec, JobSpec::default());
+        let spec = JobSpec::parse(r#"{"algo": null, "mem_cap": null, "sparsity": 8}"#).unwrap();
+        assert_eq!(spec.algo, None);
+        assert_eq!(spec.mem_cap, Some(None), "null lifts the cap");
+        assert_eq!(spec.sparsity, Some(8));
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_field_names() {
+        for (line, needle) in [
+            (r#"{"n_per_pe": "many"}"#, "n_per_pe"),
+            (r#"{"dist": "Uniformm"}"#, "unknown distribution"),
+            (r#"{"ditst": "Uniform"}"#, "unknown field"),
+            (r#"{"seed": -1}"#, "non-negative"),
+            (r#"{"seed": 1.5}"#, "non-negative integer"),
+            (r#"{"n_per_pe": 3"#, "expected"),
+            (r#"{"a": 1} extra"#, "trailing"),
+            ("not json", "expected"),
+        ] {
+            let err = JobSpec::parse(line).unwrap_err();
+            assert!(err.contains(needle), "{line:?} → {err:?}");
+        }
+    }
+
+    #[test]
+    fn config_merges_over_base() {
+        let base = RunConfig::default().with_p(256).with_n_per_pe(1024);
+        // dense override
+        let spec = JobSpec::parse(r#"{"n_per_pe": 32, "seed": 9, "p": 64}"#).unwrap();
+        let cfg = spec.config(&base);
+        assert_eq!((cfg.p, cfg.n_per_pe, cfg.sparsity, cfg.seed), (64, 32, 1, 9));
+        // sparse wins over dense, like the CLI
+        let spec = JobSpec::parse(r#"{"sparsity": 8, "n_per_pe": 32}"#).unwrap();
+        let cfg = spec.config(&base);
+        assert_eq!(cfg.sparsity, 8);
+        assert!(cfg.n_over_p() < 1.0);
+        // mem_cap: null lifts, number scales, absent inherits
+        assert_eq!(JobSpec::parse(r#"{"mem_cap": null}"#).unwrap().config(&base).mem_cap_factor, None);
+        assert_eq!(
+            JobSpec::parse(r#"{"mem_cap": 4.0}"#).unwrap().config(&base).mem_cap_factor,
+            Some(4.0)
+        );
+        assert_eq!(JobSpec::parse("{}").unwrap().config(&base).mem_cap_factor, base.mem_cap_factor);
+        // cost overrides
+        let cfg = JobSpec::parse(r#"{"alpha": 100, "beta": 2}"#).unwrap().config(&base);
+        assert_eq!((cfg.cost.alpha, cfg.cost.beta), (100.0, 2.0));
+    }
+
+    #[test]
+    fn escapes_and_unicode_in_strings() {
+        let spec = JobSpec::parse(r#"{"algo": "My\"Sorter\\v2"}"#).unwrap();
+        assert_eq!(spec.algo.as_deref(), Some("My\"Sorter\\v2"));
+        let err = JobSpec::parse(r#"{"algo": "\u0041"}"#).unwrap_err();
+        assert!(err.contains("unsupported escape"), "{err}");
+    }
+}

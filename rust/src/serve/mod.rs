@@ -1,0 +1,396 @@
+//! Sort-as-a-service front-end: a long-lived drain loop that accepts
+//! queued sort jobs (JSONL [`JobSpec`]s), admission-controls them
+//! through the process-wide worker-token budget of [`crate::exec`], and
+//! dispatches each through a reused [`Runner`].
+//!
+//! ## Admission control
+//!
+//! Job concurrency is the **third** level drawing from the single
+//! process-wide worker-token budget, above the cell level
+//! (`experiments::run_cells` / `--jobs`) and the PE-task level
+//! (`Machine` rounds / `--pe-jobs`). A [`Service`] acquires a
+//! [`crate::exec::JobGrant`] of up to `opts.jobs` tokens for the
+//! lifetime of a drain; `granted()` workers serve the queue (the caller
+//! is always one of them, so a grant of 0 or 1 degrades to inline
+//! serving, never deadlock). Inner PE-task rounds draw from whatever
+//! budget remains, so the three levels together can never oversubscribe
+//! the host — asserted by the soak test in `tests/serve_equivalence.rs`.
+//!
+//! ## Routing
+//!
+//! A job that names an `"algo"` runs exactly that registry sorter. An
+//! untargeted job routes through the Robust selector — by default with
+//! a **tuned** crossover table from
+//! [`crate::experiments::tuning::crossover_table_cached`], probed once
+//! per distinct machine config and cached process-wide, so only the
+//! first job on a new config pays the probe. `route_tuned: false`
+//! falls back to the paper's static JUQUEEN table.
+//!
+//! ## Determinism
+//!
+//! Scheduling decides only *when* a job runs, never *what it computes*:
+//! each job's [`RunReport`] depends on `(config, distribution, seed,
+//! sorter)` alone, so a drained stream is field-by-field bit-identical
+//! to running every job standalone, at any `jobs` level (the
+//! equivalence test asserts this for 1, 3, and the host width). Queue
+//! and service latencies are host wall-clock and live only in the
+//! [`JobRecord`]s / [`Stats`] digest.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::algorithms::runner::RunMeta;
+use crate::algorithms::selector::RobustSorter;
+use crate::algorithms::{find_sorter, RunReport, Runner, Sorter};
+use crate::config::RunConfig;
+use crate::exec;
+use crate::experiments::tuning::{crossover_cache_counters, crossover_table_cached};
+
+mod job;
+mod stats;
+
+pub use job::JobSpec;
+pub use stats::{JobRecord, Stats};
+
+/// Configuration of a [`Service`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Desired job-level concurrency; the actual grant is capped by the
+    /// worker-token budget left by outer levels.
+    pub jobs: usize,
+    /// Base run configuration; each job overrides selected fields.
+    pub base: RunConfig,
+    /// Validate each job's output (the Θ(n) reference clone).
+    pub validate: bool,
+    /// Keep each job's sorted payload in its report.
+    pub keep_output: bool,
+    /// Route untargeted jobs with a tuned (probed + cached) crossover
+    /// table instead of the paper's JUQUEEN constants.
+    pub route_tuned: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            jobs: exec::available_jobs(),
+            base: RunConfig::default(),
+            validate: true,
+            keep_output: true,
+            route_tuned: true,
+        }
+    }
+}
+
+/// Everything a drained job stream produced: per-job reports and timing
+/// records (both in admission order, parallel to each other), rejected
+/// specs, and the aggregate digest.
+#[derive(Debug, Default)]
+pub struct ServeOutcome {
+    pub reports: Vec<RunReport>,
+    pub records: Vec<JobRecord>,
+    /// Rejected submissions as `(input index, error)`. For
+    /// [`Service::drain_lines`] the index is the 1-based line number;
+    /// for [`Service::drain`] it is the 0-based spec index.
+    pub errors: Vec<(usize, String)>,
+    pub stats: Stats,
+}
+
+/// Resolve the sorter a spec will run: a named registry sorter, or the
+/// Robust selector (tuned per machine config, or the paper table).
+pub fn resolve_sorter(
+    spec: &JobSpec,
+    cfg: &RunConfig,
+    route_tuned: bool,
+) -> Result<std::sync::Arc<dyn Sorter>, String> {
+    match &spec.algo {
+        Some(name) => {
+            find_sorter(name).ok_or_else(|| format!("unknown algorithm {name:?}"))
+        }
+        None if route_tuned => {
+            Ok(std::sync::Arc::new(RobustSorter::with_table(crossover_table_cached(cfg))))
+        }
+        None => Ok(std::sync::Arc::new(RobustSorter::new())),
+    }
+}
+
+/// Submission-side validation: everything that should bounce a spec at
+/// enqueue time instead of inside a worker.
+fn validate_spec(spec: &JobSpec, base: &RunConfig) -> Result<(), String> {
+    if let Some(name) = &spec.algo {
+        if find_sorter(name).is_none() {
+            return Err(format!("unknown algorithm {name:?}"));
+        }
+    }
+    let p = spec.p.unwrap_or(base.p);
+    if p == 0 || !p.is_power_of_two() {
+        return Err(format!("p must be a nonzero power of two, got {p}"));
+    }
+    Ok(())
+}
+
+struct Queued {
+    id: usize,
+    spec: JobSpec,
+    submitted: Instant,
+}
+
+#[derive(Default)]
+struct QueueState {
+    jobs: VecDeque<Queued>,
+    closed: bool,
+}
+
+/// The shared job queue: a mutexed deque plus a condvar so idle workers
+/// park instead of spinning while the producer is still reading specs.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        Self { state: Mutex::new(QueueState::default()), ready: Condvar::new() }
+    }
+
+    fn push(&self, queued: Queued) {
+        self.state.lock().unwrap().jobs.push_back(queued);
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Next job, blocking while the queue is open and empty; `None` once
+    /// it is closed and drained.
+    fn pop(&self) -> Option<Queued> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(j) = st.jobs.pop_front() {
+                return Some(j);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+}
+
+/// The sort-as-a-service drain loop. One instance serves one stream of
+/// jobs; construct another for the next stream.
+pub struct Service {
+    opts: ServeOptions,
+}
+
+impl Service {
+    pub fn new(opts: ServeOptions) -> Self {
+        Self { opts }
+    }
+
+    /// Drain an in-memory batch of specs. Invalid specs are rejected
+    /// into `errors` (indexed by position) without stopping the rest.
+    pub fn drain(&self, specs: Vec<JobSpec>) -> ServeOutcome {
+        self.run(|queue, errors| {
+            let mut admitted = 0usize;
+            for (i, spec) in specs.into_iter().enumerate() {
+                match validate_spec(&spec, &self.opts.base) {
+                    Ok(()) => {
+                        queue.push(Queued { id: admitted, spec, submitted: Instant::now() });
+                        admitted += 1;
+                    }
+                    Err(e) => errors.push((i, e)),
+                }
+            }
+        })
+    }
+
+    /// Drain a stream of JSONL lines (a spec file or stdin): jobs are
+    /// admitted as their lines arrive, so workers overlap with input
+    /// parsing. Blank lines are skipped; malformed or invalid lines are
+    /// rejected into `errors` by 1-based line number.
+    pub fn drain_lines(&self, lines: impl Iterator<Item = String>) -> ServeOutcome {
+        self.run(|queue, errors| {
+            let mut admitted = 0usize;
+            for (lineno, line) in lines.enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match JobSpec::parse(&line)
+                    .and_then(|spec| validate_spec(&spec, &self.opts.base).map(|()| spec))
+                {
+                    Ok(spec) => {
+                        queue.push(Queued { id: admitted, spec, submitted: Instant::now() });
+                        admitted += 1;
+                    }
+                    Err(e) => errors.push((lineno + 1, e)),
+                }
+            }
+        })
+    }
+
+    /// Shared drain core: acquire the job-level worker grant, spawn the
+    /// helper workers, run `producer` on the caller thread, then have the
+    /// caller join the serving until the queue is dry.
+    fn run(&self, producer: impl FnOnce(&JobQueue, &mut Vec<(usize, String)>)) -> ServeOutcome {
+        let t0 = Instant::now();
+        let cache_before = crossover_cache_counters();
+        let grant = exec::acquire_job_workers(self.opts.jobs.max(1));
+        // the caller serves too, so only granted-1 helpers are spawned
+        // (a grant of 0 or 1 means pure inline serving)
+        let helpers = grant.granted().saturating_sub(1);
+
+        let queue = JobQueue::new();
+        let sink: Mutex<Vec<(JobRecord, RunReport)>> = Mutex::new(Vec::new());
+        let mut errors = Vec::new();
+        std::thread::scope(|s| {
+            for _ in 0..helpers {
+                s.spawn(|| self.worker(&queue, &sink));
+            }
+            producer(&queue, &mut errors);
+            queue.close();
+            self.worker(&queue, &sink);
+        });
+        drop(grant);
+
+        let mut done = sink.into_inner().unwrap();
+        done.sort_by_key(|(rec, _)| rec.id);
+        let (records, reports): (Vec<_>, Vec<_>) = done.into_iter().unzip();
+
+        let cache_after = crossover_cache_counters();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let stats = Stats::from_records(
+            &records,
+            wall_s,
+            (cache_after.0 - cache_before.0, cache_after.1 - cache_before.1),
+        );
+        ServeOutcome { reports, records, errors, stats }
+    }
+
+    /// One worker's serving loop. Each worker owns one lazily-built
+    /// [`Runner`] reused across every job it serves, so same-`p` job
+    /// sequences keep the simulated machine's allocations warm.
+    fn worker(&self, queue: &JobQueue, sink: &Mutex<Vec<(JobRecord, RunReport)>>) {
+        let mut runner: Option<Runner> = None;
+        while let Some(job) = queue.pop() {
+            let admitted = Instant::now();
+            let cfg = job.spec.config(&self.opts.base);
+            // cannot fail: names were checked at submission and the
+            // registry is append-only; an untargeted job's tuned table
+            // probe happens here, inside its service window, caching
+            // per machine config for every later job
+            let sorter = resolve_sorter(&job.spec, &cfg, self.opts.route_tuned)
+                .expect("spec validated at submission");
+            let input = crate::input::generate(&cfg, job.spec.dist);
+            if runner.is_none() {
+                runner = Some(
+                    Runner::new(cfg.clone())
+                        .validate(self.opts.validate)
+                        .keep_output(self.opts.keep_output),
+                );
+            }
+            let r = runner.as_mut().unwrap();
+            r.set_config(cfg.clone());
+            let (report, meta): (RunReport, RunMeta) = r.run_with_meta(sorter.as_ref(), input);
+            let done = Instant::now();
+            let record = JobRecord {
+                id: job.id,
+                algorithm: report.algorithm,
+                p: cfg.p,
+                n_total: cfg.n_total(),
+                sim_time: report.time,
+                crashed: report.crashed.is_some(),
+                queue_us: (admitted - job.submitted).as_secs_f64() * 1e6,
+                service_us: (done - admitted).as_secs_f64() * 1e6,
+                total_us: (done - job.submitted).as_secs_f64() * 1e6,
+                machine_reused: meta.machine_reused,
+            };
+            sink.lock().unwrap().push((record, report));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::input::Distribution;
+
+    fn tiny_opts(jobs: usize) -> ServeOptions {
+        ServeOptions {
+            jobs,
+            base: RunConfig::default().with_p(8).with_n_per_pe(16),
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn drain_preserves_submission_order_and_counts() {
+        let specs: Vec<JobSpec> = (0..6)
+            .map(|i| JobSpec {
+                seed: Some(100 + i as u64),
+                algo: Some("RQuick".into()),
+                ..JobSpec::default()
+            })
+            .collect();
+        let out = Service::new(tiny_opts(3)).drain(specs);
+        assert!(out.errors.is_empty());
+        assert_eq!(out.reports.len(), 6);
+        assert_eq!(out.records.len(), 6);
+        for (i, rec) in out.records.iter().enumerate() {
+            assert_eq!(rec.id, i, "records sorted by admission id");
+            assert_eq!(rec.algorithm, "RQuick");
+            assert!(rec.total_us >= rec.service_us);
+        }
+        assert_eq!(out.stats.jobs, 6);
+        assert_eq!(out.stats.per_sorter, vec![("RQuick", 6)]);
+        assert_eq!(out.stats.machine_reuse_hits + out.stats.machine_fresh_builds, 6);
+    }
+
+    #[test]
+    fn invalid_specs_bounce_without_stopping_the_stream() {
+        let lines = [
+            r#"{"seed": 1, "algo": "RQuick"}"#,
+            r#"{"algo": "NoSuchSorter"}"#,
+            "this is not json",
+            "",
+            r#"{"p": 12}"#,
+            r#"{"seed": 2, "algo": "Rfis"}"#,
+        ];
+        let out =
+            Service::new(tiny_opts(2)).drain_lines(lines.iter().map(|s| s.to_string()));
+        assert_eq!(out.reports.len(), 2, "two valid jobs served");
+        assert_eq!(out.errors.len(), 3);
+        let by_line: Vec<usize> = out.errors.iter().map(|(l, _)| *l).collect();
+        assert_eq!(by_line, vec![2, 3, 5], "1-based line numbers; blank line skipped");
+        assert!(out.errors[0].1.contains("unknown algorithm"));
+        assert!(out.errors[2].1.contains("power of two"));
+    }
+
+    /// Untargeted specs route through the Robust selector. Paper-table
+    /// routing only — the tuned path would bump the process-wide
+    /// crossover-cache counters this binary's tuning test asserts on;
+    /// tuned routing is covered by `tests/serve_equivalence.rs`.
+    #[test]
+    fn untargeted_jobs_route_through_the_selector() {
+        let spec =
+            JobSpec { dist: Distribution::Staggered, seed: Some(42), ..JobSpec::default() };
+        let mut opts = tiny_opts(1);
+        opts.route_tuned = false;
+        let out = Service::new(opts).drain(vec![spec]);
+        assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.reports[0].algorithm, "Robust");
+        assert!(out.reports[0].crashed.is_none());
+    }
+
+    #[test]
+    fn grant_of_zero_or_one_serves_inline() {
+        // request 1 job-worker: the caller thread serves everything
+        let spec = JobSpec { algo: Some("GatherM".into()), ..JobSpec::default() };
+        let out = Service::new(tiny_opts(1)).drain(vec![spec.clone(), spec]);
+        assert_eq!(out.reports.len(), 2);
+        assert_eq!(out.stats.machine_fresh_builds, 1, "one worker, one runner");
+        assert_eq!(out.stats.machine_reuse_hits, 1);
+    }
+}

@@ -1,0 +1,210 @@
+//! Service-side accounting: one [`JobRecord`] per drained job (host
+//! wall-clock queue/service/end-to-end latency plus what ran and where),
+//! folded into a [`Stats`] digest — throughput, p50/p95/p99 latency
+//! percentiles, per-sorter counts, machine-reuse and crossover-cache hit
+//! rates. This is the half of a serve run that legitimately depends on
+//! the host; the sorted outputs themselves stay bit-identical to
+//! standalone `Runner::run` (see `tests/serve_equivalence.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Percentiles;
+
+/// Timing and routing record for one completed job. Latencies are host
+/// wall-clock microseconds; `sim_time` is the simulated α-β cost.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    /// Admission index (0-based, submission order).
+    pub id: usize,
+    /// Registry name of the sorter that ran (for untargeted jobs: the
+    /// Robust selector).
+    pub algorithm: &'static str,
+    /// Effective machine width for this job.
+    pub p: usize,
+    /// Effective total input size.
+    pub n_total: usize,
+    /// Simulated time of the run (crashed runs report their cost up to
+    /// the crash point, matching `RunReport::time`).
+    pub sim_time: f64,
+    /// Whether the run crashed (the report carries the message).
+    pub crashed: bool,
+    /// Submission → admission by a worker (µs).
+    pub queue_us: f64,
+    /// Admission → completion: input generation + sort + validation (µs).
+    pub service_us: f64,
+    /// Submission → completion (µs); `queue_us + service_us` up to clock
+    /// granularity.
+    pub total_us: f64,
+    /// Whether the worker's `Runner` reused its simulated machine
+    /// (same `p` as the worker's previous job) instead of rebuilding.
+    pub machine_reused: bool,
+}
+
+/// Aggregate digest of one drained job stream.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub jobs: usize,
+    pub crashed: usize,
+    /// Wall time of the whole drain (submission of the first job through
+    /// completion of the last), seconds.
+    pub wall_s: f64,
+    pub throughput_jobs_per_s: f64,
+    pub queue: Percentiles,
+    pub service: Percentiles,
+    pub total: Percentiles,
+    /// Completed jobs per sorter name, sorted by name.
+    pub per_sorter: Vec<(&'static str, usize)>,
+    pub machine_reuse_hits: usize,
+    pub machine_fresh_builds: usize,
+    /// Crossover-cache traffic during the drain: `(hits, probes)` delta
+    /// of [`crate::experiments::tuning::crossover_cache_counters`].
+    pub crossover_cache_hits: u64,
+    pub crossover_probes: u64,
+}
+
+impl Stats {
+    pub fn from_records(records: &[JobRecord], wall_s: f64, cache_delta: (u64, u64)) -> Self {
+        let collect = |f: fn(&JobRecord) -> f64| -> Vec<f64> { records.iter().map(f).collect() };
+        let mut per_sorter: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for r in records {
+            *per_sorter.entry(r.algorithm).or_insert(0) += 1;
+        }
+        let hits = records.iter().filter(|r| r.machine_reused).count();
+        Self {
+            jobs: records.len(),
+            crashed: records.iter().filter(|r| r.crashed).count(),
+            wall_s,
+            throughput_jobs_per_s: if wall_s > 0.0 { records.len() as f64 / wall_s } else { 0.0 },
+            queue: Percentiles::of(&collect(|r| r.queue_us)),
+            service: Percentiles::of(&collect(|r| r.service_us)),
+            total: Percentiles::of(&collect(|r| r.total_us)),
+            per_sorter: per_sorter.into_iter().collect(),
+            machine_reuse_hits: hits,
+            machine_fresh_builds: records.len() - hits,
+            crossover_cache_hits: cache_delta.0,
+            crossover_probes: cache_delta.1,
+        }
+    }
+
+    /// Human-readable drain summary for the CLI.
+    pub fn print(&self) {
+        println!(
+            "drained {} job(s) in {:.3} s  ({:.1} jobs/s, {} crashed)",
+            self.jobs, self.wall_s, self.throughput_jobs_per_s, self.crashed
+        );
+        let row = |label: &str, p: &Percentiles| {
+            println!(
+                "  {label:<9} p50 {:>10.0} µs   p95 {:>10.0} µs   p99 {:>10.0} µs   max {:>10.0} µs",
+                p.p50, p.p95, p.p99, p.max
+            );
+        };
+        row("queue", &self.queue);
+        row("service", &self.service);
+        row("e2e", &self.total);
+        let sorters: Vec<String> =
+            self.per_sorter.iter().map(|(name, n)| format!("{name}×{n}")).collect();
+        println!("  sorters   {}", sorters.join("  "));
+        println!(
+            "  machines  {} reused / {} fresh;  crossover cache {} hit(s) / {} probe(s)",
+            self.machine_reuse_hits,
+            self.machine_fresh_builds,
+            self.crossover_cache_hits,
+            self.crossover_probes
+        );
+    }
+
+    /// The digest as a standalone JSON document (`BENCH_serve.json` /
+    /// `rmps serve --json-out`).
+    pub fn to_json(&self) -> String {
+        let sorters: Vec<String> = self
+            .per_sorter
+            .iter()
+            .map(|(name, n)| format!("\"{}\": {n}", name.replace('\\', "\\\\").replace('"', "\\\"")))
+            .collect();
+        format!(
+            "{{\n  \"jobs\": {},\n  \"crashed\": {},\n  \"wall_s\": {:.6},\n  \
+             \"throughput_jobs_per_s\": {:.3},\n  \"queue_us\": {},\n  \"service_us\": {},\n  \
+             \"e2e_us\": {},\n  \"per_sorter\": {{{}}},\n  \
+             \"machine_reuse\": {{\"hits\": {}, \"fresh\": {}}},\n  \
+             \"crossover_cache\": {{\"hits\": {}, \"probes\": {}}}\n}}\n",
+            self.jobs,
+            self.crashed,
+            self.wall_s,
+            self.throughput_jobs_per_s,
+            self.queue.to_json(),
+            self.service.to_json(),
+            self.total.to_json(),
+            sorters.join(", "),
+            self.machine_reuse_hits,
+            self.machine_fresh_builds,
+            self.crossover_cache_hits,
+            self.crossover_probes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, algorithm: &'static str, queue_us: f64, service_us: f64, reused: bool) -> JobRecord {
+        JobRecord {
+            id,
+            algorithm,
+            p: 16,
+            n_total: 256,
+            sim_time: 1.0,
+            crashed: false,
+            queue_us,
+            service_us,
+            total_us: queue_us + service_us,
+            machine_reused: reused,
+        }
+    }
+
+    #[test]
+    fn digest_counts_and_percentiles() {
+        let mut records: Vec<JobRecord> =
+            (0..10).map(|i| rec(i, "RQuick", (i + 1) as f64 * 10.0, 100.0, i > 0)).collect();
+        records[3].algorithm = "GatherMerge";
+        records[7].crashed = true;
+        let s = Stats::from_records(&records, 0.5, (4, 6));
+        assert_eq!(s.jobs, 10);
+        assert_eq!(s.crashed, 1);
+        assert!((s.throughput_jobs_per_s - 20.0).abs() < 1e-9);
+        // nearest-rank over 10,20,...,100
+        assert_eq!(s.queue.p50, 50.0);
+        assert_eq!(s.queue.p99, 100.0);
+        assert_eq!(s.service.p50, 100.0);
+        assert_eq!(s.per_sorter, vec![("GatherMerge", 1), ("RQuick", 9)]);
+        assert_eq!((s.machine_reuse_hits, s.machine_fresh_builds), (9, 1));
+        assert_eq!((s.crossover_cache_hits, s.crossover_probes), (4, 6));
+    }
+
+    #[test]
+    fn empty_stream_digest_is_well_formed() {
+        let s = Stats::from_records(&[], 0.0, (0, 0));
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.throughput_jobs_per_s, 0.0);
+        assert_eq!(s.queue, Percentiles::default());
+        assert!(s.to_json().contains("\"jobs\": 0"));
+    }
+
+    #[test]
+    fn json_digest_shape() {
+        let s = Stats::from_records(&[rec(0, "RQuick", 5.0, 10.0, false)], 0.25, (1, 2));
+        let j = s.to_json();
+        for key in [
+            "\"jobs\": 1",
+            "\"throughput_jobs_per_s\": 4.000",
+            "\"queue_us\"",
+            "\"service_us\"",
+            "\"e2e_us\"",
+            "\"per_sorter\": {\"RQuick\": 1}",
+            "\"machine_reuse\": {\"hits\": 0, \"fresh\": 1}",
+            "\"crossover_cache\": {\"hits\": 1, \"probes\": 2}",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! The serve determinism contract: a drained job stream produces
+//! **field-by-field bit-identical** [`RunReport`]s to running every job
+//! standalone through [`Runner::run`] with the same `(config, seed,
+//! sorter)` — at every job-concurrency level (1, an awkward 3, and the
+//! host width). Admission control, queueing, and worker interleaving
+//! decide only *when* a job runs, never *what it computes*; crash
+//! strings included (the robustness memory cap and the Minisort
+//! out-of-range refusal must report identically from inside the
+//! service).
+//!
+//! Plus the admission-control soak: while a host-width drain is in
+//! flight, the process-wide worker-token budget must never go negative —
+//! the job level is the third consumer of one shared pool, not a new
+//! pool.
+
+use rmps::algorithms::{Runner, RunReport};
+use rmps::config::RunConfig;
+use rmps::input::generate;
+use rmps::serve::{resolve_sorter, JobSpec, Service, ServeOptions};
+
+/// Field-by-field byte comparison (floats as raw bits). `wall_ms` is host
+/// wallclock and exempt by nature.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm");
+    assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: time");
+    assert_eq!(a.stats.messages, b.stats.messages, "{ctx}: messages");
+    assert_eq!(a.stats.words, b.stats.words, "{ctx}: words");
+    assert_eq!(
+        a.stats.local_work.to_bits(),
+        b.stats.local_work.to_bits(),
+        "{ctx}: local_work"
+    );
+    assert_eq!(a.stats.max_mem_elems, b.stats.max_mem_elems, "{ctx}: max_mem_elems");
+    assert_eq!(a.stats.max_degree, b.stats.max_degree, "{ctx}: max_degree");
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed");
+    assert_eq!(a.output_shape, b.output_shape, "{ctx}: output_shape");
+    assert_eq!(a.is_globally_sorted, b.is_globally_sorted, "{ctx}: is_globally_sorted");
+    let (va, vb) = (&a.validation, &b.validation);
+    assert_eq!(va.locally_sorted, vb.locally_sorted, "{ctx}: locally_sorted");
+    assert_eq!(va.globally_sorted, vb.globally_sorted, "{ctx}: globally_sorted");
+    assert_eq!(va.multiset_preserved, vb.multiset_preserved, "{ctx}: multiset");
+    assert_eq!(va.balanced, vb.balanced, "{ctx}: balanced");
+    assert_eq!(va.imbalance.max_load, vb.imbalance.max_load, "{ctx}: max_load");
+    assert_eq!(va.imbalance.min_load, vb.imbalance.min_load, "{ctx}: min_load");
+    assert_eq!(
+        va.imbalance.epsilon.to_bits(),
+        vb.imbalance.epsilon.to_bits(),
+        "{ctx}: imbalance ε"
+    );
+    assert_eq!(a.output, b.output, "{ctx}: output");
+}
+
+/// The job-concurrency levels under test: inline, a deliberately awkward
+/// odd count, and everything the host has.
+fn job_levels() -> Vec<usize> {
+    let host = rmps::exec::available_jobs();
+    let mut v = vec![1usize, 3];
+    if !v.contains(&host) {
+        v.push(host);
+    }
+    v
+}
+
+/// A mixed stream exercising every routing and size regime: dense sizes
+/// {1, 4, 64, 512}, a sparse job, forced sorters including two
+/// memory-capped crashers (HykSort/SSort on hard instances, the
+/// `pe_jobs_equivalence.rs` crash recipe) and the Minisort out-of-range
+/// refusal, untargeted jobs (tuned Robust routing), and a per-job `p`
+/// override.
+const STREAM: &str = r#"
+{"n_per_pe": 1, "seed": 11, "algo": "RQuick"}
+{"n_per_pe": 4, "seed": 12, "algo": "RFIS", "dist": "Staggered"}
+{"n_per_pe": 64, "seed": 13, "algo": "RAMS", "dist": "Zero"}
+{"n_per_pe": 512, "seed": 14, "algo": "HykSort", "dist": "Zero", "mem_cap": 4.0}
+{"n_per_pe": 512, "seed": 15, "algo": "SSort", "dist": "DeterDupl", "mem_cap": 4.0}
+{"sparsity": 8, "seed": 16, "algo": "GatherM", "mem_cap": null}
+{"n_per_pe": 4, "seed": 17, "algo": "Minisort"}
+{"n_per_pe": 64, "seed": 18}
+{"sparsity": 4, "seed": 19}
+{"n_per_pe": 512, "seed": 20, "dist": "Mirrored"}
+{"n_per_pe": 64, "seed": 21, "algo": "Bitonic", "p": 32}
+{"n_per_pe": 32, "seed": 22, "algo": "AMS-2"}
+"#;
+
+fn stream_specs() -> Vec<JobSpec> {
+    STREAM
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| JobSpec::parse(l).expect("stream is valid"))
+        .collect()
+}
+
+fn base_config() -> RunConfig {
+    RunConfig::default().with_p(16).with_n_per_pe(16)
+}
+
+/// What `rmps serve` must reproduce: each spec run standalone through a
+/// fresh `Runner` (service defaults: validation and output retention on).
+fn standalone_references(base: &RunConfig, specs: &[JobSpec]) -> Vec<RunReport> {
+    specs
+        .iter()
+        .map(|spec| {
+            let cfg = spec.config(base);
+            let sorter = resolve_sorter(spec, &cfg, true).expect("stream sorters exist");
+            Runner::new(cfg.clone()).run(sorter.as_ref(), generate(&cfg, spec.dist))
+        })
+        .collect()
+}
+
+#[test]
+fn serve_is_bit_identical_to_standalone_runs_at_every_job_level() {
+    let base = base_config();
+    let specs = stream_specs();
+    let references = standalone_references(&base, &specs);
+    // the stream must genuinely exercise the crash paths
+    let crashers = references.iter().filter(|r| r.crashed.is_some()).count();
+    assert!(crashers >= 1, "stream contains no crashing jobs — recipe went stale");
+
+    for jobs in job_levels() {
+        let opts = ServeOptions { jobs, base: base.clone(), ..ServeOptions::default() };
+        let out = Service::new(opts).drain(specs.clone());
+        assert!(out.errors.is_empty(), "jobs={jobs}: {:?}", out.errors);
+        assert_eq!(out.reports.len(), references.len(), "jobs={jobs}");
+        for (i, (reference, got)) in references.iter().zip(&out.reports).enumerate() {
+            assert_reports_identical(reference, got, &format!("job {i}/jobs={jobs}"));
+        }
+        // records line up with reports, in admission order
+        for (i, rec) in out.records.iter().enumerate() {
+            assert_eq!(rec.id, i, "jobs={jobs}");
+            assert_eq!(rec.algorithm, out.reports[i].algorithm, "jobs={jobs}");
+            assert_eq!(
+                rec.crashed,
+                out.reports[i].crashed.is_some(),
+                "jobs={jobs}: record/report crash flag"
+            );
+            assert_eq!(
+                rec.sim_time.to_bits(),
+                out.reports[i].time.to_bits(),
+                "jobs={jobs}: record sim_time"
+            );
+        }
+        assert_eq!(out.stats.crashed, crashers, "jobs={jobs}");
+    }
+}
+
+#[test]
+fn serve_stats_digest_is_coherent() {
+    let base = base_config();
+    let out = Service::new(ServeOptions {
+        jobs: rmps::exec::available_jobs(),
+        base,
+        ..ServeOptions::default()
+    })
+    .drain(stream_specs());
+
+    let s = &out.stats;
+    assert_eq!(s.jobs, out.reports.len());
+    assert!(s.wall_s > 0.0 && s.throughput_jobs_per_s > 0.0);
+    for (label, p) in [("queue", &s.queue), ("service", &s.service), ("e2e", &s.total)] {
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.max, "{label}: {p:?}");
+        assert!(p.p50 >= 0.0, "{label}: negative latency");
+    }
+    // e2e of any single job dominates both of its components
+    for rec in &out.records {
+        assert!(rec.total_us + 1.0 >= rec.queue_us && rec.total_us + 1.0 >= rec.service_us);
+    }
+    let per_sorter_total: usize = s.per_sorter.iter().map(|(_, n)| n).sum();
+    assert_eq!(per_sorter_total, s.jobs, "per-sorter counts partition the stream");
+    assert!(s.per_sorter.iter().any(|(name, _)| *name == "Robust"), "untargeted jobs routed");
+    assert_eq!(
+        s.machine_reuse_hits + s.machine_fresh_builds,
+        s.jobs,
+        "every job is either a reuse hit or a fresh build"
+    );
+    // JSON digest carries the SLO keys BENCH_serve.json promises
+    let json = s.to_json();
+    for key in ["throughput_jobs_per_s", "queue_us", "service_us", "e2e_us", "p99"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
+
+/// Admission-control soak: hammer host-width drains while a monitor
+/// thread polls the process-wide worker-token budget. The job grant, the
+/// PE-task level, and the pool must share one budget — a negative
+/// remainder means oversubscription and fails the test.
+#[test]
+fn soak_worker_token_budget_is_never_exceeded() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let stop = AtomicBool::new(false);
+    let violated = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                if rmps::exec::budget_remaining() < 0 {
+                    violated.store(true, Ordering::Relaxed);
+                }
+                std::thread::yield_now();
+            }
+        });
+
+        let base = base_config();
+        let specs = stream_specs();
+        for round in 0..3u64 {
+            let mut specs = specs.clone();
+            for spec in &mut specs {
+                // shift seeds so rounds are distinct work, same shape
+                spec.seed = spec.seed.map(|s| s + 1000 * round);
+            }
+            let out = Service::new(ServeOptions {
+                jobs: rmps::exec::available_jobs(),
+                base: base.clone(),
+                keep_output: false,
+                ..ServeOptions::default()
+            })
+            .drain(specs);
+            assert_eq!(out.reports.len(), stream_specs().len(), "round {round}");
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(!violated.load(Ordering::Relaxed), "worker-token budget went negative");
+}
