@@ -1,0 +1,170 @@
+//! Bench: the giant-p sweep — Fig. 1's sparse end at the paper's machine
+//! sizes, up to 2^18 = 262 144 simulated PEs (the JUQUEEN scale).
+//!
+//! For every ladder size it runs GatherM/RFIS/Robust over the sparse
+//! points plus n/p = 1 on Uniform inputs, and records per machine size:
+//! host wallclock, settled supersteps, host µs/superstep, and the heap
+//! allocation count of the whole block (counting global allocator, same
+//! idiom as the hotpath bench). Supersteps cost O(active PEs + messages)
+//! host work — not O(p) — so the µs/superstep series must grow sublinearly
+//! in p; the recorded `sublinear` field tracks exactly that, and the whole
+//! sweep lands in `BENCH_giantp.json` (CI uploads it as an artifact).
+//!
+//! Knobs: RMPS_BENCH_REPS (default 1), RMPS_BENCH_JOBS (default: all
+//! cores), RMPS_BENCH_SERIAL=0 skips the jobs=1 identity baseline.
+//! RMPS_BENCH_TINY=1 trims the point set to {3^-5, 2^0} — the p ladder is
+//! deliberately NOT reduced: reaching 2^18 inside the CI smoke budget is
+//! the point of this bench.
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use rmps::config::RunConfig;
+use rmps::experiments::fig1;
+use rmps::experiments::NpPoint;
+
+/// System allocator wrapped with a call counter (alloc/realloc/zeroed;
+/// frees are not counted — the metric is allocation churn).
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Relaxed)
+}
+
+/// Per-machine-size measurements of one ladder entry.
+struct PBlock {
+    p: usize,
+    wall_s: f64,
+    host_rounds: u64,
+    us_per_round: f64,
+    allocs: u64,
+    crashes: usize,
+}
+
+fn main() {
+    let reps = common::env_usize("RMPS_BENCH_REPS", 1);
+    let jobs = common::env_jobs();
+    let tiny = common::env_usize("RMPS_BENCH_TINY", 0) != 0;
+    let serial_too = common::env_usize("RMPS_BENCH_SERIAL", 1) != 0;
+
+    let ladder = fig1::GIANT_P_LADDER;
+    let points: Vec<NpPoint> = if tiny {
+        vec![NpPoint::Sparse(243), NpPoint::Dense(1)]
+    } else {
+        fig1::giant_p_points()
+    };
+    let base = RunConfig::default();
+
+    // one run_giant_p call per ladder entry, so the wallclock / superstep
+    // / allocation window brackets exactly one machine size (the jobs>1
+    // pool allocates too — the count is a churn diagnostic, not a proof)
+    let mut blocks: Vec<PBlock> = Vec::new();
+    let mut cells = Vec::new();
+    for &p in &ladder {
+        let before = alloc_count();
+        let t = std::time::Instant::now();
+        let fig = fig1::run_giant_p(&base, &[p], &points, fig1::giant_p_sorters(), reps, jobs);
+        let wall_s = t.elapsed().as_secs_f64();
+        let allocs = alloc_count() - before;
+        fig.print();
+        let host_rounds: u64 = fig.cells.iter().map(|c| c.host_rounds).sum();
+        let us_per_round = fig.host_us_per_round(p);
+        let crashes = fig.cells.iter().filter(|c| c.crashed).count();
+        for c in &fig.cells {
+            assert!(c.crashed || c.ok, "{} {:?} invalid at p={p}", c.algorithm, c.point);
+        }
+        println!(
+            "[giantp] p=2^{:<2} {wall_s:>7.2}s host  {host_rounds:>9} supersteps  \
+             {us_per_round:>8.2} µs/superstep  {allocs:>9} allocs  {crashes} crash(es)",
+            (p as f64).log2().round() as u32
+        );
+        blocks.push(PBlock { p, wall_s, host_rounds, us_per_round, allocs, crashes });
+        cells.extend(fig.cells);
+    }
+
+    // the acceptance series: host µs/superstep from 2^14 to 2^18 must grow
+    // sublinearly in p (recorded, not asserted — CI hosts are noisy)
+    let first = &blocks[0];
+    let last = &blocks[blocks.len() - 1];
+    let us_ratio = last.us_per_round / first.us_per_round.max(1e-9);
+    let p_ratio = last.p as f64 / first.p as f64;
+    let sublinear = us_ratio < p_ratio;
+    println!(
+        "[giantp] µs/superstep 2^{}→2^{}: ×{us_ratio:.2} over a ×{p_ratio:.0} machine \
+         (sublinear={sublinear})",
+        (first.p as f64).log2().round() as u32,
+        (last.p as f64).log2().round() as u32
+    );
+
+    let mut fields = vec![
+        ("bench", common::json_str("giantp")),
+        ("reps", reps.to_string()),
+        ("jobs", jobs.to_string()),
+        ("tiny", tiny.to_string()),
+        ("points", points.len().to_string()),
+        ("us_per_round_ratio", format!("{us_ratio:.3}")),
+        ("p_ratio", format!("{p_ratio:.1}")),
+        ("sublinear", sublinear.to_string()),
+    ];
+    let ladder_json: Vec<String> = blocks
+        .iter()
+        .map(|b| {
+            format!(
+                "{{\"p\": {}, \"wall_s\": {:.3}, \"host_rounds\": {}, \
+                 \"host_us_per_superstep\": {:.3}, \"allocs\": {}, \"crashes\": {}}}",
+                b.p, b.wall_s, b.host_rounds, b.us_per_round, b.allocs, b.crashes
+            )
+        })
+        .collect();
+    fields.push(("ladder", format!("[{}]", ladder_json.join(", "))));
+
+    if serial_too && jobs > 1 {
+        // the determinism contract the other benches enforce: the whole
+        // ladder re-run on one worker is bit-identical
+        let t = std::time::Instant::now();
+        let mut serial_cells = Vec::new();
+        for &p in &ladder {
+            let fig =
+                fig1::run_giant_p(&base, &[p], &points, fig1::giant_p_sorters(), reps, 1);
+            serial_cells.extend(fig.cells);
+        }
+        let serial_wall = t.elapsed().as_secs_f64();
+        let identical = serial_cells
+            .iter()
+            .zip(&cells)
+            .all(|(a, b)| a.time.to_bits() == b.time.to_bits() && a.crashed == b.crashed);
+        assert!(identical, "giant-p sweep must be bit-identical across job counts");
+        println!("[giantp] jobs=1 baseline: {serial_wall:.1}s  (identical={identical})");
+        fields.push(("serial_wall_s", format!("{serial_wall:.3}")));
+        fields.push(("identical_across_jobs", identical.to_string()));
+    }
+    common::write_bench_json("giantp", &fields);
+}

@@ -145,12 +145,11 @@ pub fn sort(
             ctx.note_mem(total, "RFIS gather footprint");
             (rk, annotated.into_iter().map(|(e, _)| e).collect::<Vec<Elem>>())
         });
-    let mut ranks: Vec<Vec<u64>> = vec![Vec::new(); p];
-    let mut row_merged: Vec<Vec<Elem>> = vec![Vec::new(); p];
-    for (pe, (rk, merged)) in results.into_iter().enumerate() {
-        ranks[pe] = rk;
-        row_merged[pe] = merged;
-    }
+    // results are already in PE order (one task per PE, task i == PE i):
+    // unzip moves them straight into the two tables, instead of building
+    // zeroed vec![Vec::new(); p] tables and copying over them
+    let (mut ranks, row_merged): (Vec<Vec<u64>>, Vec<Vec<Elem>>) =
+        results.into_iter().unzip();
 
     // --- all-reduce partial ranks along each row ----------------------
     for r in 0..rows {

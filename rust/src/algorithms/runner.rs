@@ -58,6 +58,11 @@ pub struct RunMeta {
     /// pools all survive `reset`) or had to build it fresh (first run on
     /// this runner, or a `p` switch re-dimensioned the machine).
     pub machine_reused: bool,
+    /// Host-side superstep settlements of this run
+    /// ([`Machine::host_rounds`]): the denominator for the giant-p bench's
+    /// host-µs-per-superstep metric. Diagnostic only — never part of the
+    /// bit-compared [`RunReport`].
+    pub host_rounds: u64,
 }
 
 impl Runner {
@@ -168,7 +173,11 @@ impl Runner {
             self.validate,
             self.keep_output,
         );
-        let meta = RunMeta { wall_ms: report.wall_ms, machine_reused };
+        let meta = RunMeta {
+            wall_ms: report.wall_ms,
+            machine_reused,
+            host_rounds: self.mach.host_rounds(),
+        };
         (report, meta)
     }
 
@@ -316,6 +325,7 @@ mod tests {
         assert!(!meta.machine_reused, "first run builds fresh");
         assert!(meta.wall_ms >= 0.0);
         assert_eq!(meta.wall_ms.to_bits(), a.wall_ms.to_bits());
+        assert!(meta.host_rounds > 0, "a sort settles at least one superstep");
         let (_, meta) = runner.run_with_meta(Algorithm::RQuick.sorter().as_ref(), input.clone());
         assert!(meta.machine_reused, "same p reuses the machine");
         let wide = cfg.clone().with_p(16);

@@ -88,6 +88,148 @@ pub fn run_with(
     Fig1 { points, algorithms, distributions, cells }
 }
 
+/// The paper's headline machine sizes for the giant-p sweep: the JUQUEEN
+/// runs top out at 2^18 = 262 144 cores (§I), which the simulator reaches
+/// because supersteps cost O(active PEs + messages) host work, not O(p)
+/// (see the touched-slot contract on [`crate::sim::Machine`]).
+pub const GIANT_P_LADDER: [usize; 3] = [1 << 14, 1 << 16, 1 << 18];
+
+/// The sorters the giant-p sweep compares: the gather-style winners of
+/// the sparse regime (GatherM, RFIS — Fig. 1's left edge) plus the robust
+/// selector that must match them there.
+pub fn giant_p_sorters() -> Vec<Arc<dyn Sorter>> {
+    [Algorithm::GatherM, Algorithm::Rfis, Algorithm::Robust]
+        .iter()
+        .map(|a| a.sorter())
+        .collect()
+}
+
+/// The giant-p n/p axis: the sparse ladder 3^-5..3^-1 plus the
+/// one-element-per-PE point. No dense tail — at 2^18 PEs even n/p = 1 is
+/// already 262 144 elements, and the sparse end is where giant machines
+/// differ from small ones.
+pub fn giant_p_points() -> Vec<NpPoint> {
+    let mut pts: Vec<NpPoint> =
+        (1..=5u32).rev().map(|k| NpPoint::Sparse(3usize.pow(k))).collect();
+    pts.push(NpPoint::Dense(1));
+    pts
+}
+
+/// The giant-p sweep result: `cells` is a dense p-major/point/algorithm
+/// grid over the Uniform instance (one distribution keeps the 2^18 column
+/// affordable; sparse occupancy, not value skew, is what giant-p probes).
+pub struct GiantP {
+    pub ladder: Vec<usize>,
+    pub points: Vec<NpPoint>,
+    pub algorithms: Vec<Arc<dyn Sorter>>,
+    pub cells: Vec<CellResult>,
+}
+
+/// Run the giant-p sweep: every machine size in `ladder` × every point in
+/// `points` × [`giant_p_sorters`]-style `algorithms`, Uniform inputs,
+/// `reps` seeds per cell on `jobs` workers (byte-identical for every job
+/// count, like [`run_with`]).
+pub fn run_giant_p(
+    base: &RunConfig,
+    ladder: &[usize],
+    points: &[NpPoint],
+    algorithms: Vec<Arc<dyn Sorter>>,
+    reps: usize,
+    jobs: usize,
+) -> GiantP {
+    let mut names: Vec<String> = algorithms
+        .iter()
+        .map(|s| crate::algorithms::normalize(s.name()))
+        .collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(
+        names.len(),
+        algorithms.len(),
+        "giant-p sweep requires unique sorter names (cells are name-keyed)"
+    );
+    let mut cells = Vec::with_capacity(ladder.len() * points.len() * algorithms.len());
+    for &p in ladder {
+        let mut specs = Vec::with_capacity(points.len() * algorithms.len());
+        for &point in points {
+            for alg in &algorithms {
+                specs.push((alg.clone(), Distribution::Uniform, point));
+            }
+        }
+        cells.extend(run_cells(jobs, &base.clone().with_p(p), &specs, reps));
+    }
+    GiantP {
+        ladder: ladder.to_vec(),
+        points: points.to_vec(),
+        algorithms,
+        cells,
+    }
+}
+
+impl GiantP {
+    fn index_of(&self, p: usize, point: NpPoint, algorithm: &str) -> usize {
+        let pi = self.ladder.iter().position(|&x| x == p).expect("p in ladder");
+        let pt = self.points.iter().position(|&x| x == point).expect("point in sweep");
+        let a = self
+            .algorithms
+            .iter()
+            .position(|s| s.name() == algorithm)
+            .expect("algorithm in sweep");
+        (pi * self.points.len() + pt) * self.algorithms.len() + a
+    }
+
+    pub fn cell(&self, p: usize, point: NpPoint, algorithm: &str) -> &CellResult {
+        let c = &self.cells[self.index_of(p, point, algorithm)];
+        debug_assert!(
+            c.point == point && c.algorithm == algorithm,
+            "cell grid out of order"
+        );
+        c
+    }
+
+    /// All cells of one machine size, in point/algorithm order.
+    pub fn cells_at(&self, p: usize) -> &[CellResult] {
+        let pi = self.ladder.iter().position(|&x| x == p).expect("p in ladder");
+        let stride = self.points.len() * self.algorithms.len();
+        &self.cells[pi * stride..(pi + 1) * stride]
+    }
+
+    /// Σ host wallclock / Σ settled supersteps over every cell of one
+    /// machine size — the series the giant-p bench records; sublinear
+    /// growth in `p` is the O(active + messages) acceptance criterion.
+    pub fn host_us_per_round(&self, p: usize) -> f64 {
+        let cells = self.cells_at(p);
+        let wall_ms: f64 = cells.iter().map(|c| c.host_wall_ms).sum();
+        let rounds: u64 = cells.iter().map(|c| c.host_rounds).sum();
+        wall_ms * 1e3 / rounds as f64
+    }
+
+    /// Print the sweep as one table per machine size.
+    pub fn print(&self) {
+        for &p in &self.ladder {
+            println!("\n== Fig.1 giant-p [Uniform, p=2^{}] — simulated time per n/p ==",
+                (p as f64).log2().round() as u32);
+            print!("{:>8}", "n/p");
+            for a in &self.algorithms {
+                print!("{:>12}", a.name());
+            }
+            println!();
+            for &pt in &self.points {
+                print!("{:>8}", pt.label());
+                for a in &self.algorithms {
+                    print!("{:>12}", self.cell(p, pt, a.name()).display_time());
+                }
+                println!();
+            }
+            let rounds: u64 = self.cells_at(p).iter().map(|c| c.host_rounds).sum();
+            println!(
+                "   host: {rounds} supersteps settled, {:.2} µs/superstep",
+                self.host_us_per_round(p)
+            );
+        }
+    }
+}
+
 impl Fig1 {
     /// Dense grid index of `(dist, point, algorithm-name)`; panics (like
     /// the old linear scan) if the coordinate is not part of the sweep.
@@ -199,6 +341,31 @@ mod tests {
         for (a, b) in serial.cells.iter().zip(&parallel.cells) {
             assert_eq!(a.algorithm, b.algorithm);
             assert_eq!(a.time.to_bits(), b.time.to_bits(), "{} {:?} {:?}", a.algorithm, a.distribution, a.point);
+            assert_eq!((a.crashed, a.ok), (b.crashed, b.ok), "{}", a.algorithm);
+        }
+    }
+
+    /// The giant-p grid on a small ladder: every cell correct-or-crashed
+    /// with supersteps counted, the O(1) lookup addresses the right cell,
+    /// and the grid is byte-identical across worker counts.
+    #[test]
+    fn giant_p_sweep_holds_on_small_ladder() {
+        let base = RunConfig::default();
+        let ladder = [1 << 4, 1 << 6];
+        let points = giant_p_points();
+        let fig = run_giant_p(&base, &ladder, &points, giant_p_sorters(), 1, 3);
+        assert_eq!(fig.cells.len(), ladder.len() * points.len() * 3);
+        for c in &fig.cells {
+            assert!(c.crashed || c.ok, "{} {:?}", c.algorithm, c.point);
+            assert!(c.host_rounds > 0, "{} {:?} settled no superstep", c.algorithm, c.point);
+            assert!(c.host_wall_ms >= 0.0);
+        }
+        let c = fig.cell(1 << 6, NpPoint::Dense(1), "RFIS");
+        assert!(c.algorithm == "RFIS" && c.point == NpPoint::Dense(1));
+        let serial = run_giant_p(&base, &ladder, &points, giant_p_sorters(), 1, 1);
+        for (a, b) in serial.cells.iter().zip(&fig.cells) {
+            assert_eq!(a.algorithm, b.algorithm);
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{} {:?}", a.algorithm, a.point);
             assert_eq!((a.crashed, a.ok), (b.crashed, b.ok), "{}", a.algorithm);
         }
     }

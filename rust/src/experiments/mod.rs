@@ -133,6 +133,8 @@ pub fn run_sorter_cell(
             report: None,
             machine_reuse_hits: 0,
             machine_fresh_builds: 0,
+            host_rounds: 0,
+            host_wall_ms: 0.0,
         };
     }
 
@@ -143,6 +145,8 @@ pub fn run_sorter_cell(
     let reps = reps.max(1);
     let mut times = Vec::with_capacity(reps);
     let mut last: Option<RunReport> = None;
+    let mut host_rounds = 0u64;
+    let mut host_wall_ms = 0.0f64;
     for rep in 0..reps {
         let mut cfg = point.apply(base).with_seed(base.seed.wrapping_add(rep as u64 * 7919));
         if gather_style {
@@ -150,7 +154,9 @@ pub fn run_sorter_cell(
         }
         let input = generate(&cfg, dist);
         runner.set_config(cfg);
-        let (report, _meta) = runner.run_with_meta(sorter, input);
+        let (report, meta) = runner.run_with_meta(sorter, input);
+        host_rounds += meta.host_rounds;
+        host_wall_ms += meta.wall_ms;
         if report.crashed.is_some() {
             let (hits, fresh) = runner.reuse_counters();
             return CellResult {
@@ -163,6 +169,8 @@ pub fn run_sorter_cell(
                 report: Some(report),
                 machine_reuse_hits: hits,
                 machine_fresh_builds: fresh,
+                host_rounds,
+                host_wall_ms,
             };
         }
         times.push(report.time);
@@ -180,6 +188,8 @@ pub fn run_sorter_cell(
         report: Some(report),
         machine_reuse_hits: hits,
         machine_fresh_builds: fresh,
+        host_rounds,
+        host_wall_ms,
     }
 }
 
@@ -199,9 +209,23 @@ pub struct CellResult {
     /// [`Runner::reuse_counters`], for free via [`Runner::run_with_meta`].
     pub machine_reuse_hits: u64,
     pub machine_fresh_builds: u64,
+    /// Host-side superstep settlements summed over the cell's repetitions
+    /// (Σ [`crate::algorithms::runner::RunMeta::host_rounds`]).
+    pub host_rounds: u64,
+    /// Host wallclock of the simulation windows summed over the cell's
+    /// repetitions, ms. With `host_rounds` this yields the giant-p sweep's
+    /// host-µs-per-superstep metric ([`CellResult::host_us_per_round`]).
+    pub host_wall_ms: f64,
 }
 
 impl CellResult {
+    /// Host µs per settled superstep, averaged over the cell's
+    /// repetitions — the giant-p scaling metric (non-finite if the cell
+    /// never settled a superstep, e.g. the replicated-OOM guard fired).
+    pub fn host_us_per_round(&self) -> f64 {
+        self.host_wall_ms * 1e3 / self.host_rounds as f64
+    }
+
     pub fn display_time(&self) -> String {
         if self.crashed {
             "CRASH".to_string()

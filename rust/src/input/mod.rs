@@ -104,26 +104,102 @@ impl Distribution {
     }
 }
 
-/// Generate the full input: one vector of elements per PE.
-pub fn generate(cfg: &RunConfig, dist: Distribution) -> Vec<Vec<Elem>> {
-    let p = cfg.p;
-    if cfg.sparsity > 1 {
-        return generate_sparse(cfg, dist);
-    }
-    let m = cfg.n_per_pe;
-    (0..p).map(|pe| generate_pe(cfg, dist, pe, m)).collect()
+/// A generated instance in **occupied-run form**: only PEs that actually
+/// hold elements carry an entry, so a sparse instance on a giant machine
+/// (p = 2^18, one element per 243rd PE) costs O(occupied) to generate and
+/// hold — not p vector headers.
+///
+/// [`generate`] is a thin wrapper ([`CompactInput::into_dense`]) around
+/// this type, so dense and compact generation are bit-identical by
+/// construction; giant-p call sites generate compactly, keep the compact
+/// form across repetitions, and expand only when a sorter needs the dense
+/// per-PE table.
+#[derive(Clone, Debug)]
+pub struct CompactInput {
+    p: usize,
+    /// `(pe, elements)` for every occupied PE, `pe` strictly increasing.
+    runs: Vec<(usize, Vec<Elem>)>,
 }
 
-fn generate_sparse(cfg: &RunConfig, dist: Distribution) -> Vec<Vec<Elem>> {
-    (0..cfg.p)
-        .map(|pe| {
-            if pe % cfg.sparsity == 0 {
-                generate_pe(cfg, dist, pe, 1)
-            } else {
-                Vec::new()
-            }
-        })
-        .collect()
+impl CompactInput {
+    /// Machine size this instance was generated for.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Occupied PEs (entries in [`CompactInput::runs`]).
+    #[inline]
+    pub fn occupied(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Total elements across all occupied PEs.
+    pub fn n_total(&self) -> usize {
+        self.runs.iter().map(|(_, v)| v.len()).sum()
+    }
+
+    /// The occupied runs, ordered by PE.
+    #[inline]
+    pub fn runs(&self) -> &[(usize, Vec<Elem>)] {
+        &self.runs
+    }
+
+    /// Expand to the dense one-vector-per-PE table the sorters consume,
+    /// cloning the runs (the compact form stays usable — repetition loops
+    /// expand per rep). Bit-identical to [`generate`].
+    pub fn expand(&self) -> Vec<Vec<Elem>> {
+        let mut data = vec![Vec::new(); self.p];
+        for (pe, run) in &self.runs {
+            data[*pe] = run.clone();
+        }
+        data
+    }
+
+    /// Expand into an existing dense table, reusing its headers and run
+    /// capacities: every slot is cleared, occupied slots are refilled.
+    /// `data` must already have length ≥ p (e.g. the table of the previous
+    /// repetition); grows it if shorter.
+    pub fn expand_into(&self, data: &mut Vec<Vec<Elem>>) {
+        if data.len() < self.p {
+            data.resize_with(self.p, Vec::new);
+        }
+        for run in data.iter_mut() {
+            run.clear();
+        }
+        for (pe, run) in &self.runs {
+            data[*pe].extend_from_slice(run);
+        }
+    }
+
+    /// Consume into the dense table without cloning the element runs.
+    pub fn into_dense(self) -> Vec<Vec<Elem>> {
+        let mut data = vec![Vec::new(); self.p];
+        for (pe, run) in self.runs {
+            data[pe] = run;
+        }
+        data
+    }
+}
+
+/// Generate the full input: one vector of elements per PE.
+pub fn generate(cfg: &RunConfig, dist: Distribution) -> Vec<Vec<Elem>> {
+    generate_compact(cfg, dist).into_dense()
+}
+
+/// Generate in occupied-run form ([`CompactInput`]): O(occupied PEs) work
+/// and memory, the giant-p entry point. Dense [`generate`] delegates here.
+pub fn generate_compact(cfg: &RunConfig, dist: Distribution) -> CompactInput {
+    let p = cfg.p;
+    let runs = if cfg.sparsity > 1 {
+        (0..p)
+            .step_by(cfg.sparsity)
+            .map(|pe| (pe, generate_pe(cfg, dist, pe, 1)))
+            .collect()
+    } else {
+        (0..p).map(|pe| (pe, generate_pe(cfg, dist, pe, cfg.n_per_pe))).collect()
+    };
+    CompactInput { p, runs }
 }
 
 /// Keys for one PE (m elements), per the instance definitions.
@@ -324,6 +400,30 @@ mod tests {
             let bucket = bit_reverse(pe, 3) as u64;
             assert!(v.iter().all(|e| e.key / w == bucket), "pe {pe}");
         }
+    }
+
+    #[test]
+    fn compact_matches_dense_and_counts_occupied() {
+        let c = RunConfig::default().with_p(27).with_sparsity(9);
+        let compact = generate_compact(&c, Distribution::Uniform);
+        assert_eq!(compact.p(), 27);
+        assert_eq!(compact.occupied(), 3);
+        assert_eq!(compact.n_total(), 3);
+        let dense = generate(&c, Distribution::Uniform);
+        assert_eq!(compact.expand(), dense);
+        // expand_into reuses a dirty table of any prior shape
+        let mut reused = vec![vec![Elem::new(9, 0, 0)]; 27];
+        compact.expand_into(&mut reused);
+        assert_eq!(reused, dense);
+        let mut short: Vec<Vec<Elem>> = Vec::new();
+        compact.expand_into(&mut short);
+        assert_eq!(short, dense);
+        assert_eq!(compact.into_dense(), dense);
+        // dense configs round-trip too (every PE occupied)
+        let c = cfg(8, 4);
+        let compact = generate_compact(&c, Distribution::Staggered);
+        assert_eq!(compact.occupied(), 8);
+        assert_eq!(compact.into_dense(), generate(&c, Distribution::Staggered));
     }
 
     #[test]

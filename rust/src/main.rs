@@ -56,6 +56,12 @@ COMMANDS
              --max-log L     (default 10)    --reps R (default 1)
              --ams           add the multi-level AMS-1/2/3 columns
                              (1-factor exchange, successor paper)
+             --giant-p       sweep the paper's machine-size ladder instead
+                             (p = 2^14, 2^16, 2^18 — the JUQUEEN scale;
+                             sparse points + n/p = 1, GatherM/RFIS/Robust
+                             on Uniform; --p is ignored, the ladder sets
+                             it). Affordable because supersteps cost
+                             O(active PEs + messages) host work, not O(p)
   fig2a    RQuick / NTB-Quick ratios        --max-log L
   fig2b    fig2a on a smaller default machine
   fig2c    RAMS / NDMA-AMS ratios           --max-log L
@@ -279,12 +285,21 @@ fn main() -> Result<()> {
         "fig1" => {
             let cfg = machine_config(&a)?;
             let (max_log, reps) = (a.get("max-log", 10u32)?, a.get("reps", 1)?);
-            let fig = if a.flag("ams") {
-                experiments::fig1::run_ams(&cfg, max_log, reps, jobs)
+            if a.flag("giant-p") {
+                experiments::fig1::run_giant_p(
+                    &cfg,
+                    &experiments::fig1::GIANT_P_LADDER,
+                    &experiments::fig1::giant_p_points(),
+                    experiments::fig1::giant_p_sorters(),
+                    reps,
+                    jobs,
+                )
+                .print();
+            } else if a.flag("ams") {
+                experiments::fig1::run_ams(&cfg, max_log, reps, jobs).print();
             } else {
-                experiments::fig1::run(&cfg, max_log, reps, jobs)
-            };
-            fig.print();
+                experiments::fig1::run(&cfg, max_log, reps, jobs).print();
+            }
         }
         "fig2a" | "fig2b" => {
             let mut cfg = machine_config(&a)?;

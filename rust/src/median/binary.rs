@@ -64,23 +64,37 @@ impl Window {
 
     /// Internal node: merge two k-windows, keep the centre k slots.
     pub fn merge(&self, other: &Window) -> Window {
+        let mut out = Window(Vec::new());
+        let mut scratch = Vec::new();
+        self.merge_into(other, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free core of [`Window::merge`]: the 2k-way merge runs in
+    /// `scratch`, the centre k slots land in `out` (cleared first) — both
+    /// reuse their capacity, so a caller looping over many merges (the
+    /// pivot-selection butterfly) allocates nothing after warmup. Values
+    /// are bit-identical to [`Window::merge`].
+    pub fn merge_into(&self, other: &Window, out: &mut Window, scratch: &mut Vec<u128>) {
         let k = self.0.len();
         debug_assert_eq!(k, other.0.len());
-        let mut merged = Vec::with_capacity(2 * k);
+        scratch.clear();
+        scratch.reserve(2 * k);
         let (a, b) = (&self.0, &other.0);
         let (mut i, mut j) = (0, 0);
         while i < k && j < k {
             if a[i] <= b[j] {
-                merged.push(a[i]);
+                scratch.push(a[i]);
                 i += 1;
             } else {
-                merged.push(b[j]);
+                scratch.push(b[j]);
                 j += 1;
             }
         }
-        merged.extend_from_slice(&a[i..]);
-        merged.extend_from_slice(&b[j..]);
-        Window(merged[k / 2..k / 2 + k].to_vec())
+        scratch.extend_from_slice(&a[i..]);
+        scratch.extend_from_slice(&b[j..]);
+        out.0.clear();
+        out.0.extend_from_slice(&scratch[k / 2..k / 2 + k]);
     }
 
     /// Root: coin flip between the two central slots (a[k/2], a[k/2+1]
@@ -129,23 +143,38 @@ pub fn median_binary(
     assert!(pes.len().is_power_of_two());
     let dim = pes.len().trailing_zeros();
     let size = pes.len();
+    // one reusable key buffer for all leaf extractions (this function runs
+    // once per recursion level of the calling sorter — per-call churn here
+    // multiplies across the whole pivot-selection phase)
+    let mut keys: Vec<Key> = Vec::new();
     let mut win: Vec<Window> = pes
         .iter()
         .map(|&pe| {
-            let keys: Vec<Key> = local[pe].iter().map(|e| e.key).collect();
+            keys.clear();
+            keys.extend(local[pe].iter().map(|e| e.key));
             mach.work_linear(pe, k); // window extraction
             Window::leaf(&keys, k, rng)
         })
         .collect();
+    // double-buffered butterfly: `snapshot` holds the previous round's
+    // windows and is refilled in place (fixed width k, capacity reused),
+    // and merges land in `win` through `merge_into` — after the first
+    // round the loop allocates nothing, where it used to clone the whole
+    // window table per round
+    let mut snapshot: Vec<Window> = (0..size).map(|_| Window(Vec::new())).collect();
+    let mut scratch: Vec<u128> = Vec::with_capacity(2 * k);
     for j in 0..dim {
         let bit = 1usize << j;
-        let snapshot = win.clone();
+        for (s, w) in snapshot.iter_mut().zip(win.iter()) {
+            s.0.clear();
+            s.0.extend_from_slice(&w.0);
+        }
         for r in 0..size {
             let pr = r ^ bit;
             if r < pr {
                 mach.xchg(pes[r], pes[pr], k, k);
             }
-            win[r] = snapshot[r].merge(&snapshot[pr]);
+            snapshot[r].merge_into(&snapshot[pr], &mut win[r], &mut scratch);
             mach.work_linear(pes[r], 2 * k);
         }
     }

@@ -140,10 +140,21 @@ pub(crate) struct PlanePool {
     /// Scratch list for empty payloads awaiting return to `bufs`.
     skipped: Vec<Vec<Elem>>,
     /// Per-dest run counts for the parallel inbox materialization of
-    /// large rounds (see [`Exchange::deliver`]).
+    /// large rounds (see [`Exchange::deliver`]). All-zero outside a
+    /// delivery: each round zeroes exactly the destinations it counted.
     deliver_counts: Vec<u32>,
     /// Per-run inbox slot (post order within its destination), same path.
     deliver_slots: Vec<u32>,
+    /// Pool of touched-destination lists — one travels with every
+    /// [`Inboxes`] so [`Machine::recycle`] drains only dirtied slots.
+    touched_lists: Vec<Vec<u32>>,
+    /// 1-factor scratch: per-PE participant rank, all-`u32::MAX` outside
+    /// a delivery (each delivery restores exactly the `pes` it ranked).
+    fac_rank: Vec<u32>,
+    /// 1-factor scratch: coalesced message lengths bucketed by
+    /// `(scheduled round, low rank)` — the O(messages) side table that
+    /// replaces per-pair hash probes in [`Exchange::deliver_1factor`].
+    fac_entries: Vec<(u32, u32, usize, usize)>,
 }
 
 impl PlanePool {
@@ -162,21 +173,30 @@ impl PlanePool {
     /// normally find nothing — they exist so no future partial-return
     /// path can leak one run's state into the next.
     pub(crate) fn reset(&mut self) {
-        self.ops.clear();
         while let Some(run) = self.posted.pop() {
             self.recycle_buf(run.payload);
         }
         while let Some(buf) = self.skipped.pop() {
             self.recycle_buf(buf);
         }
-        for slot in self.pair_slot.iter_mut() {
-            *slot = 0;
+        // pair slots are only dirtied together with an `ops` entry, so
+        // the staged ops name every dirty slot — O(staged), never O(p)
+        for idx in 0..self.ops.len() {
+            let (a, b) = (self.ops[idx].i, self.ops[idx].j);
+            if let Some(s) = self.pair_slot.get_mut(a) {
+                *s = 0;
+            }
+            if let Some(s) = self.pair_slot.get_mut(b) {
+                *s = 0;
+            }
         }
+        self.ops.clear();
         self.route_idx.clear();
         self.route.clear();
         self.route_sorted.clear();
         self.deliver_counts.clear();
         self.deliver_slots.clear();
+        self.fac_entries.clear();
     }
 }
 
@@ -282,6 +302,12 @@ impl Exchange {
     fn op_slot(&mut self, a: usize, b: usize, is_send: bool) -> usize {
         debug_assert!(a != b, "exchange op endpoints must differ ({a})");
         debug_assert!(a < self.p && b < self.p);
+        // lazy growth to the highest PE that ever joins a pairwise op —
+        // amortized one-time per machine, never an O(p) clear per round
+        let hi = a.max(b);
+        if self.pair_slot.len() <= hi {
+            self.pair_slot.resize(hi + 1, 0);
+        }
         let slot = self.pair_slot[a];
         if slot != 0 {
             let idx = slot as usize - 1;
@@ -412,7 +438,8 @@ impl Exchange {
         #[cfg(debug_assertions)]
         for &(from, to, _) in &self.route_sorted {
             debug_assert!(
-                self.pair_slot[from] == 0 && self.pair_slot[to] == 0,
+                !self.pair_slot.get(from).is_some_and(|&s| s != 0)
+                    && !self.pair_slot.get(to).is_some_and(|&s| s != 0),
                 "routed posts must not share PEs with pairwise ops in one \
                  round (message {from}→{to})"
             );
@@ -450,36 +477,77 @@ impl Exchange {
             "a 1-factor delivery covers routed posts only (pairwise ops staged)"
         );
         let q = pes.len();
-        let mut rank = vec![u32::MAX; self.p];
+        // Pooled participant-rank table, sized to the highest participant
+        // ever seen (not to p) and restored to all-`u32::MAX` by walking
+        // `pes` afterwards — ranking is O(q) per delivery with zero
+        // steady-state allocation.
+        let mut rank = std::mem::take(&mut mach.plane.fac_rank);
+        let hi = pes.iter().copied().max().map_or(0, |m| m + 1);
+        if rank.len() < hi {
+            rank.resize(hi, u32::MAX);
+        }
         for (r, &pe) in pes.iter().enumerate() {
             assert!(pe < self.p, "participant {pe} outside the machine");
             debug_assert!(rank[pe] == u32::MAX, "participant {pe} listed twice");
             rank[pe] = r as u32;
         }
-        for &(from, to, _) in &self.route {
+        // Bucket the coalesced message lengths by (scheduled round, low
+        // rank): the charge loop below walks them with a cursor instead of
+        // probing the route hash per pair per round, so all length
+        // bookkeeping is O(messages · log messages). The round × rank
+        // enumeration itself must stay exhaustive — the 1-factor schedule
+        // is *oblivious*, every pair pays its α every round even when both
+        // directions are empty, and that simulated cost is exactly what
+        // the equivalence suites pin. Host cost per delivery is therefore
+        // O(q² + messages) with q = |pes| the *active* participants, never
+        // O(p).
+        let mut entries = std::mem::take(&mut mach.plane.fac_entries);
+        debug_assert!(entries.is_empty());
+        for &(from, to, l) in &self.route {
+            let (ri, rj) = (
+                rank.get(from).copied().unwrap_or(u32::MAX),
+                rank.get(to).copied().unwrap_or(u32::MAX),
+            );
             assert!(
-                rank[from] != u32::MAX && rank[to] != u32::MAX,
+                ri != u32::MAX && rj != u32::MAX,
                 "1-factor participants must cover every posted endpoint \
                  (message {from}→{to})"
             );
+            let r = one_factor_round_of(q, ri as usize, rj as usize) as u32;
+            // a pair is charged at loop index i = min(ri, rj); store the
+            // direction relative to that low rank
+            if ri < rj {
+                entries.push((r, ri, l, 0));
+            } else {
+                entries.push((r, rj, 0, l));
+            }
         }
+        entries.sort_unstable();
         // ---- charge: one pairwise xchg per pair per round --------------
         let rounds = one_factor_rounds(q);
         let mut charged_words: u64 = 0;
         #[cfg(debug_assertions)]
         let mut charged_per_round = vec![0u64; rounds];
+        let mut cur = 0usize;
         for r in 0..rounds {
             for i in 0..q {
                 let Some(j) = one_factor_partner(q, r, i) else { continue };
                 if j < i {
                     continue; // each pair charged once, low rank first
                 }
-                let (a, b) = (pes[i], pes[j]);
-                let len = |x: usize, y: usize| {
-                    self.route_idx.get(&(x, y)).map_or(0, |&k| self.route[k as usize].2)
-                };
-                let (l_ab, l_ba) = (len(a, b), len(b, a));
-                mach.xchg(a, b, l_ab, l_ba);
+                // within a round each low rank appears in at most one pair
+                // and pairs are visited in increasing low-rank order, so
+                // the sorted entries advance strictly with the loop
+                let (mut l_ab, mut l_ba) = (0usize, 0usize);
+                while let Some(&(er, ei, ab, ba)) = entries.get(cur) {
+                    if er as usize != r || ei as usize != i {
+                        break;
+                    }
+                    l_ab += ab;
+                    l_ba += ba;
+                    cur += 1;
+                }
+                mach.xchg(pes[i], pes[j], l_ab, l_ba);
                 charged_words += (l_ab + l_ba) as u64;
                 #[cfg(debug_assertions)]
                 {
@@ -487,6 +555,7 @@ impl Exchange {
                 }
             }
         }
+        debug_assert_eq!(cur, entries.len(), "1-factor entries not fully consumed");
         #[cfg(debug_assertions)]
         {
             // per-round invariant: each round's charged words equal the
@@ -503,6 +572,13 @@ impl Exchange {
                 "1-factor schedule violated charged == moved within a round"
             );
         }
+        // restore the pooled scratch invariants: rank all-MAX, entries empty
+        for &pe in pes {
+            rank[pe] = u32::MAX;
+        }
+        entries.clear();
+        mach.plane.fac_rank = rank;
+        mach.plane.fac_entries = entries;
         self.finish(mach, charged_words)
     }
 
@@ -525,11 +601,18 @@ impl Exchange {
     /// invariant, and hand all staging back to the machine's pool.
     fn finish(mut self, mach: &mut Machine, charged_words: u64) -> Inboxes {
         // ---- move -----------------------------------------------------
+        // Host cost of this drain is O(posts): the mailbox table grows
+        // lazily to the highest destination actually addressed, slots are
+        // only touched where runs land, and a `touched` list of exactly
+        // those destinations travels with the [`Inboxes`] so
+        // [`Machine::recycle`] never walks the dense table.
         let mut table = mach.plane.tables.pop().unwrap_or_default();
-        debug_assert!(table.iter().all(|slot| slot.is_empty()));
-        if table.len() < self.p {
-            table.resize_with(self.p, Vec::new);
+        #[cfg(debug_assertions)]
+        if table.len() <= 1 << 12 {
+            debug_assert!(table.iter().all(|slot| slot.is_empty()));
         }
+        let mut touched = mach.plane.touched_lists.pop().unwrap_or_default();
+        debug_assert!(touched.is_empty());
         let mut moved: u64 = 0;
         if self.posted.len() >= mach.par_deliver_min_runs() && mach.pe_jobs() > 1 {
             // Large round: materialize the inboxes on the worker pool. A
@@ -540,25 +623,37 @@ impl Exchange {
             // bit-identical either way; only host wallclock changes.
             let posted_len = self.posted.len();
             let mut counts = std::mem::take(&mut mach.plane.deliver_counts);
-            counts.clear();
-            counts.resize(self.p, 0);
             let mut slots = std::mem::take(&mut mach.plane.deliver_slots);
             slots.clear();
             slots.reserve(posted_len);
+            let mut hi = 0usize;
             for run in &self.posted {
                 if run.charged {
                     moved += run.payload.len() as u64;
                 }
+                if counts.len() <= run.dest {
+                    counts.resize(run.dest + 1, 0);
+                }
+                if counts[run.dest] == 0 {
+                    touched.push(run.dest as u32);
+                }
+                hi = hi.max(run.dest);
                 slots.push(counts[run.dest]);
                 counts[run.dest] += 1;
             }
-            for (dest_box, &count) in table.iter_mut().zip(counts.iter()) {
+            if table.len() <= hi {
+                table.resize_with(hi + 1, Vec::new);
+            }
+            for &dest in &touched {
                 // placeholder runs are overwritten below; `Vec::new` does
-                // not allocate, so pre-sizing is one table resize per dest
-                dest_box.resize_with(count as usize, || (0u64, Vec::new()));
+                // not allocate, so pre-sizing is one resize per touched dest
+                table[dest as usize]
+                    .resize_with(counts[dest as usize] as usize, || (0u64, Vec::new()));
             }
             {
-                let bases: Vec<crate::exec::SliceCells<Run>> = table
+                // bases cover only the addressed prefix — every run.dest
+                // is ≤ hi, and pooled tables can be longer than this round
+                let bases: Vec<crate::exec::SliceCells<Run>> = table[..hi + 1]
                     .iter_mut()
                     .map(|dest_box| crate::exec::SliceCells::new(dest_box.as_mut_slice()))
                     .collect();
@@ -576,12 +671,23 @@ impl Exchange {
                 });
             }
             self.posted.clear();
+            // restore the all-zero invariant by walking only the slots
+            // this round counted — O(touched), never O(p)
+            for &dest in &touched {
+                counts[dest as usize] = 0;
+            }
             mach.plane.deliver_counts = counts;
             mach.plane.deliver_slots = slots;
         } else {
             for run in self.posted.drain(..) {
                 if run.charged {
                     moved += run.payload.len() as u64;
+                }
+                if table.len() <= run.dest {
+                    table.resize_with(run.dest + 1, Vec::new);
+                }
+                if table[run.dest].is_empty() {
+                    touched.push(run.dest as u32);
                 }
                 table[run.dest].push((run.tag, run.payload));
             }
@@ -613,16 +719,27 @@ impl Exchange {
         mach.plane.route_sorted = std::mem::take(&mut self.route_sorted);
         mach.plane.skipped = std::mem::take(&mut self.skipped);
 
-        Inboxes { boxes: table }
+        // One host settlement round closed, however it was charged.
+        mach.bump_host_rounds();
+
+        Inboxes { boxes: table, touched }
     }
 }
 
 /// Per-PE mailboxes returned by [`Exchange::deliver`], indexed by global
 /// PE number. Hand back to [`Machine::recycle`] when drained so the run
 /// lists and payload buffers return to the pool.
+///
+/// The table may be shorter than the machine's `p` — accessors treat
+/// missing slots as empty. A `touched` index of exactly the destinations
+/// that received runs travels with the mailboxes so recycling drains
+/// O(touched) slots, never O(p).
 #[derive(Debug, Default)]
 pub struct Inboxes {
     boxes: Vec<Vec<Run>>,
+    /// Destinations with at least one delivered run (dedup'd, first-post
+    /// order). [`Machine::recycle`] drains exactly these slots.
+    touched: Vec<u32>,
 }
 
 impl Inboxes {
@@ -655,10 +772,6 @@ impl Inboxes {
             None => Vec::new(),
         }
     }
-
-    pub(crate) fn into_table(self) -> Vec<Vec<Run>> {
-        self.boxes
-    }
 }
 
 impl Machine {
@@ -671,11 +784,16 @@ impl Machine {
             !self.in_superstep(),
             "cannot open an exchange inside a raw cost superstep"
         );
-        let mut pair_slot = std::mem::take(&mut self.plane.pair_slot);
-        if pair_slot.len() < self.p() {
-            pair_slot.resize(self.p(), 0);
+        // `pair_slot` grows lazily inside `op_slot` to the highest PE that
+        // ever joins a pairwise op — opening an exchange on a giant-p
+        // machine allocates nothing. The all-clean invariant is only
+        // re-checked exhaustively at small sizes; at giant p the touched
+        // cleanup paths (deliver / PlanePool::reset) are the contract.
+        let pair_slot = std::mem::take(&mut self.plane.pair_slot);
+        #[cfg(debug_assertions)]
+        if pair_slot.len() <= 1 << 12 {
+            debug_assert!(pair_slot.iter().all(|&s| s == 0));
         }
-        debug_assert!(pair_slot.iter().all(|&s| s == 0));
         Exchange {
             p: self.p(),
             mach_id: self.instance_id(),
@@ -719,15 +837,27 @@ impl Machine {
 
     /// Return drained mailboxes to the pool: every remaining payload
     /// buffer is cleared and pooled, the table itself is reused by the
-    /// next [`Exchange::deliver`].
+    /// next [`Exchange::deliver`]. Walks only the touched-slot index the
+    /// delivery recorded — O(runs delivered), never O(p).
     pub fn recycle(&mut self, inboxes: Inboxes) {
-        let mut table = inboxes.into_table();
-        for slot in table.iter_mut() {
-            for (_, payload) in slot.drain(..) {
-                self.plane.recycle_buf(payload);
+        let Inboxes { mut boxes, mut touched } = inboxes;
+        for &dest in &touched {
+            if let Some(slot) = boxes.get_mut(dest as usize) {
+                for (_, payload) in slot.drain(..) {
+                    self.plane.recycle_buf(payload);
+                }
             }
         }
-        self.plane.tables.push(table);
+        #[cfg(debug_assertions)]
+        if boxes.len() <= 1 << 12 {
+            debug_assert!(
+                boxes.iter().all(|slot| slot.is_empty()),
+                "recycled mailboxes held runs outside the touched index"
+            );
+        }
+        touched.clear();
+        self.plane.touched_lists.push(touched);
+        self.plane.tables.push(boxes);
     }
 }
 

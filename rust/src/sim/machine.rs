@@ -50,15 +50,90 @@ struct RouteScratch {
 }
 
 impl RouteScratch {
-    fn ensure_capacity(&mut self, p: usize) {
-        if self.out.len() < p {
-            self.out.resize(p, 0.0);
-            self.inc.resize(p, 0.0);
-            self.recv_ready.resize(p, 0.0);
-            self.indeg.resize(p, 0);
-            self.outdeg.resize(p, 0);
-            self.seen.resize(p, false);
+    /// Grow every tally to cover PE indices `< n`. Callers pass the
+    /// highest PE actually named by the round plus one — not `p` — so a
+    /// giant, mostly-idle machine only ever allocates tallies for the
+    /// prefix of PEs that communicate.
+    fn ensure_capacity(&mut self, n: usize) {
+        if self.out.len() < n {
+            self.out.resize(n, 0.0);
+            self.inc.resize(n, 0.0);
+            self.recv_ready.resize(n, 0.0);
+            self.indeg.resize(n, 0);
+            self.outdeg.resize(n, 0);
+            self.seen.resize(n, false);
         }
+    }
+}
+
+/// Growable per-PE virtual clocks with an **epoch/floor** representation,
+/// so machine-wide operations cost O(1) instead of O(p):
+///
+/// * `floor` is a lower bound on every PE's clock. A whole-machine
+///   barrier raises it once instead of writing p slots.
+/// * `slot[pe]` is live only while `slot_epoch[pe] == epoch`;
+///   [`Clocks::reset`] bumps `epoch`, invalidating every slot at once.
+/// * slots grow on first write, so `Machine::new(1 << 20, …)` allocates
+///   nothing until PEs are actually charged.
+/// * `max` is the running makespan. Clocks are **monotone** (every write
+///   is ≥ the value read — all charges are nonnegative, barriers and
+///   syncs only advance), so the incremental max is bit-identical to a
+///   fold over all p dense clocks.
+///
+/// The effective clock of a PE is `max(live slot value, floor)`: exact,
+/// because every write path reads the effective value first and the
+/// floor only ever increases — a stored value below the floor is simply
+/// a stale pre-barrier snapshot.
+#[derive(Clone, Debug, Default)]
+struct Clocks {
+    floor: f64,
+    slot: Vec<f64>,
+    slot_epoch: Vec<u64>,
+    epoch: u64,
+    max: f64,
+}
+
+impl Clocks {
+    #[inline]
+    fn get(&self, pe: usize) -> f64 {
+        match self.slot.get(pe) {
+            Some(&v) if self.slot_epoch[pe] == self.epoch => v.max(self.floor),
+            _ => self.floor,
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, pe: usize, v: f64) {
+        debug_assert!(v >= self.floor, "clocks are monotone (floor {})", self.floor);
+        if self.slot.len() <= pe {
+            let n = (pe + 1).max(self.slot.len() * 2);
+            self.slot.resize(n, 0.0);
+            self.slot_epoch.resize(n, 0);
+        }
+        self.slot[pe] = v;
+        self.slot_epoch[pe] = self.epoch;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Raise the whole-machine lower bound to `t ≥ max` — the O(1)
+    /// settlement of a barrier over **all** PEs (every effective clock
+    /// becomes exactly `t`, stale slots included, via the `max(…, floor)`
+    /// read path).
+    #[inline]
+    fn raise_floor(&mut self, t: f64) {
+        debug_assert!(t >= self.max);
+        self.floor = t;
+        self.max = t;
+    }
+
+    /// O(1) return to the all-zero state of a fresh machine: bump the
+    /// epoch (invalidating every stored slot) and drop floor and max.
+    fn reset(&mut self) {
+        self.epoch += 1;
+        self.floor = 0.0;
+        self.max = 0.0;
     }
 }
 
@@ -321,6 +396,23 @@ enum PeMap<'a> {
 }
 
 /// The simulated machine: `p` PEs, one virtual clock each.
+///
+/// # Touched-slot cleanliness contract
+///
+/// A machine of `p` PEs never does Θ(p) host work for a round that only
+/// touches a few PEs. Every dense per-PE structure it owns — the clock
+/// slots ([`Clocks`]), the route tallies ([`RouteScratch`]), the data
+/// plane's pair slots, inbox tables, and delivery counters
+/// ([`crate::sim::Exchange`]) — obeys one invariant: **outside of a
+/// settlement, every slot is in its clean state (zero/empty), and each
+/// settlement cleans exactly the slots it dirtied**, driven by a
+/// touched-slot index carried alongside the dense storage. Growth is
+/// lazy (first write), resets are O(1) (epoch bump) or O(touched), and
+/// whole-machine barriers settle O(1) via the clock floor. Consequently
+/// per-superstep host cost is O(active PEs + messages), and
+/// `Machine::new(1 << 20, …)` is cheap until PEs are actually charged.
+/// Any new scratch added to the machine must keep this contract — the
+/// giant-p property tests assert allocation scaling against it.
 #[derive(Clone, Debug)]
 pub struct Machine {
     p: usize,
@@ -328,7 +420,7 @@ pub struct Machine {
     /// assert an [`crate::sim::Exchange`] is delivered on the machine
     /// that opened it.
     instance_id: u64,
-    clock: Vec<f64>,
+    clocks: Clocks,
     pub cost: CostModel,
     pub stats: Stats,
     /// Per-PE memory budget in elements; `None` disables crash detection.
@@ -358,6 +450,13 @@ pub struct Machine {
     /// between rounds) — warm rounds reuse its capacity instead of
     /// allocating a fresh `Vec` per round.
     ctx_round: Vec<PeCtx>,
+    /// Host-side profiling: settled communication rounds this run
+    /// (batched supersteps, eager route rounds, barriers, exchange
+    /// deliveries). Deliberately **not** part of [`Stats`] — the
+    /// equivalence suites compare `Stats` bit for bit as simulated cost,
+    /// while this counts host settlement activity (the denominator of
+    /// the giant-p bench's µs-per-superstep metric).
+    host_rounds: u64,
 }
 
 impl Machine {
@@ -368,7 +467,7 @@ impl Machine {
         Self {
             p,
             instance_id: MACHINE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
-            clock: vec![0.0; p],
+            clocks: Clocks::default(),
             cost,
             stats: Stats::default(),
             mem_cap_elems: None,
@@ -383,6 +482,7 @@ impl Machine {
             par_min_work: par_min_work(),
             ctx_pool: Vec::new(),
             ctx_round: Vec::new(),
+            host_rounds: 0,
         }
     }
 
@@ -401,8 +501,8 @@ impl Machine {
     pub fn reset(&mut self, p: usize, cost: CostModel) {
         assert!(p >= 1);
         self.p = p;
-        self.clock.clear();
-        self.clock.resize(p, 0.0);
+        // O(1): an epoch bump invalidates every stored clock slot
+        self.clocks.reset();
         self.cost = cost;
         self.stats = Stats::default();
         self.mem_cap_elems = None;
@@ -418,6 +518,7 @@ impl Machine {
         self.plane.reset();
         self.elems_charged = 0;
         self.elems_moved = 0;
+        self.host_rounds = 0;
         // pe_jobs, par_min_work, and the ctx pool survive: all are
         // host-execution state (scheduling + warm scratch), invisible to
         // simulation results
@@ -491,15 +592,31 @@ impl Machine {
         self.p.trailing_zeros()
     }
 
-    /// Makespan: the running time the paper reports.
+    /// Makespan: the running time the paper reports. O(1): the clocks
+    /// keep an incremental maximum, bit-identical to a fold over all p
+    /// per-PE clocks (clocks are monotone, non-NaN).
+    #[inline]
     pub fn time(&self) -> f64 {
-        self.clock.iter().copied().fold(0.0, f64::max)
+        self.clocks.max
     }
 
     /// Clock of a single PE (tests / diagnostics).
     #[inline]
     pub fn clock(&self, pe: usize) -> f64 {
-        self.clock[pe]
+        debug_assert!(pe < self.p);
+        self.clocks.get(pe)
+    }
+
+    /// Settled communication rounds so far (host profiling — see the
+    /// `host_rounds` field; cleared by [`Machine::reset`]).
+    #[inline]
+    pub fn host_rounds(&self) -> u64 {
+        self.host_rounds
+    }
+
+    #[inline]
+    pub(crate) fn bump_host_rounds(&mut self) {
+        self.host_rounds += 1;
     }
 
     /// First crash observed, if any.
@@ -516,7 +633,8 @@ impl Machine {
     /// Charge raw local work (instruction units) to one PE.
     #[inline]
     pub fn work(&mut self, pe: usize, ops: f64) {
-        self.clock[pe] += ops;
+        let t = self.clocks.get(pe) + ops;
+        self.clocks.set(pe, t);
         self.stats.local_work += ops;
     }
 
@@ -585,10 +703,10 @@ impl Machine {
     }
 
     fn xchg_now(&mut self, i: usize, j: usize, l_ij: usize, l_ji: usize) {
-        let start = self.clock[i].max(self.clock[j]);
+        let start = self.clocks.get(i).max(self.clocks.get(j));
         let t = start + self.cost.xchg(l_ij, l_ji);
-        self.clock[i] = t;
-        self.clock[j] = t;
+        self.clocks.set(i, t);
+        self.clocks.set(j, t);
         self.stats.messages += 2;
         self.stats.words += (l_ij + l_ji) as u64;
     }
@@ -609,9 +727,10 @@ impl Machine {
 
     fn send_now(&mut self, from: usize, to: usize, l: usize) {
         let c = self.cost.msg(l);
-        self.clock[from] += c;
-        let arrival = self.clock[from];
-        self.clock[to] = self.clock[to].max(arrival);
+        let arrival = self.clocks.get(from) + c;
+        self.clocks.set(from, arrival);
+        let t = self.clocks.get(to).max(arrival);
+        self.clocks.set(to, t);
         self.stats.messages += 1;
         self.stats.words += l as u64;
     }
@@ -635,6 +754,7 @@ impl Machine {
             t.route.extend_from_slice(msgs);
             return;
         }
+        self.host_rounds += 1;
         self.settle_route(msgs);
     }
 
@@ -721,14 +841,26 @@ impl Machine {
     /// exactness contract.
     pub fn settle(&mut self) {
         let mut t = self.transcript.take().expect("settle() without begin_superstep()");
+        self.host_rounds += 1;
         #[cfg(debug_assertions)]
         {
             // the exactness contract (see begin_superstep): pairwise ops
             // of one superstep must touch disjoint PE pairs, and routed
             // messages must not share a PE with any pairwise op (settle
             // reorders pairwise-before-route). Checked via the reusable
-            // scratch — no per-superstep allocation even in test builds.
-            self.scratch.ensure_capacity(self.p);
+            // scratch — no per-superstep allocation even in test builds,
+            // sized by the highest PE the superstep names, not by p.
+            let hi = t
+                .ops
+                .iter()
+                .map(|op| match *op {
+                    PendingOp::Xchg { i, j, .. } => i.max(j),
+                    PendingOp::Send { from, to, .. } => from.max(to),
+                })
+                .chain(t.route.iter().map(|&(f, to, _)| f.max(to)))
+                .max()
+                .map_or(0, |m| m + 1);
+            self.scratch.ensure_capacity(hi);
             let scratch = &mut self.scratch;
             for op in &t.ops {
                 let (a, b) = match *op {
@@ -778,9 +910,12 @@ impl Machine {
         if msgs.is_empty() {
             return;
         }
-        self.scratch.ensure_capacity(self.p);
+        // size the tallies by the highest PE this round names — O(msgs),
+        // never O(p)
+        let hi = msgs.iter().map(|&(f, t, _)| f.max(t)).max().unwrap();
+        self.scratch.ensure_capacity(hi + 1);
         let scratch = &mut self.scratch;
-        let clock = &mut self.clock;
+        let clocks = &mut self.clocks;
         let cost = &self.cost;
         let stats = &mut self.stats;
 
@@ -803,16 +938,17 @@ impl Machine {
             // a receiver cannot start draining before its senders have
             // started this round (receive time itself overlaps the
             // transmissions — the standard superstep approximation)
-            if clock[from] > scratch.recv_ready[to] {
-                scratch.recv_ready[to] = clock[from];
+            let c_from = clocks.get(from);
+            if c_from > scratch.recv_ready[to] {
+                scratch.recv_ready[to] = c_from;
             }
         }
         for &pe in &scratch.touched {
-            let mut t = clock[pe] + scratch.out[pe];
+            let mut t = clocks.get(pe) + scratch.out[pe];
             if scratch.indeg[pe] > 0 {
                 t = t.max(scratch.recv_ready[pe]) + scratch.inc[pe];
             }
-            clock[pe] = t;
+            clocks.set(pe, t);
             let deg = scratch.indeg[pe].max(scratch.outdeg[pe]);
             if deg > stats.max_degree {
                 stats.max_degree = deg;
@@ -834,26 +970,42 @@ impl Machine {
 
     /// Barrier over a PE group: clocks advance to the group max (plus a
     /// log-depth tree of zero-length messages).
+    ///
+    /// A barrier over **all** p PEs (distinct indices, so `len == p`
+    /// means full coverage) settles O(1): the group max is the machine
+    /// makespan, and raising the clock floor advances every PE at once.
     pub fn barrier(&mut self, pes: &[usize]) {
         if pes.len() <= 1 {
             return;
         }
-        let max = pes.iter().map(|&i| self.clock[i]).fold(0.0, f64::max);
+        self.host_rounds += 1;
         let depth = (pes.len() as f64).log2().ceil();
-        let t = max + 2.0 * depth * self.cost.alpha;
-        for &i in pes {
-            self.clock[i] = t;
+        if pes.len() == self.p {
+            let t = self.clocks.max + 2.0 * depth * self.cost.alpha;
+            self.clocks.raise_floor(t);
+        } else {
+            let max = pes.iter().map(|&i| self.clocks.get(i)).fold(0.0, f64::max);
+            let t = max + 2.0 * depth * self.cost.alpha;
+            for &i in pes {
+                self.clocks.set(i, t);
+            }
         }
         self.stats.messages += 2 * (pes.len() as u64 - 1);
     }
 
     /// Advance every clock in `pes` to their common max (free sync used to
     /// model the implicit synchrony of lock-step collectives that already
-    /// paid their message costs).
+    /// paid their message costs). Whole-machine groups settle O(1) via
+    /// the clock floor, like [`Machine::barrier`].
     pub fn sync_free(&mut self, pes: &[usize]) {
-        let max = pes.iter().map(|&i| self.clock[i]).fold(0.0, f64::max);
+        if pes.len() == self.p {
+            let t = self.clocks.max;
+            self.clocks.raise_floor(t);
+            return;
+        }
+        let max = pes.iter().map(|&i| self.clocks.get(i)).fold(0.0, f64::max);
         for &i in pes {
-            self.clock[i] = max;
+            self.clocks.set(i, max);
         }
     }
 

@@ -1425,6 +1425,37 @@ fn shuffles_match_legacy_bit_for_bit() {
     }
 }
 
+/// Giant-p representation independence: a runner that has just simulated
+/// a 2^16-PE sparse run — epoch/floor clocks exercised at scale, mailbox
+/// tables and touched-slot indexes grown to giant dimensions — must
+/// produce bit-identical reports on subsequent small cells compared to a
+/// fresh runner. The pooled giant-p state may only ever change host cost,
+/// never a report bit.
+#[test]
+fn giant_p_warmed_runner_matches_fresh_runner_bit_for_bit() {
+    let giant = RunConfig::default().with_p(1 << 16).with_sparsity(243);
+    let mut warmed = Runner::new(giant.clone());
+    let warm =
+        warmed.run_algorithm(Algorithm::Rfis, generate(&giant, Distribution::Uniform));
+    assert!(warm.crashed.is_none(), "giant-p warmup crashed: {:?}", warm.crashed);
+    assert!(warm.validation.ok(), "giant-p warmup invalid");
+    for dist in [Distribution::Uniform, Distribution::Zero, Distribution::Staggered] {
+        for m in [1usize, 64] {
+            let cfg = RunConfig::default().with_p(16).with_n_per_pe(m);
+            for alg in
+                [Algorithm::GatherM, Algorithm::Rfis, Algorithm::Rams, Algorithm::Robust]
+            {
+                let ctx = format!("{alg:?}/{dist:?}/m={m} after giant-p warmup");
+                let input = generate(&cfg, dist);
+                warmed.set_config(cfg.clone());
+                let got = warmed.run_algorithm(alg, input.clone());
+                let want = Runner::new(cfg.clone()).run_algorithm(alg, input);
+                assert_reports_identical(&want, &got, &ctx);
+            }
+        }
+    }
+}
+
 /// The Fig. 2c regime that actually triggers deterministic message
 /// assignment (fan-in ≫ k on AllToOne): the two-hop payload movement of
 /// the Exchange port must reproduce the legacy overlay charging exactly.

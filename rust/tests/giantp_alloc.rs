@@ -1,0 +1,100 @@
+//! Giant-p warm-path allocation scaling: on a 2^16-PE machine with one
+//! element on every 243rd PE, a warm (second) run must allocate in
+//! proportion to the *active* PEs and messages, never one-per-PE — the
+//! host-cost half of the O(active + messages) superstep contract (the
+//! simulated-cost half is pinned by the equivalence suites).
+//!
+//! This binary holds exactly ONE test: the counting global allocator is
+//! process-wide, and a sibling `#[test]` running concurrently would
+//! pollute the counted window. Keep it that way.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use rmps::algorithms::find_sorter;
+use rmps::config::RunConfig;
+use rmps::input::{generate, Distribution};
+use rmps::localsort::RustSort;
+use rmps::sim::Machine;
+
+/// System allocator wrapped with a call counter (alloc/realloc/zeroed;
+/// frees are not counted — the metric is allocation churn).
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Relaxed)
+}
+
+#[test]
+fn warm_giant_p_runs_allocate_with_messages_not_p() {
+    let p = 1usize << 16;
+    let cfg = RunConfig::default().with_p(p).with_sparsity(243).with_seed(0x61AA);
+    // ~270 occupied PEs; per-sorter ceilings on the warm allocation count,
+    // sized from the sorters' host structure with an order of magnitude of
+    // headroom (wallclock-independent, so no flakiness margin needed):
+    //  - GatherM/Robust: a binomial gather's group bookkeeping is a few
+    //    allocations per round (log p rounds) plus one per occupied run —
+    //    hundreds. p/4 = 16 384 is far above that and far below the ≥ p
+    //    an accidental per-PE allocation path would cost.
+    //  - RFIS: its √p × √p grid does Θ(√p) group collectives of size √p
+    //    with a few allocations per member round — ~0.2·p legitimately.
+    //    2·p still catches regressions that allocate per PE per hypercube
+    //    round (≥ 8·p here).
+    for (name, bound) in [("GatherM", p / 4), ("Robust", p / 4), ("RFIS", 2 * p)] {
+        let sorter = find_sorter(name).expect("giant-p sorter registered");
+        let mut mach = Machine::new(cfg.p, cfg.cost);
+        mach.mem_cap_elems = cfg.mem_cap_elems();
+        // inline PE rounds: pool workers would allocate on other threads
+        // into the same process-wide counter
+        mach.set_pe_jobs(1);
+        let input = generate(&cfg, Distribution::Uniform);
+
+        // cold run: dimensions the machine, fills the data-plane pools
+        let mut data = input.clone();
+        sorter.sort(&mut mach, &mut data, &cfg, &mut RustSort);
+        assert!(!mach.crashed(), "{name}: cold run crashed: {:?}", mach.crash());
+        assert_eq!(mach.exchange_charged(), mach.exchange_moved(), "{name}: cold run");
+
+        // warm run on the reset machine — the input clone happens OUTSIDE
+        // the counted window, so the delta is the simulation's own churn
+        mach.reset(cfg.p, cfg.cost);
+        mach.mem_cap_elems = cfg.mem_cap_elems();
+        let mut data = input.clone();
+        let before = alloc_count();
+        sorter.sort(&mut mach, &mut data, &cfg, &mut RustSort);
+        let warm = alloc_count() - before;
+        assert!(!mach.crashed(), "{name}: warm run crashed: {:?}", mach.crash());
+        assert_eq!(mach.exchange_charged(), mach.exchange_moved(), "{name}: warm run");
+        assert!(
+            (warm as usize) < bound,
+            "{name}: {warm} warm-run allocations at p={p} (bound {bound}) — \
+             an O(p) allocation path is back on the warm superstep path"
+        );
+    }
+}

@@ -158,6 +158,26 @@ fn every_builtin_upholds_the_contract_on_sparse_inputs() {
     }
 }
 
+/// The giant-p regime: 2^16 PEs at the paper's sparsest point (3^-5 —
+/// one element on every 243rd PE). Affordable even in debug builds
+/// because supersteps cost O(active PEs + messages) host work, not O(p)
+/// (the touched-slot contract on `sim::Machine`); the properties pinned
+/// are exactly the dense grid's.
+#[test]
+fn giant_p_sparse_cells_uphold_the_contract() {
+    let p = 1usize << 16;
+    for name in ["GatherM", "RFIS", "Robust"] {
+        let sorter = find_sorter(name).expect("giant-p sorter registered");
+        let cfg = RunConfig::default().with_p(p).with_sparsity(243).with_seed(0x61A9);
+        assert!(
+            sorter.valid_range(cfg.n_over_p(), p),
+            "{name} must cover the sparse end"
+        );
+        let ctx = format!("{name}/giant-p/p=2^16/sparse(1/243)");
+        check_sorter(sorter.as_ref(), &cfg, Distribution::Uniform, &ctx);
+    }
+}
+
 /// Acceptance pin for the tentpole: the AMS family sorts **all eleven
 /// distributions** through the full `Runner` validation path, for every
 /// registered level count.
