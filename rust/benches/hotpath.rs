@@ -23,6 +23,14 @@
 //! basis for the `sim::PAR_MIN_WORK` default and the `--par-min-work` /
 //! `RMPS_PAR_MIN_WORK` knob.
 //!
+//! The rewritten-kernel section pits each hot per-PE kernel against the
+//! implementation it replaced on identical inputs: scalar vs 4-lane
+//! interleaved classifier descents (ns/elem), the ping-pong cascade vs
+//! the loser-tree k-way merge at k ∈ {4, 64, 1024} (ns/elem, outputs
+//! asserted identical), pdqsort vs the digit-skipping LSD radix local
+//! sort (ms + ratio), and the steady-state allocations of one warm call
+//! per kernel — all under the `kernels` JSON key.
+//!
 //! Knobs: RMPS_BENCH_REPS (default 3); RMPS_BENCH_TINY=1 shrinks every
 //! size so a CI smoke run finishes in seconds while still driving the
 //! same code paths.
@@ -34,9 +42,14 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use rmps::algorithms::{Algorithm, Runner};
 use rmps::config::RunConfig;
-use rmps::elements::{merge_into, multiway_merge, Elem};
+use rmps::elements::{
+    cascade_merge_into, loser_tree_merge_into, merge_into, multiway_merge, Elem, MergeScratch,
+};
 use rmps::input::{generate, Distribution};
-use rmps::partition::{partition, pick_splitters, SplitterTree};
+use rmps::localsort::radix_sort_run;
+use rmps::partition::{
+    partition, partition_scatter, pick_splitters, PartitionScratch, SplitterTree,
+};
 use rmps::rng::Rng;
 
 /// System allocator wrapped with a call counter (alloc/realloc/zeroed;
@@ -350,6 +363,139 @@ fn main() {
     println!("partition s=127        {ms:>9.1} ms   {rate:>7.2} Melem/s");
     lines.push(Line { name: format!("partition {pn} s=127"), ms, rate, allocs: None, pe_par: None });
 
+    println!("\n== rewritten per-PE kernels (old vs new) ==");
+    // classifier descent, tie-breaking tree s=127: one scalar descent per
+    // element vs four interleaved descents (the ILP rewrite), same inputs
+    let ms_scalar =
+        common::time_ms(reps, || data.iter().map(|e| tree.classify_tb(e)).sum::<usize>());
+    let ms_lane4 = common::time_ms(reps, || {
+        let mut acc = 0usize;
+        let mut quads = data.chunks_exact(4);
+        for q in &mut quads {
+            let b = tree.classify_tb4([&q[0], &q[1], &q[2], &q[3]]);
+            acc += b[0] + b[1] + b[2] + b[3];
+        }
+        for e in quads.remainder() {
+            acc += tree.classify_tb(e);
+        }
+        acc
+    });
+    let classify_scalar_ns = ms_scalar * 1e6 / pn as f64;
+    let classify_lane4_ns = ms_lane4 * 1e6 / pn as f64;
+    println!(
+        "classify_tb s=127      scalar {classify_scalar_ns:>6.2} ns/elem / 4-lane \
+         {classify_lane4_ns:>6.2} ns/elem ({:.2}x)",
+        classify_scalar_ns / classify_lane4_ns.max(1e-9)
+    );
+
+    // k-way merge: the old ping-pong cascade vs the loser tree, same runs,
+    // warm scratches (outputs asserted identical — the rewrite contract)
+    let merge_total = sz(1 << 20, 1 << 12);
+    let mut merge_json: Vec<String> = Vec::new();
+    let mut casc_scratch = MergeScratch::default();
+    let mut tree_scratch = MergeScratch::default();
+    let (mut casc_out, mut tree_out) = (Vec::new(), Vec::new());
+    for k in [4usize, 64, 1024] {
+        let run_len = (merge_total / k).max(1);
+        let mruns: Vec<Vec<Elem>> = (0..k)
+            .map(|r| {
+                let mut v: Vec<Elem> =
+                    (0..run_len).map(|i| Elem::new(rng.next_u64(), r, i)).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let mrefs: Vec<&[Elem]> = mruns.iter().map(|v| v.as_slice()).collect();
+        let n = (k * run_len) as f64;
+        let ms_casc = common::time_ms(reps, || {
+            cascade_merge_into(&mrefs, &mut casc_out, &mut casc_scratch);
+            casc_out.len()
+        });
+        let ms_tree = common::time_ms(reps, || {
+            loser_tree_merge_into(&mrefs, &mut tree_out, &mut tree_scratch);
+            tree_out.len()
+        });
+        assert_eq!(casc_out, tree_out, "merge kernels must agree (k={k})");
+        let casc_ns = ms_casc * 1e6 / n;
+        let tree_ns = ms_tree * 1e6 / n;
+        println!(
+            "merge k={k:<5}          cascade {casc_ns:>6.2} ns/elem / loser-tree \
+             {tree_ns:>6.2} ns/elem ({:.2}x)",
+            casc_ns / tree_ns.max(1e-9)
+        );
+        merge_json.push(format!(
+            "{{\"k\": {k}, \"cascade_ns_per_elem\": {casc_ns:.3}, \
+             \"loser_tree_ns_per_elem\": {tree_ns:.3}}}"
+        ));
+    }
+
+    // local sort: pdqsort vs the digit-skipping LSD radix kernel on the
+    // same random run (the copy-in is identical on both sides)
+    let sn = sz(1 << 20, 1 << 13);
+    let sdata: Vec<Elem> = (0..sn).map(|i| Elem::new(rng.next_u64(), 3, i)).collect();
+    let mut sbuf: Vec<Elem> = Vec::with_capacity(sn);
+    let ms_pdq = common::time_ms(reps, || {
+        sbuf.clear();
+        sbuf.extend_from_slice(&sdata);
+        sbuf.sort_unstable();
+        sbuf.len()
+    });
+    let ms_radix = common::time_ms(reps, || {
+        sbuf.clear();
+        sbuf.extend_from_slice(&sdata);
+        radix_sort_run(&mut sbuf);
+        sbuf.len()
+    });
+    let radix_over_pdq = ms_radix / ms_pdq.max(1e-9);
+    println!(
+        "local sort n={sn:<7}  pdqsort {ms_pdq:>8.1} ms / radix {ms_radix:>8.1} ms \
+         (radix/pdq {radix_over_pdq:.2})"
+    );
+
+    // steady-state allocation count of one warm call per rewritten kernel
+    // (scatter and loser tree must be 0; radix allocates its per-call
+    // histogram table — tracked so growth shows up in the artifact)
+    let mut part_scratch = PartitionScratch::default();
+    let _ = partition_scatter(&data, &tree, true, &mut part_scratch);
+    let before = alloc_count();
+    let _ = partition_scatter(&data, &tree, true, &mut part_scratch);
+    let allocs_partition = alloc_count() - before;
+    let warm_runs: Vec<Vec<Elem>> = (0..16)
+        .map(|r| {
+            let mut v: Vec<Elem> = (0..512).map(|i| Elem::new(rng.next_u64(), r, i)).collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    let warm_refs: Vec<&[Elem]> = warm_runs.iter().map(|v| v.as_slice()).collect();
+    loser_tree_merge_into(&warm_refs, &mut tree_out, &mut tree_scratch);
+    let before = alloc_count();
+    loser_tree_merge_into(&warm_refs, &mut tree_out, &mut tree_scratch);
+    let allocs_merge = alloc_count() - before;
+    sbuf.clear();
+    sbuf.extend_from_slice(&sdata);
+    radix_sort_run(&mut sbuf);
+    sbuf.clear();
+    sbuf.extend_from_slice(&sdata);
+    let before = alloc_count();
+    radix_sort_run(&mut sbuf);
+    let allocs_radix = alloc_count() - before;
+    println!(
+        "warm allocs/call       partition_scatter {allocs_partition} / loser_tree \
+         {allocs_merge} / radix {allocs_radix}"
+    );
+
+    let kernels_json = format!(
+        "{{\"classify_scalar_ns_per_elem\": {classify_scalar_ns:.3}, \
+         \"classify_lane4_ns_per_elem\": {classify_lane4_ns:.3}, \
+         \"merge\": [{}], \
+         \"sort_n\": {sn}, \"sort_pdq_ms\": {ms_pdq:.3}, \"sort_radix_ms\": {ms_radix:.3}, \
+         \"radix_over_pdq\": {radix_over_pdq:.3}, \
+         \"warm_allocs\": {{\"partition_scatter\": {allocs_partition}, \
+         \"loser_tree_merge\": {allocs_merge}, \"radix_sort\": {allocs_radix}}}}}",
+        merge_json.join(", ")
+    );
+
     let results: Vec<String> = lines
         .iter()
         .map(|l| {
@@ -407,6 +553,7 @@ fn main() {
                 "measured_crossover_work",
                 crossover.map_or_else(|| "null".to_string(), |w| w.to_string()),
             ),
+            ("kernels", kernels_json),
             ("results", format!("[{}]", results.join(", "))),
         ],
     );

@@ -32,7 +32,7 @@ pub use sorter::{
 
 use crate::config::RunConfig;
 use crate::elements::Elem;
-use crate::localsort::{RustSort, SortBackend};
+use crate::localsort::{default_backend, SortBackend};
 use crate::metrics::Stats;
 use crate::sim::Machine;
 use crate::verify::Validation;
@@ -186,12 +186,13 @@ impl RunReport {
     }
 }
 
-/// Run `alg` on `input` under `cfg` with the pure-Rust local sorter.
+/// Run `alg` on `input` under `cfg` with the process-default local
+/// sorter ([`crate::localsort::default_backend`]).
 ///
 /// Legacy shim over [`Runner`] (validation on, output kept — the historic
 /// defaults); byte-identical to `Runner::new(cfg.clone()).run_algorithm()`.
 pub fn run(alg: Algorithm, cfg: &RunConfig, input: Vec<Vec<Elem>>) -> RunReport {
-    run_with_backend(alg, cfg, input, &mut RustSort)
+    run_with_backend(alg, cfg, input, default_backend().as_mut())
 }
 
 /// Run `alg` with an explicit local-sort backend (e.g. the PJRT `XlaSort`

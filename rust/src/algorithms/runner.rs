@@ -11,7 +11,7 @@
 
 use crate::config::RunConfig;
 use crate::elements::Elem;
-use crate::localsort::{RustSort, SortBackend};
+use crate::localsort::{default_backend, SortBackend};
 use crate::sim::Machine;
 use crate::verify::{validate, validate_replicated, Validation};
 
@@ -66,13 +66,16 @@ pub struct RunMeta {
 }
 
 impl Runner {
-    /// A runner for `cfg` with the pure-Rust local-sort backend,
-    /// validation on, and output retention on — the legacy `run` defaults.
+    /// A runner for `cfg` with the process-default local-sort backend
+    /// ([`crate::localsort::default_backend`]: pdqsort unless
+    /// `--sort-backend` / `RMPS_SORT_BACKEND` picked another — reports
+    /// are bit-identical either way), validation on, and output retention
+    /// on — the legacy `run` defaults.
     pub fn new(cfg: RunConfig) -> Self {
         let mach = Machine::new(cfg.p, cfg.cost);
         Self {
             cfg,
-            backend: Box::new(RustSort),
+            backend: default_backend(),
             validate: true,
             keep_output: true,
             mach,

@@ -7,6 +7,13 @@
 //! every element carries an origin id `(pe, idx)` packed into a `u64`.
 //! **Nonrobust variants never look at it** — they compare keys only, which
 //! is exactly what makes them collapse on duplicate-heavy instances.
+//!
+//! This module also owns the k-way merge host kernel
+//! ([`multiway_merge_into`]): a two-finger ping-pong cascade for small
+//! run counts and a single-pass stable tournament loser tree
+//! ([`loser_tree_merge_into`]) above [`LOSER_TREE_MIN_RUNS`] — same
+//! output bit for bit, O(total) instead of O(total · log k) memory
+//! traffic on the path every hypercube round and bucket receipt runs.
 
 /// Sort key. The paper generates 64-bit elements with 32-bit key ranges;
 /// we keep the full `u64` domain (generators mostly use `[0, 2^32)`).
@@ -17,7 +24,8 @@ pub type Key = u64;
 pub struct Elem {
     /// Primary sort key.
     pub key: Key,
-    /// Unique origin id: `pe << 24-bit-index | idx` — see [`Elem::new`].
+    /// Unique origin id: `(pe << IDX_BITS) | idx` with a 40-bit local
+    /// index — see [`Elem::new`].
     pub id: u64,
 }
 
@@ -101,32 +109,63 @@ fn merge_append(a: &[Elem], b: &[Elem], out: &mut Vec<Elem>) {
     out.extend_from_slice(&b[j..]);
 }
 
-/// Reusable scratch for [`multiway_merge_into`]: the ping-pong partner
-/// buffer plus the two segment-boundary tables. Every `Vec` keeps its
-/// capacity across calls, so a warm scratch makes the k-way merge
-/// allocation-free.
+/// Reusable scratch for [`multiway_merge_into`]: the cascade's ping-pong
+/// partner buffer and segment-boundary tables, plus the loser tree's
+/// per-leaf state (run indices, cached heads, cursors, liveness, and the
+/// tournament nodes). Every `Vec` keeps its capacity across calls, so a
+/// warm scratch makes the k-way merge allocation-free on either path.
 #[derive(Clone, Debug, Default)]
 pub struct MergeScratch {
     tmp: Vec<Elem>,
     bounds: Vec<usize>,
     bounds_next: Vec<usize>,
+    live: Vec<u32>,
+    heads: Vec<Elem>,
+    cursor: Vec<usize>,
+    alive: Vec<bool>,
+    tree: Vec<u32>,
 }
 
-/// k-way merge of sorted runs into `out` (cleared first), ping-ponging
-/// between `out` and the scratch buffer: ⌈log k⌉ passes of the
-/// branch-light two-finger merge with **O(total)** buffer space and zero
-/// allocations once the scratch is warm — this replaced a cascade that
-/// copied every run into fresh `Vec`s at every level.
+/// Non-empty-run count at and above which [`multiway_merge_into`] uses
+/// the single-pass tournament loser tree instead of the ⌈log k⌉-pass
+/// two-finger cascade. Below it the cascade's at-most-two extra passes
+/// cost less than the tree's per-element replay; above it the loser tree
+/// cuts memory traffic from O(n · log k) to O(n).
+pub const LOSER_TREE_MIN_RUNS: usize = 8;
+
+/// k-way merge of sorted runs into `out` (cleared first) with **O(total)**
+/// buffer space and zero allocations once the scratch is warm. Dispatches
+/// on the non-empty run count: below [`LOSER_TREE_MIN_RUNS`] the
+/// ping-pong two-finger cascade ([`cascade_merge_into`]), at or above it
+/// the single-pass stable tournament loser tree
+/// ([`loser_tree_merge_into`]) — every element is written to `out`
+/// exactly once instead of once per cascade level.
 ///
-/// The merge tree has exactly the shape of the historical implementation
-/// (adjacent pairs of the non-empty runs, an unpaired last segment carried
-/// verbatim to the next pass), so the output — bit for bit, including the
-/// order of fully-equal elements — is unchanged.
+/// Both paths produce the same output bit for bit: the merged sequence in
+/// full `(key, id)` order with ties between *fully equal* elements
+/// resolved by lower run index (the order the historical adjacent-pair
+/// cascade produced, pinned in `rust/tests/kernel_equivalence.rs`).
 pub fn multiway_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut MergeScratch) {
+    let nonempty = runs.iter().filter(|r| !r.is_empty()).count();
+    if nonempty >= LOSER_TREE_MIN_RUNS {
+        loser_tree_merge_into(runs, out, scratch);
+    } else {
+        cascade_merge_into(runs, out, scratch);
+    }
+}
+
+/// The ⌈log k⌉-pass two-finger cascade: merge adjacent pairs of the
+/// non-empty runs, ping-ponging merged segments between `out` and the
+/// scratch buffer. The small-k path of [`multiway_merge_into`] (public so
+/// the hotpath bench and the equivalence suites can pit it against the
+/// loser tree at any k); the merge tree keeps the historical
+/// adjacent-pair shape, with an unpaired last segment carried verbatim to
+/// the next pass.
+pub fn cascade_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut MergeScratch) {
     out.clear();
     let total: usize = runs.iter().map(|r| r.len()).sum();
     out.reserve(total);
-    let MergeScratch { tmp, bounds, bounds_next } = scratch;
+    let MergeScratch { tmp, bounds, bounds_next, .. } = scratch;
     bounds.clear();
     bounds.push(0);
     // pass 0 reads straight from the input runs (no up-front copy): merge
@@ -142,9 +181,10 @@ pub fn multiway_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut 
         }
     }
     // cascade: merge adjacent segments, ping-ponging between the buffers
+    tmp.clear();
+    tmp.reserve(total); // once — every pass fills at most `total` elements
     while bounds.len() > 2 {
         tmp.clear();
-        tmp.reserve(total);
         bounds_next.clear();
         bounds_next.push(0);
         let segs = bounds.len() - 1;
@@ -164,6 +204,106 @@ pub fn multiway_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut 
         }
         std::mem::swap(out, tmp);
         std::mem::swap(bounds, bounds_next);
+    }
+}
+
+/// Does leaf `a` strictly win a tournament match against leaf `b`?
+/// Exhausted leaves always lose; between live leaves the order is
+/// lexicographic on `(head element, leaf index)`, so fully equal elements
+/// resolve to the lower leaf — leaves are numbered in run order, which is
+/// exactly the equal-element order of the adjacent-pair cascade.
+#[inline]
+fn leaf_beats(a: u32, b: u32, heads: &[Elem], alive: &[bool]) -> bool {
+    match (alive[a as usize], alive[b as usize]) {
+        (true, true) => {
+            let (ha, hb) = (heads[a as usize], heads[b as usize]);
+            ha < hb || (ha == hb && a < b)
+        }
+        (true, false) => true,
+        (false, _) => false,
+    }
+}
+
+/// Build the loser tree below `node`: every internal node stores the
+/// *loser* of the match between its two subtree winners; the subtree
+/// winner is returned. Leaves are `m..2m` (leaf `i` at node `m + i`).
+fn init_loser_tree(node: usize, m: usize, tree: &mut [u32], heads: &[Elem], alive: &[bool]) -> u32 {
+    if node >= m {
+        return (node - m) as u32;
+    }
+    let a = init_loser_tree(2 * node, m, tree, heads, alive);
+    let b = init_loser_tree(2 * node + 1, m, tree, heads, alive);
+    let (winner, loser) = if leaf_beats(a, b, heads, alive) { (a, b) } else { (b, a) };
+    tree[node] = loser;
+    winner
+}
+
+/// Single-pass stable k-way merge on a tournament **loser tree** (the
+/// classic multiway-merge structure, cf. IPS⁴o and the SSSS lineage):
+/// every internal node caches the loser of its subtree match, so
+/// replacing the emitted element replays exactly one leaf-to-root path —
+/// ⌈log k⌉ compares per element against *cached* heads, and each element
+/// is written to `out` exactly once (O(total) memory traffic, vs the
+/// cascade's O(total · log k)).
+///
+/// Ties between fully equal elements resolve by lower run index
+/// ([`leaf_beats`]) — the cascade's equal-element order, so the two paths
+/// of [`multiway_merge_into`] are interchangeable bit for bit. The
+/// large-k path; public for the bench and equivalence suites.
+pub fn loser_tree_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut MergeScratch) {
+    out.clear();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    out.reserve(total);
+    let MergeScratch { live, heads, cursor, alive, tree, .. } = scratch;
+    live.clear();
+    for (i, r) in runs.iter().enumerate() {
+        if !r.is_empty() {
+            live.push(i as u32);
+        }
+    }
+    let k = live.len();
+    if k == 0 {
+        return;
+    }
+    if k == 1 {
+        out.extend_from_slice(runs[live[0] as usize]);
+        return;
+    }
+    // leaves 0..k hold the runs; padding leaves k..m are born exhausted
+    let m = k.next_power_of_two();
+    heads.clear();
+    cursor.clear();
+    alive.clear();
+    for &ri in live.iter() {
+        heads.push(runs[ri as usize][0]);
+        cursor.push(0);
+        alive.push(true);
+    }
+    alive.resize(m, false);
+    tree.clear();
+    tree.resize(m, 0);
+    let mut winner = init_loser_tree(1, m, tree, heads, alive);
+    for _ in 0..total {
+        let leaf = winner as usize;
+        out.push(heads[leaf]);
+        // advance the emitted leaf, then replay its path to the root:
+        // at each ancestor the carried winner meets the stored loser
+        let run = runs[live[leaf] as usize];
+        cursor[leaf] += 1;
+        if cursor[leaf] < run.len() {
+            heads[leaf] = run[cursor[leaf]];
+        } else {
+            alive[leaf] = false;
+        }
+        let mut node = (m + leaf) >> 1;
+        while node >= 1 {
+            let other = tree[node];
+            if leaf_beats(other, winner, heads, alive) {
+                tree[node] = winner;
+                winner = other;
+            }
+            node >>= 1;
+        }
     }
 }
 
@@ -287,5 +427,66 @@ mod tests {
         multiway_merge_into(&refs, &mut out, &mut MergeScratch::default());
         assert_eq!(out.len(), 9);
         assert_eq!(out, multiway_merge(&refs));
+    }
+
+    /// The loser tree and the cascade agree bit for bit at every run
+    /// count straddling the dispatch threshold — duplicate-heavy keys,
+    /// interleaved empty runs, 1-element runs, and runs of fully equal
+    /// elements (same key *and* id) all included, on warm scratches
+    /// reused across calls.
+    #[test]
+    fn loser_tree_matches_cascade_bit_for_bit() {
+        let mut tree_scratch = MergeScratch::default();
+        let mut casc_scratch = MergeScratch::default();
+        let (mut via_tree, mut via_casc) = (Vec::new(), Vec::new());
+        for k in 0..40usize {
+            let runs: Vec<Vec<Elem>> = (0..k)
+                .map(|r| {
+                    let len = (r * 13 + 5) % 11; // includes empty and 1-elem runs
+                    let mut v: Vec<Elem> = (0..len)
+                        .map(|i| {
+                            // heavy duplication across runs: 5 distinct keys,
+                            // 3 distinct ids — plenty of full (key, id) ties
+                            Elem::with_id(((i * 7 + r) % 5) as u64, ((i + r) % 3) as u64)
+                        })
+                        .collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            let refs: Vec<&[Elem]> = runs.iter().map(|r| r.as_slice()).collect();
+            loser_tree_merge_into(&refs, &mut via_tree, &mut tree_scratch);
+            cascade_merge_into(&refs, &mut via_casc, &mut casc_scratch);
+            assert_eq!(via_tree, via_casc, "k = {k}");
+            let mut flat: Vec<Elem> = runs.iter().flatten().copied().collect();
+            flat.sort();
+            assert_eq!(via_tree, flat, "k = {k} vs sort");
+            // the dispatcher picks one of the two — also bit-identical
+            let mut out = Vec::new();
+            multiway_merge_into(&refs, &mut out, &mut MergeScratch::default());
+            assert_eq!(out, via_tree, "k = {k} dispatch");
+        }
+    }
+
+    /// Degenerate loser-tree inputs: no runs, one non-empty run among
+    /// empties, and a non-power-of-two leaf count (padding leaves).
+    #[test]
+    fn loser_tree_degenerate_shapes() {
+        let mut scratch = MergeScratch::default();
+        let mut out = vec![Elem::with_id(9, 9)]; // must be cleared
+        loser_tree_merge_into(&[], &mut out, &mut scratch);
+        assert!(out.is_empty());
+        let a: Vec<Elem> = (0..4).map(|i| Elem::with_id(i, 0)).collect();
+        let refs: Vec<&[Elem]> = vec![&[], &a, &[]];
+        loser_tree_merge_into(&refs, &mut out, &mut scratch);
+        assert_eq!(out, a);
+        // three live leaves → m = 4, one padding leaf in every match
+        let b = vec![Elem::with_id(1, 1)];
+        let c = vec![Elem::with_id(0, 7), Elem::with_id(2, 0)];
+        let refs: Vec<&[Elem]> = vec![&a, &b, &c];
+        loser_tree_merge_into(&refs, &mut out, &mut scratch);
+        let mut flat: Vec<Elem> = refs.iter().copied().flatten().copied().collect();
+        flat.sort();
+        assert_eq!(out, flat);
     }
 }

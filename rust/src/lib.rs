@@ -16,7 +16,9 @@
 //! seconds belong to JUQUEEN.
 //!
 //! The default build is pure Rust: node-local sorting uses pdqsort
-//! ([`localsort::RustSort`]) and nothing outside the standard library is
+//! ([`localsort::RustSort`]) or the digit-skipping LSD radix kernel
+//! ([`localsort::RadixSort`], `--sort-backend radix-lsd` /
+//! `RMPS_SORT_BACKEND`) and nothing outside the standard library is
 //! required. With the off-by-default `xla` cargo feature, the node-local
 //! hot phases (batched bitonic local sort and the Super Scalar Sample Sort
 //! classifier) can instead execute AOT-compiled JAX/Pallas kernels through

@@ -1,12 +1,24 @@
 //! Node-local sort backends.
 //!
-//! Every algorithm starts by sorting each PE's fragment. Two backends:
-//! pure-Rust pdqsort ([`RustSort`]) and — behind the off-by-default `xla`
-//! cargo feature — the PJRT-executed Pallas bitonic network (`XlaSort` in
+//! Every algorithm starts by sorting each PE's fragment. Three backends:
+//! pure-Rust pdqsort ([`RustSort`]), an LSD radix sort on the packed
+//! `(key, id)` bytes with constant-digit skipping ([`RadixSort`] — on the
+//! 32-bit key ranges and small origin ids the generators produce, most of
+//! the 16 byte passes vanish, the IPS⁴o observation for fixed-width
+//! integer keys), and — behind the off-by-default `xla` cargo feature —
+//! the PJRT-executed Pallas bitonic network (`XlaSort` in
 //! [`crate::runtime`]), which batches all fragments of a round into one
 //! executable launch — the AOT artifact on the hot path.
 //!
-//! The *virtual* cost charged to PE clocks is the same either way
+//! The built-in host backends are selectable by name: programmatically
+//! via [`crate::algorithms::Runner::backend`] / [`backend_by_name`],
+//! process-wide via [`set_default_backend`] (the CLI `--sort-backend`
+//! flag), or by the `RMPS_SORT_BACKEND` environment variable. Every
+//! backend produces the identical ascending `(key, id)` sequence — the
+//! order is a strict total order, so the choice can never change a
+//! `RunReport` (pinned in `rust/tests/kernel_equivalence.rs`).
+//!
+//! The *virtual* cost charged to PE clocks is the same in every case
 //! (`cmp·m·log m`); the backend choice affects only host wallclock, which
 //! is what the §Perf benchmarks measure.
 
@@ -47,6 +59,217 @@ impl SortBackend for RustSort {
     fn par_run_sort(&self) -> Option<fn(&mut Vec<Elem>)> {
         Some(|run| run.sort_unstable())
     }
+}
+
+/// Pure-Rust LSD radix backend: byte-wise counting sort over the packed
+/// `(key, id)` 128-bit value, least-significant digit first, skipping
+/// every digit position whose byte is constant across the run (detected
+/// with one cheap OR/AND prescan). Runs below [`RADIX_MIN_RUN`] fall back
+/// to pdqsort — identical output either way, since ascending `(key, id)`
+/// is a strict total order.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct RadixSort;
+
+/// Run length below which [`RadixSort`] delegates to pdqsort: the fixed
+/// histogram/scatter machinery only amortizes once a run clearly exceeds
+/// the 256-entry digit tables.
+pub const RADIX_MIN_RUN: usize = 128;
+
+impl SortBackend for RadixSort {
+    fn sort_runs(&mut self, runs: &mut [&mut Vec<Elem>]) {
+        for run in runs {
+            radix_sort_run(run);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "radix-lsd"
+    }
+
+    fn par_run_sort(&self) -> Option<fn(&mut Vec<Elem>)> {
+        Some(radix_sort_run)
+    }
+}
+
+std::thread_local! {
+    /// Ping-pong partner buffer for [`radix_sort_run`]. Thread-local so
+    /// the stateless `par_run_sort` fn stays allocation-free on warm
+    /// pool workers (the workers are persistent — see `crate::exec`).
+    static RADIX_TMP: std::cell::RefCell<Vec<Elem>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Sort one run ascending in `(key, id)` order with the digit-skipping
+/// LSD radix kernel (the [`RadixSort`] per-run entry point).
+pub fn radix_sort_run(run: &mut Vec<Elem>) {
+    RADIX_TMP.with(|tmp| radix_sort(run, &mut tmp.borrow_mut()));
+}
+
+/// One scatter pass of the LSD radix sort: distribute `src` into `dst`
+/// by byte `d` of the packed `(key, id)` value, using `cur` as the
+/// per-byte write cursors (already prefix-summed). Stable.
+#[inline]
+fn radix_scatter(src: &[Elem], dst: &mut [Elem], d: u32, cur: &mut [usize; 256]) {
+    let shift = 8 * d;
+    if d < 8 {
+        for e in src {
+            let b = ((e.id >> shift) & 0xFF) as usize;
+            dst[cur[b]] = *e;
+            cur[b] += 1;
+        }
+    } else {
+        let shift = shift - 64;
+        for e in src {
+            let b = ((e.key >> shift) & 0xFF) as usize;
+            dst[cur[b]] = *e;
+            cur[b] += 1;
+        }
+    }
+}
+
+/// The radix kernel body: OR/AND prescan finds the varying byte
+/// positions, one histogram pass fills the 256-entry tables of **all**
+/// varying digits at once (they stay cache-resident), then one stable
+/// scatter per varying digit ping-pongs between `v` and `tmp`.
+fn radix_sort(v: &mut [Elem], tmp: &mut Vec<Elem>) {
+    let n = v.len();
+    if n < RADIX_MIN_RUN {
+        v.sort_unstable();
+        return;
+    }
+    // a byte position is constant across the run iff OR and AND agree on
+    // it — on 32-bit key ranges with small ids this kills most digits
+    let (mut all_or, mut all_and) = (0u128, !0u128);
+    for e in v.iter() {
+        let x = ((e.key as u128) << 64) | e.id as u128;
+        all_or |= x;
+        all_and &= x;
+    }
+    let varying = all_or ^ all_and;
+    let mut digits = [0u32; 16];
+    let mut nd = 0usize;
+    for d in 0..16u32 {
+        if (varying >> (8 * d)) & 0xFF != 0 {
+            digits[nd] = d;
+            nd += 1;
+        }
+    }
+    if nd == 0 {
+        return; // every element identical — already sorted
+    }
+    let digits = &digits[..nd];
+    // histograms of every varying digit in one pass over the elements
+    let mut hist = vec![[0usize; 256]; nd];
+    for e in v.iter() {
+        let x = ((e.key as u128) << 64) | e.id as u128;
+        for (h, &d) in hist.iter_mut().zip(digits) {
+            h[((x >> (8 * d)) & 0xFF) as usize] += 1;
+        }
+    }
+    // grow-only resize: every slot of tmp[..n] is written before it is
+    // read, so stale contents from a previous (longer) run never surface
+    if tmp.len() < n {
+        tmp.resize(n, Elem::with_id(0, 0));
+    }
+    let tmp = &mut tmp[..n];
+    let mut in_v = true;
+    for (h, &d) in hist.iter_mut().zip(digits) {
+        // counts → exclusive prefix sums → write cursors
+        let mut sum = 0usize;
+        for c in h.iter_mut() {
+            let count = *c;
+            *c = sum;
+            sum += count;
+        }
+        if in_v {
+            radix_scatter(v, tmp, d, h);
+        } else {
+            radix_scatter(tmp, v, d, h);
+        }
+        in_v = !in_v;
+    }
+    if !in_v {
+        v.copy_from_slice(tmp);
+    }
+}
+
+/// Backend selection tag: 1 = [`RustSort`], 2 = [`RadixSort`]; 0 = no
+/// process-wide override installed.
+static DEFAULT_BACKEND: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// The `name()`s of the built-in host backends (the values
+/// [`backend_by_name`] accepts, aliases aside) — for CLI help and error
+/// messages.
+pub const BACKEND_NAMES: [&str; 2] = ["rust-pdqsort", "radix-lsd"];
+
+/// Loose name equality in the [`crate::input::Distribution::parse`]
+/// style: ASCII case-insensitive, `-`/`_` ignored, allocation-free.
+fn name_eq(a: &str, b: &str) -> bool {
+    let mut ai = a.bytes().filter(|c| *c != b'-' && *c != b'_').map(|c| c.to_ascii_lowercase());
+    let mut bi = b.bytes().filter(|c| *c != b'-' && *c != b'_').map(|c| c.to_ascii_lowercase());
+    loop {
+        match (ai.next(), bi.next()) {
+            (None, None) => return true,
+            (Some(x), Some(y)) if x == y => {}
+            _ => return false,
+        }
+    }
+}
+
+fn backend_tag(name: &str) -> Option<usize> {
+    if name_eq(name, "rust-pdqsort") || name_eq(name, "pdqsort") {
+        Some(1)
+    } else if name_eq(name, "radix-lsd") || name_eq(name, "radix") {
+        Some(2)
+    } else {
+        None
+    }
+}
+
+fn backend_from_tag(tag: usize) -> Box<dyn SortBackend> {
+    match tag {
+        2 => Box::new(RadixSort),
+        _ => Box::new(RustSort),
+    }
+}
+
+/// A boxed built-in backend by `name()` (or the short aliases `pdqsort` /
+/// `radix`); `None` for unknown names. Matching is case-insensitive and
+/// ignores dashes/underscores, like `Distribution::parse`.
+pub fn backend_by_name(name: &str) -> Option<Box<dyn SortBackend>> {
+    backend_tag(name).map(backend_from_tag)
+}
+
+/// Install a process-wide default sort backend (what the CLI
+/// `--sort-backend` flag calls); returns `false` and changes nothing if
+/// the name is unknown. Takes precedence over `RMPS_SORT_BACKEND`.
+/// Affects [`default_backend`] callers constructed afterwards (every
+/// [`crate::algorithms::Runner::new`]). Host wallclock only — outputs
+/// and reports are bit-identical for every backend.
+pub fn set_default_backend(name: &str) -> bool {
+    match backend_tag(name) {
+        Some(tag) => {
+            DEFAULT_BACKEND.store(tag, std::sync::atomic::Ordering::Relaxed);
+            true
+        }
+        None => false,
+    }
+}
+
+/// The process default backend: the [`set_default_backend`] override if
+/// one was installed, else `RMPS_SORT_BACKEND` (parsed once on first
+/// use; unknown names are ignored), else [`RustSort`] — the backend
+/// every `Runner` starts with.
+pub fn default_backend() -> Box<dyn SortBackend> {
+    let over = DEFAULT_BACKEND.load(std::sync::atomic::Ordering::Relaxed);
+    if over > 0 {
+        return backend_from_tag(over);
+    }
+    static ENV: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let tag = *ENV.get_or_init(|| {
+        std::env::var("RMPS_SORT_BACKEND").ok().and_then(|s| backend_tag(&s)).unwrap_or(1)
+    });
+    backend_from_tag(tag)
 }
 
 /// Sort all of a machine's per-PE fragments with `backend`, charging each
@@ -152,5 +375,77 @@ mod tests {
             batch_mach.stats.local_work.to_bits(),
             par_mach.stats.local_work.to_bits()
         );
+    }
+
+    /// Radix and pdqsort agree element for element on adversarial runs:
+    /// random 64-bit keys, duplicate-heavy, all-equal (key *and* id),
+    /// boundary values, tiny runs below the pdqsort fallback threshold,
+    /// and runs straddling [`RADIX_MIN_RUN`].
+    #[test]
+    fn radix_matches_pdqsort_bitwise() {
+        let mut rng = Rng::seeded(11, 4);
+        let cases: Vec<Vec<Elem>> = vec![
+            Vec::new(),
+            vec![Elem::with_id(3, 9)],
+            (0..RADIX_MIN_RUN - 1).map(|i| Elem::new(rng.next_u64(), 0, i)).collect(),
+            (0..RADIX_MIN_RUN).map(|i| Elem::new(rng.next_u64(), 1, i)).collect(),
+            (0..4096).map(|i| Elem::new(rng.next_u64(), 2, i)).collect(),
+            // 32-bit key range, small ids — the generator shape that
+            // makes most digit passes constant
+            (0..4096).map(|i| Elem::new(rng.next_u64() >> 32, 3, i)).collect(),
+            // duplicate-heavy and all-equal
+            (0..2048).map(|i| Elem::new(rng.next_u64() % 7, 4, i)).collect(),
+            vec![Elem::with_id(5, 5); 1024],
+            // boundary values in both halves of the packed word
+            (0..1024)
+                .map(|i| {
+                    let k = [0u64, 1, u64::MAX, u64::MAX - 1][i % 4];
+                    Elem::with_id(k, [u64::MAX, 0, 1 << 40, 7][(i / 4) % 4])
+                })
+                .collect(),
+        ];
+        for (ci, case) in cases.into_iter().enumerate() {
+            let mut via_radix = case.clone();
+            let mut via_pdq = case;
+            radix_sort_run(&mut via_radix);
+            via_pdq.sort_unstable();
+            assert_eq!(via_radix, via_pdq, "case {ci}");
+            // warm thread-local tmp: a second (smaller) run must not see
+            // stale slots
+            let mut small: Vec<Elem> =
+                (0..RADIX_MIN_RUN + 3).map(|i| Elem::new(rng.next_u64(), 9, i)).collect();
+            let mut expect = small.clone();
+            radix_sort_run(&mut small);
+            expect.sort_unstable();
+            assert_eq!(small, expect, "case {ci} warm-tmp rerun");
+        }
+    }
+
+    /// The backend registry: both built-ins resolve by name (loosely
+    /// matched), unknown names don't, and the process default follows
+    /// [`set_default_backend`] — with `""` impossible, tag resets are
+    /// covered by restoring pdqsort at the end.
+    #[test]
+    fn backend_name_lookup_and_default() {
+        for (name, expect) in
+            [("rust-pdqsort", "rust-pdqsort"), ("PDQSort", "rust-pdqsort"), ("radix-lsd", "radix-lsd"), ("RADIX", "radix-lsd"), ("radix_lsd", "radix-lsd")]
+        {
+            let mut b = backend_by_name(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(b.name(), expect, "{name}");
+            // every resolved backend actually sorts
+            let mut runs = vec![vec![Elem::with_id(2, 0), Elem::with_id(1, 0)]];
+            let mut refs: Vec<&mut Vec<Elem>> = runs.iter_mut().collect();
+            b.sort_runs(&mut refs);
+            assert!(crate::elements::is_sorted(&runs[0]));
+        }
+        assert!(backend_by_name("timsort").is_none());
+        assert!(!set_default_backend("timsort"), "unknown names rejected");
+        assert!(set_default_backend("radix-lsd"));
+        assert_eq!(default_backend().name(), "radix-lsd");
+        assert!(set_default_backend("rust-pdqsort"));
+        assert_eq!(default_backend().name(), "rust-pdqsort");
+        for name in BACKEND_NAMES {
+            assert!(backend_by_name(name).is_some(), "{name} listed but not resolvable");
+        }
     }
 }

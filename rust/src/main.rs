@@ -13,7 +13,7 @@ use rmps::algorithms::{find_sorter, registry, Runner, Sorter};
 use rmps::config::RunConfig;
 use rmps::experiments::{self, NpPoint};
 use rmps::input::{generate, Distribution};
-use rmps::localsort::{RustSort, SortBackend};
+use rmps::localsort::SortBackend;
 use rmps::model::CostModel;
 
 /// Minimal CLI error: `Debug` prints the bare message, which is what
@@ -111,10 +111,13 @@ MACHINE FLAGS (all commands)
                    § Two-level parallelism)
   --par-min-work W minimum total-work hint (elements) before a per-PE
                    round engages pool workers; smaller rounds run inline
-                   (default: RMPS_PAR_MIN_WORK, else 4096 — the measured
+                   (default: RMPS_PAR_MIN_WORK, else 8192 — the measured
                    crossover tracked by the hotpath bench; 1 = always
                    pooled. Host scheduling only: results are
                    bit-identical for every W)
+  --sort-backend B node-local sort kernel: rust-pdqsort|radix-lsd
+                   (default: RMPS_SORT_BACKEND, else rust-pdqsort;
+                   results are bit-identical for every backend)
   --xla-local-sort use the PJRT/XLA batched local sorter
                    (needs artifacts/ and a build with --features xla)
 ";
@@ -194,7 +197,8 @@ fn backend(a: &Args) -> Result<Box<dyn SortBackend>> {
             );
         }
     }
-    Ok(Box::new(RustSort))
+    // the process default: --sort-backend / RMPS_SORT_BACKEND, else pdqsort
+    Ok(rmps::localsort::default_backend())
 }
 
 fn dense_points(max_log: u32) -> Vec<NpPoint> {
@@ -218,6 +222,14 @@ fn main() -> Result<()> {
     let par_min_work: usize = a.get("par-min-work", 0usize)?;
     if par_min_work > 0 {
         rmps::sim::set_par_min_work(par_min_work);
+    }
+    // "" = "not given": keep the RMPS_SORT_BACKEND / pdqsort default
+    let sort_backend = a.get_str("sort-backend", "");
+    if !sort_backend.is_empty() && !rmps::localsort::set_default_backend(&sort_backend) {
+        bail!(
+            "unknown sort backend `{sort_backend}`; built-ins: {}",
+            rmps::localsort::BACKEND_NAMES.join(", ")
+        );
     }
 
     match cmd.as_str() {

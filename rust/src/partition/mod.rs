@@ -2,12 +2,29 @@
 //! tie-breaking extension of App. G — the local phase of RAMS and SSort.
 //!
 //! The classifier is a branchless descent of a perfect splitter tree
-//! (eytzinger layout): `log k` fused compare/select steps per element. The
-//! tie-breaking variant descends on strict lexicographic `(key, id)` order,
-//! which *simulates unique keys* — the reason RAMS survives DeterDupl/Zero.
+//! (eytzinger layout): `log k` fused compare/select steps per element.
+//! Following the SSSS playbook, the descent keeps **four independent
+//! elements in flight** per loop ([`SplitterTree::classify_key4`] /
+//! [`SplitterTree::classify_tb4`]): the four cursor chains have no data
+//! dependence on each other, so their tree loads overlap instead of
+//! serializing on one chain — instruction-level parallelism the scalar
+//! descent leaves on the table. The tie-breaking variant descends on
+//! strict lexicographic `(key, id)` order, which *simulates unique keys*
+//! — the reason RAMS survives DeterDupl/Zero.
+//!
+//! Placement is the SSSS count → exclusive-prefix-sum → scatter scheme
+//! ([`partition_scatter`]): one classify pass records per-element labels
+//! and per-bucket counts, the prefix sums turn the counts into bucket
+//! boundaries, and one scatter pass writes every element to its final
+//! slot of a **single contiguous buffer** — stable within buckets, no
+//! per-bucket `Vec` growth on the hot path. [`partition`] /
+//! [`partition_ctx`] slice per-bucket `Vec`s out of that buffer, so
+//! Exchange `post` callers keep their bucket-vector API.
 //!
 //! Mirrors `python/compile/kernels/classify.py` (the PJRT-accelerated
-//! version); both are validated against each other in `rust/tests/`.
+//! version); both are validated against each other in `rust/tests/`
+//! (and bit-for-bit against the verbatim pre-rewrite kernel in
+//! `rust/tests/kernel_equivalence.rs`).
 
 use crate::elements::{Elem, Key};
 
@@ -88,6 +105,25 @@ impl SplitterTree {
         t - (self.s + 1)
     }
 
+    /// Four [`SplitterTree::classify_key`] descents at once: one shared
+    /// `h`-step loop advances four independent cursors, so the four tree
+    /// loads of each level issue in parallel (ILP) instead of waiting on
+    /// one serial compare→load chain. Same result as four scalar calls.
+    #[inline]
+    pub fn classify_key4(&self, k: [Key; 4]) -> [usize; 4] {
+        let mut t = [1usize; 4];
+        for _ in 0..self.h {
+            t = [
+                2 * t[0] + usize::from(self.keys[t[0]] < k[0]),
+                2 * t[1] + usize::from(self.keys[t[1]] < k[1]),
+                2 * t[2] + usize::from(self.keys[t[2]] < k[2]),
+                2 * t[3] + usize::from(self.keys[t[3]] < k[3]),
+            ];
+        }
+        let nb = self.s + 1;
+        [t[0] - nb, t[1] - nb, t[2] - nb, t[3] - nb]
+    }
+
     /// Tie-breaking bucket index on strict lexicographic `(key, id)` order
     /// (App. G): equal keys spread across buckets by origin id. The
     /// (key, id) pair is compared as one packed u128 — branchless.
@@ -100,63 +136,157 @@ impl SplitterTree {
         }
         t - (self.s + 1)
     }
+
+    /// Four [`SplitterTree::classify_tb`] descents at once — the packed
+    /// u128 compare with four independent cursors per level (see
+    /// [`SplitterTree::classify_key4`]). Same result as four scalar calls.
+    #[inline]
+    pub fn classify_tb4(&self, e: [&Elem; 4]) -> [usize; 4] {
+        let k = [pack(e[0]), pack(e[1]), pack(e[2]), pack(e[3])];
+        let mut t = [1usize; 4];
+        for _ in 0..self.h {
+            t = [
+                2 * t[0] + usize::from(self.packed[t[0]] < k[0]),
+                2 * t[1] + usize::from(self.packed[t[1]] < k[1]),
+                2 * t[2] + usize::from(self.packed[t[2]] < k[2]),
+                2 * t[3] + usize::from(self.packed[t[3]] < k[3]),
+            ];
+        }
+        let nb = self.s + 1;
+        [t[0] - nb, t[1] - nb, t[2] - nb, t[3] - nb]
+    }
+}
+
+/// Reusable scratch for [`partition_scatter`]: the per-element label vec,
+/// the bucket-boundary table, the scatter write cursors, and the
+/// contiguous output buffer. Every `Vec` keeps its capacity across calls,
+/// so a warm scratch makes the whole partition kernel allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct PartitionScratch {
+    labels: Vec<u32>,
+    bounds: Vec<usize>,
+    cursors: Vec<usize>,
+    scatter: Vec<Elem>,
+}
+
+/// Partition `data` into bucket-contiguous stable order inside one
+/// buffer: classify every element (four descents in flight), turn the
+/// bucket counts into exclusive prefix sums, and scatter each element to
+/// its final slot. Returns the scattered elements and the `nb + 1`
+/// bucket boundaries (`buf[bounds[b]..bounds[b + 1]]` is bucket `b`,
+/// input order preserved inside each bucket).
+///
+/// This is the zero-copy core of [`partition`] / [`partition_ctx`]; call
+/// it directly when bucket slices are enough (no per-bucket `Vec`s).
+pub fn partition_scatter<'a>(
+    data: &[Elem],
+    tree: &SplitterTree,
+    tie_break: bool,
+    scratch: &'a mut PartitionScratch,
+) -> (&'a [Elem], &'a [usize]) {
+    let nb = tree.buckets();
+    let n = data.len();
+    let PartitionScratch { labels, bounds, cursors, scatter } = scratch;
+
+    // pass 1: classify — labels recorded for the scatter, counts tallied
+    // into bounds[1..] (shifted one slot so the in-place scan below turns
+    // them directly into exclusive prefix sums)
+    labels.clear();
+    labels.reserve(n);
+    bounds.clear();
+    bounds.resize(nb + 1, 0);
+    {
+        let counts = &mut bounds[1..];
+        let mut quads = data.chunks_exact(4);
+        if tie_break {
+            for q in &mut quads {
+                for b in tree.classify_tb4([&q[0], &q[1], &q[2], &q[3]]) {
+                    labels.push(b as u32);
+                    counts[b] += 1;
+                }
+            }
+            for e in quads.remainder() {
+                let b = tree.classify_tb(e);
+                labels.push(b as u32);
+                counts[b] += 1;
+            }
+        } else {
+            for q in &mut quads {
+                for b in tree.classify_key4([q[0].key, q[1].key, q[2].key, q[3].key]) {
+                    labels.push(b as u32);
+                    counts[b] += 1;
+                }
+            }
+            for e in quads.remainder() {
+                let b = tree.classify_key(e.key);
+                labels.push(b as u32);
+                counts[b] += 1;
+            }
+        }
+    }
+
+    // exclusive prefix sums in place: bounds[b] = first slot of bucket b
+    for b in 1..=nb {
+        bounds[b] += bounds[b - 1];
+    }
+
+    // pass 2: scatter into one contiguous buffer, one write cursor per
+    // bucket — stable, every slot in 0..n written exactly once (so the
+    // grow-only resize below never exposes stale contents)
+    if scatter.len() < n {
+        scatter.resize(n, Elem::with_id(0, 0));
+    }
+    cursors.clear();
+    cursors.extend_from_slice(&bounds[..nb]);
+    for (e, &b) in data.iter().zip(labels.iter()) {
+        let c = &mut cursors[b as usize];
+        scatter[*c] = *e;
+        *c += 1;
+    }
+    (&scatter[..n], &bounds[..])
 }
 
 /// Partition `data` into `tree.buckets()` buckets. `tie_break` selects the
 /// robust (App. G) or nonrobust classifier. Preserves input order inside
 /// each bucket (stable).
 pub fn partition(data: &[Elem], tree: &SplitterTree, tie_break: bool) -> Vec<Vec<Elem>> {
-    partition_with(data, tree, tie_break, Vec::with_capacity)
+    let mut scratch = PartitionScratch::default();
+    let (buf, bounds) = partition_scatter(data, tree, tie_break, &mut scratch);
+    bounds
+        .windows(2)
+        .map(|w| {
+            let seg = &buf[w[0]..w[1]];
+            let mut v = Vec::with_capacity(seg.len());
+            v.extend_from_slice(seg);
+            v
+        })
+        .collect()
 }
 
-/// [`partition`] with bucket vectors drawn from a pool-scheduled PE
-/// task's buffer stash ([`crate::sim::PeCtx::take_buf`], pre-seeded from
-/// the machine's data-plane pool via [`crate::sim::ParSpec::bufs`]) — the
-/// hot-path variant for algorithms that classify every element per
-/// superstep and ship the buckets through an [`crate::sim::Exchange`]
-/// round (RAMS): the per-PE partition phases run concurrently and the
-/// buffers cycle back to the pool when the delivered mail is recycled, so
-/// steady-state levels allocate nothing for buckets. Bucket contents and
-/// order are identical to [`partition`].
+/// [`partition`] with the scatter scratch held by a pool-scheduled PE
+/// task ([`crate::sim::PeCtx::partition_scratch`]) and the bucket vectors
+/// drawn from its buffer stash ([`crate::sim::PeCtx::take_buf`],
+/// pre-seeded from the machine's data-plane pool via
+/// [`crate::sim::ParSpec::bufs`]) — the hot-path variant for algorithms
+/// that classify every element per superstep and ship the buckets through
+/// an [`crate::sim::Exchange`] round (RAMS, AMS): the per-PE partition
+/// phases run concurrently, each bucket is one contiguous copy out of the
+/// scattered buffer, and the buffers cycle back to the pool when the
+/// delivered mail is recycled, so steady-state levels allocate nothing
+/// for buckets. Bucket contents and order are identical to [`partition`].
 pub fn partition_ctx(
     ctx: &mut crate::sim::PeCtx,
     data: &[Elem],
     tree: &SplitterTree,
     tie_break: bool,
 ) -> Vec<Vec<Elem>> {
-    partition_with(data, tree, tie_break, |c| {
-        let mut buf = ctx.take_buf();
-        buf.reserve(c);
-        buf
-    })
-}
-
-fn partition_with(
-    data: &[Elem],
-    tree: &SplitterTree,
-    tie_break: bool,
-    mut bucket_buf: impl FnMut(usize) -> Vec<Elem>,
-) -> Vec<Vec<Elem>> {
     let nb = tree.buckets();
-    // two passes: count then place — cache-friendlier than push-per-bucket
-    let mut counts = vec![0usize; nb];
-    let mut labels = Vec::with_capacity(data.len());
-    if tie_break {
-        for e in data {
-            let b = tree.classify_tb(e);
-            labels.push(b as u32);
-            counts[b] += 1;
-        }
-    } else {
-        for e in data {
-            let b = tree.classify_key(e.key);
-            labels.push(b as u32);
-            counts[b] += 1;
-        }
-    }
-    let mut out: Vec<Vec<Elem>> = counts.iter().map(|&c| bucket_buf(c)).collect();
-    for (e, &b) in data.iter().zip(&labels) {
-        out[b as usize].push(*e);
+    let mut out: Vec<Vec<Elem>> = (0..nb).map(|_| ctx.take_buf()).collect();
+    let (buf, bounds) = partition_scatter(data, tree, tie_break, ctx.partition_scratch());
+    for (b, v) in out.iter_mut().enumerate() {
+        let seg = &buf[bounds[b]..bounds[b + 1]];
+        v.reserve(seg.len());
+        v.extend_from_slice(seg);
     }
     out
 }
@@ -181,6 +311,7 @@ pub fn pick_splitters(sample: &[Elem], s: usize) -> Vec<Elem> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     fn elems(keys: &[u64]) -> Vec<Elem> {
         keys.iter().enumerate().map(|(i, &k)| Elem::new(k, 0, i)).collect()
@@ -219,6 +350,73 @@ mod tests {
         // keys off the splitter value ignore ids
         assert_eq!(tree.classify_tb(&Elem::with_id(4, 999)), 0);
         assert_eq!(tree.classify_tb(&Elem::with_id(6, 0)), 3);
+    }
+
+    /// The 4-lane descents agree with four scalar descents for every tree
+    /// height — random keys, duplicate-heavy keys, and exact splitter
+    /// hits (the `<` vs `<=` boundary cases).
+    #[test]
+    fn lane4_matches_scalar_descent() {
+        let mut rng = Rng::seeded(7, 7);
+        for s in [0usize, 1, 3, 7, 15, 63, 127] {
+            let sample: Vec<Elem> = (0..256)
+                .map(|i| Elem::with_id(rng.next_u64() % 97, i))
+                .collect();
+            let mut sample = sample;
+            sample.sort();
+            let spl = pick_splitters(&sample, s);
+            let tree = SplitterTree::new(&spl);
+            let data: Vec<Elem> = (0..64)
+                .map(|i| {
+                    // mix random probes with exact splitter values
+                    if i % 3 == 0 && !spl.is_empty() {
+                        spl[i % spl.len()]
+                    } else {
+                        Elem::with_id(rng.next_u64() % 97, rng.next_u64() % 50)
+                    }
+                })
+                .collect();
+            for q in data.chunks_exact(4) {
+                let keys4 = tree.classify_key4([q[0].key, q[1].key, q[2].key, q[3].key]);
+                let tb4 = tree.classify_tb4([&q[0], &q[1], &q[2], &q[3]]);
+                for l in 0..4 {
+                    assert_eq!(keys4[l], tree.classify_key(q[l].key), "s={s} lane {l}");
+                    assert_eq!(tb4[l], tree.classify_tb(&q[l]), "s={s} lane {l}");
+                }
+            }
+        }
+    }
+
+    /// The scatter core: boundaries are monotone, cover the input, and
+    /// each bucket segment preserves input order (stability) — on a warm
+    /// scratch reused across differently-sized calls.
+    #[test]
+    fn partition_scatter_bounds_and_stability() {
+        let mut rng = Rng::seeded(3, 9);
+        let mut scratch = PartitionScratch::default();
+        for n in [0usize, 1, 2, 3, 4, 5, 63, 64, 200, 17] {
+            let data: Vec<Elem> =
+                (0..n).map(|i| Elem::new(rng.next_u64() % 31, 0, i)).collect();
+            let mut sample = data.clone();
+            sample.sort();
+            let spl = pick_splitters(&sample, 7);
+            let tree = SplitterTree::new(&spl);
+            let (buf, bounds) = partition_scatter(&data, &tree, true, &mut scratch);
+            assert_eq!(bounds.len(), tree.buckets() + 1);
+            assert_eq!(bounds[0], 0);
+            assert_eq!(*bounds.last().unwrap(), n, "n={n}");
+            assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+            for b in 0..tree.buckets() {
+                let seg = &buf[bounds[b]..bounds[b + 1]];
+                // same subsequence as a filter of the input (stability)
+                let expect: Vec<Elem> = data
+                    .iter()
+                    .filter(|e| tree.classify_tb(e) == b)
+                    .copied()
+                    .collect();
+                assert_eq!(seg, expect.as_slice(), "n={n} bucket {b}");
+            }
+        }
     }
 
     #[test]

@@ -205,9 +205,11 @@ impl PlanePool {
 /// over the worker pool (see [`Machine::par_deliver_min_runs`]); below
 /// it the sequential drain wins — each move is only a ~32-byte pointer
 /// relocation, so the break-even sits higher than for element-touching
-/// PE tasks. `4 ×` the default 4096-element threshold keeps the
-/// long-standing `1 << 14`-runs cutoff.
-const PAR_DELIVER_RUNS_FACTOR: usize = 4;
+/// PE tasks. `2 ×` the default 8192-element threshold keeps the
+/// long-standing `1 << 14`-runs cutoff now that [`crate::sim::PAR_MIN_WORK`]
+/// is re-pinned to CI's measured crossover (it was `4 ×` over the old
+/// 4096 default — same product, one knob still tunes both gates).
+const PAR_DELIVER_RUNS_FACTOR: usize = 2;
 
 /// Rounds in the 1-factorization of the complete graph on `q`
 /// participants: `q − 1` for even `q` (every round a perfect matching),

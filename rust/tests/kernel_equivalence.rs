@@ -1,0 +1,344 @@
+//! The hot-kernel rewrite contract (scatter partition, loser-tree merge,
+//! radix local sort): every output must be **bit-identical** to what the
+//! pre-rewrite kernels produced.
+//!
+//! The `reference` module below holds *verbatim* copies of the replaced
+//! implementations — the label-vec + per-bucket-push `partition_with`,
+//! the ping-pong cascade `multiway_merge_into` (including its historic
+//! per-pass `reserve`), and the pdqsort run sort — frozen at the commit
+//! that rewrote them. Each test drives the old and new kernel over the
+//! same randomized grids (duplicate-heavy, all-equal, empty-run, and
+//! 1-element cases included) and asserts equality of every byte.
+//!
+//! The final test pins the whole stack: `RadixSort` vs `RustSort` as the
+//! `Runner` backend must yield field-identical `RunReport`s across all
+//! FIG1 sorters (`wall_ms` exempt — host wallclock by nature).
+
+use rmps::algorithms::{Algorithm, Runner, RunReport};
+use rmps::config::RunConfig;
+use rmps::elements::{
+    cascade_merge_into, loser_tree_merge_into, multiway_merge_into, Elem, MergeScratch,
+    LOSER_TREE_MIN_RUNS,
+};
+use rmps::input::{generate, Distribution};
+use rmps::localsort::{radix_sort_run, RadixSort, RustSort, RADIX_MIN_RUN};
+use rmps::partition::{
+    partition, partition_scatter, pick_splitters, PartitionScratch, SplitterTree,
+};
+use rmps::rng::Rng;
+
+/// Pre-rewrite kernels, copied verbatim (modulo `pub` and paths) from the
+/// last commit before the scatter/loser-tree/radix rewrite. Do not
+/// "improve" these: their whole value is being the frozen original.
+mod reference {
+    use rmps::elements::Elem;
+    use rmps::partition::SplitterTree;
+
+    /// Verbatim old `partition::partition_with`: label vec + counted
+    /// per-bucket `Vec::push`, scalar classifier descents.
+    fn partition_with(
+        data: &[Elem],
+        tree: &SplitterTree,
+        tie_break: bool,
+        mut bucket_buf: impl FnMut(usize) -> Vec<Elem>,
+    ) -> Vec<Vec<Elem>> {
+        let nb = tree.buckets();
+        // two passes: count then place — cache-friendlier than push-per-bucket
+        let mut counts = vec![0usize; nb];
+        let mut labels = Vec::with_capacity(data.len());
+        if tie_break {
+            for e in data {
+                let b = tree.classify_tb(e);
+                labels.push(b as u32);
+                counts[b] += 1;
+            }
+        } else {
+            for e in data {
+                let b = tree.classify_key(e.key);
+                labels.push(b as u32);
+                counts[b] += 1;
+            }
+        }
+        let mut out: Vec<Vec<Elem>> = counts.iter().map(|&c| bucket_buf(c)).collect();
+        for (e, &b) in data.iter().zip(&labels) {
+            out[b as usize].push(*e);
+        }
+        out
+    }
+
+    pub fn partition(data: &[Elem], tree: &SplitterTree, tie_break: bool) -> Vec<Vec<Elem>> {
+        partition_with(data, tree, tie_break, Vec::with_capacity)
+    }
+
+    /// Verbatim old `elements::merge_append`.
+    fn merge_append(a: &[Elem], b: &[Elem], out: &mut Vec<Elem>) {
+        out.reserve(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            // `<=` keeps the merge stable in (key, id) order.
+            if a[i] <= b[j] {
+                out.push(a[i]);
+                i += 1;
+            } else {
+                out.push(b[j]);
+                j += 1;
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+    }
+
+    /// Verbatim old `elements::MergeScratch` (pre loser-tree fields).
+    #[derive(Clone, Debug, Default)]
+    pub struct MergeScratch {
+        tmp: Vec<Elem>,
+        bounds: Vec<usize>,
+        bounds_next: Vec<usize>,
+    }
+
+    /// Verbatim old `elements::multiway_merge_into`: the ⌈log k⌉-pass
+    /// ping-pong cascade, per-pass `tmp.reserve(total)` and all.
+    pub fn multiway_merge_into(runs: &[&[Elem]], out: &mut Vec<Elem>, scratch: &mut MergeScratch) {
+        out.clear();
+        let total: usize = runs.iter().map(|r| r.len()).sum();
+        out.reserve(total);
+        let MergeScratch { tmp, bounds, bounds_next } = scratch;
+        bounds.clear();
+        bounds.push(0);
+        // pass 0 reads straight from the input runs (no up-front copy): merge
+        // adjacent non-empty pairs into `out`, recording segment boundaries
+        {
+            let mut it = runs.iter().filter(|r| !r.is_empty());
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => merge_append(a, b, out),
+                    None => out.extend_from_slice(a),
+                }
+                bounds.push(out.len());
+            }
+        }
+        // cascade: merge adjacent segments, ping-ponging between the buffers
+        while bounds.len() > 2 {
+            tmp.clear();
+            tmp.reserve(total);
+            bounds_next.clear();
+            bounds_next.push(0);
+            let segs = bounds.len() - 1;
+            let mut s = 0;
+            while s < segs {
+                if s + 1 < segs {
+                    // split_at so the two segment borrows and the write
+                    // target are provably disjoint
+                    let (a, rest) =
+                        out[bounds[s]..bounds[s + 2]].split_at(bounds[s + 1] - bounds[s]);
+                    merge_append(a, rest, tmp);
+                    s += 2;
+                } else {
+                    tmp.extend_from_slice(&out[bounds[s]..bounds[s + 1]]);
+                    s += 1;
+                }
+                bounds_next.push(tmp.len());
+            }
+            std::mem::swap(out, tmp);
+            std::mem::swap(bounds, bounds_next);
+        }
+    }
+
+    /// Verbatim old `RustSort::par_run_sort` body — the pdqsort path.
+    pub fn pdqsort(run: &mut Vec<Elem>) {
+        run.sort_unstable();
+    }
+}
+
+// ---------------------------------------------------------------- inputs
+
+/// One randomized run/bucket input. `key_space` controls duplicate
+/// pressure (1 = all-equal keys); ids repeat every 7 elements so some
+/// *fully equal* elements exist — the hardest case for stability.
+fn random_elems(rng: &mut Rng, n: usize, key_space: u64) -> Vec<Elem> {
+    (0..n)
+        .map(|i| Elem::with_id(rng.below(key_space.max(1)), (i % 7) as u64))
+        .collect()
+}
+
+/// The grid every kernel test sweeps: (len, key_space) covering empty,
+/// 1-element, duplicate-heavy, all-equal, and wide-key cases.
+const CASES: [(usize, u64); 9] = [
+    (0, 1),
+    (1, 1),
+    (1, 1 << 32),
+    (17, 5),
+    (64, 1),
+    (257, 3),
+    (1024, 1 << 32),
+    (1500, 2),
+    (3000, 1 << 16),
+];
+
+// -------------------------------------------------------------- partition
+
+/// New scatter partition (and the pooled `partition_scatter` core it is
+/// built on) vs the verbatim old label-vec kernel: identical buckets,
+/// identical order inside each bucket, for both classifiers, with the
+/// scratch kept warm across every case and splitter count.
+#[test]
+fn scatter_partition_matches_old_label_vec_kernel() {
+    let mut rng = Rng::seeded(0xD1CE, 7);
+    let mut scratch = PartitionScratch::default();
+    for s in [0usize, 1, 3, 7, 31, 127] {
+        for (case, &(n, key_space)) in CASES.iter().enumerate() {
+            let data = random_elems(&mut rng, n, key_space);
+            let mut sample = data.clone();
+            sample.sort();
+            let splitters = pick_splitters(&sample, s);
+            let tree = SplitterTree::new(&splitters);
+            for tie_break in [false, true] {
+                let ctx = format!("s={s} case={case} tb={tie_break}");
+                let old = reference::partition(&data, &tree, tie_break);
+                let new = partition(&data, &tree, tie_break);
+                assert_eq!(old, new, "{ctx}: bucket vecs");
+                let (flat, bounds) = partition_scatter(&data, &tree, tie_break, &mut scratch);
+                assert_eq!(bounds.len(), tree.buckets() + 1, "{ctx}: bounds len");
+                assert_eq!(*bounds.last().unwrap(), data.len(), "{ctx}: bounds total");
+                for (b, w) in bounds.windows(2).enumerate() {
+                    assert_eq!(&flat[w[0]..w[1]], &old[b][..], "{ctx}: segment {b}");
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ merge
+
+/// Loser-tree merge vs the verbatim old cascade: bit-identical output for
+/// every run count 0..=40 — straddling `LOSER_TREE_MIN_RUNS`, so both the
+/// dispatcher's two-finger/cascade branch and the tree branch are hit —
+/// with empty runs, 1-element runs, duplicate-heavy and all-equal keys,
+/// and warm scratches throughout.
+#[test]
+fn loser_tree_merge_matches_old_cascade_bit_for_bit() {
+    let mut rng = Rng::seeded(0xFEED, 11);
+    let mut old_scratch = reference::MergeScratch::default();
+    let mut scratch = MergeScratch::default();
+    let mut tree_scratch = MergeScratch::default();
+    let (mut old_out, mut new_out, mut tree_out) = (Vec::new(), Vec::new(), Vec::new());
+    assert!((0..=40).count() > LOSER_TREE_MIN_RUNS);
+    for k in 0usize..=40 {
+        for &(span, key_space) in &[(9usize, 4u64), (33, 1), (70, 1 << 32)] {
+            let runs: Vec<Vec<Elem>> = (0..k)
+                .map(|i| {
+                    // every 4th run empty, every 7th a single element
+                    let n = if i % 4 == 3 {
+                        0
+                    } else if i % 7 == 6 {
+                        1
+                    } else {
+                        rng.below(span as u64) as usize
+                    };
+                    let mut r = random_elems(&mut rng, n, key_space);
+                    r.sort();
+                    r
+                })
+                .collect();
+            let refs: Vec<&[Elem]> = runs.iter().map(|r| r.as_slice()).collect();
+            let ctx = format!("k={k} span={span} keys={key_space}");
+            reference::multiway_merge_into(&refs, &mut old_out, &mut old_scratch);
+            multiway_merge_into(&refs, &mut new_out, &mut scratch);
+            assert_eq!(old_out, new_out, "{ctx}: dispatcher");
+            loser_tree_merge_into(&refs, &mut tree_out, &mut tree_scratch);
+            assert_eq!(old_out, tree_out, "{ctx}: loser tree");
+            cascade_merge_into(&refs, &mut tree_out, &mut tree_scratch);
+            assert_eq!(old_out, tree_out, "{ctx}: cascade");
+        }
+    }
+}
+
+// ------------------------------------------------------------- local sort
+
+/// Radix local sort vs the verbatim old pdqsort path over the same grid
+/// (plus boundary keys), both cold and with the thread-local radix
+/// scratch warm.
+#[test]
+fn radix_local_sort_matches_old_pdqsort_path() {
+    let mut rng = Rng::seeded(0xBEEF, 3);
+    let mut cases: Vec<Vec<Elem>> = CASES
+        .iter()
+        .map(|&(n, key_space)| random_elems(&mut rng, n, key_space))
+        .collect();
+    // straddle the small-run fallback threshold and the key extremes
+    cases.push(random_elems(&mut rng, RADIX_MIN_RUN - 1, 1 << 24));
+    cases.push(random_elems(&mut rng, RADIX_MIN_RUN, 1 << 24));
+    cases.push(vec![
+        Elem::with_id(u64::MAX, u64::MAX),
+        Elem::with_id(0, 0),
+        Elem::with_id(u64::MAX, 0),
+        Elem::with_id(0, u64::MAX),
+    ]);
+    for _pass in 0..2 {
+        // pass 1 reruns every case with RADIX_TMP warm
+        for (i, case) in cases.iter().enumerate() {
+            let mut old = case.clone();
+            let mut new = case.clone();
+            reference::pdqsort(&mut old);
+            radix_sort_run(&mut new);
+            assert_eq!(old, new, "case {i} (n={})", case.len());
+        }
+    }
+}
+
+// ------------------------------------------------------- full-stack pin
+
+/// Field-by-field byte comparison (floats as raw bits); `wall_ms` is host
+/// wallclock and is the one field exempt by nature.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm");
+    assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: time");
+    assert_eq!(a.stats.messages, b.stats.messages, "{ctx}: messages");
+    assert_eq!(a.stats.words, b.stats.words, "{ctx}: words");
+    assert_eq!(
+        a.stats.local_work.to_bits(),
+        b.stats.local_work.to_bits(),
+        "{ctx}: local_work"
+    );
+    assert_eq!(a.stats.max_mem_elems, b.stats.max_mem_elems, "{ctx}: max_mem_elems");
+    assert_eq!(a.stats.max_degree, b.stats.max_degree, "{ctx}: max_degree");
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed");
+    assert_eq!(a.output_shape, b.output_shape, "{ctx}: output_shape");
+    assert_eq!(a.is_globally_sorted, b.is_globally_sorted, "{ctx}: is_globally_sorted");
+    let (va, vb) = (&a.validation, &b.validation);
+    assert_eq!(va.locally_sorted, vb.locally_sorted, "{ctx}: locally_sorted");
+    assert_eq!(va.globally_sorted, vb.globally_sorted, "{ctx}: globally_sorted");
+    assert_eq!(va.multiset_preserved, vb.multiset_preserved, "{ctx}: multiset");
+    assert_eq!(va.balanced, vb.balanced, "{ctx}: balanced");
+    assert_eq!(va.imbalance.max_load, vb.imbalance.max_load, "{ctx}: max_load");
+    assert_eq!(va.imbalance.min_load, vb.imbalance.min_load, "{ctx}: min_load");
+    assert_eq!(
+        va.imbalance.epsilon.to_bits(),
+        vb.imbalance.epsilon.to_bits(),
+        "{ctx}: imbalance ε"
+    );
+    assert_eq!(a.output, b.output, "{ctx}: output");
+}
+
+/// The backend choice must be invisible in every report field: `RadixSort`
+/// vs `RustSort` across all FIG1 sorters on a (distribution, size) grid —
+/// duplicate annihilation (Zero) and the skew instance (Staggered)
+/// included, since those stress the tie-breaking (key, id) order the
+/// radix kernel must reproduce exactly.
+#[test]
+fn radix_backend_reports_identical_to_pdqsort_across_fig1() {
+    for &dist in &[Distribution::Uniform, Distribution::Zero, Distribution::Staggered] {
+        for m in [1usize, 64] {
+            let cfg = RunConfig::default().with_p(16).with_n_per_pe(m);
+            for alg in Algorithm::FIG1 {
+                let ctx = format!("{alg:?}/{dist:?}/m={m}");
+                let input = generate(&cfg, dist);
+                let mut pdq = Runner::new(cfg.clone()).backend(Box::new(RustSort));
+                let mut radix = Runner::new(cfg.clone()).backend(Box::new(RadixSort));
+                let a = pdq.run_algorithm(alg, input.clone());
+                let b = radix.run_algorithm(alg, input);
+                assert_reports_identical(&a, &b, &ctx);
+            }
+        }
+    }
+}
